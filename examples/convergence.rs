@@ -1,0 +1,255 @@
+//! Theorem 3.4/3.5 reproduction: provable convergence of MSGD-SARA.
+//!
+//! Builds the stochastic optimization setting of the theory directly (no
+//! neural network): an L-smooth quadratic objective over layer-shaped
+//! matrices, with *adversarial* mini-batch noise in the style of GoLore's
+//! [HLH+24b] counterexample — each step a large noise spike lands in a
+//! random rank-1 direction, so the mini-batch gradient's dominant singular
+//! direction is (mostly) noise, not signal:
+//!
+//!   * **Dominant (GaLore)** projects onto the noise direction, discards
+//!     the true descent direction, and stalls — it has no convergence
+//!     guarantee, and here it visibly fails;
+//!   * **SARA** (Theorem 3.4) and **GoLore** (Theorem 3.5) keep every
+//!     direction's inclusion probability `delta > 0`, so E||grad f||^2
+//!     decays at the proven O(1/T + 1/sqrt(T)) rate;
+//!   * the run also verifies **Lemma 3.3** empirically:
+//!     E||(I-PP^T) grad f||^2 <= (1-delta) E||grad f||^2.
+//!
+//! Run: `cargo run --release --example convergence`
+
+use sara::config::SelectorKind;
+use sara::linalg::Matrix;
+use sara::rng::Pcg64;
+use sara::selector::make_selector;
+use sara::util::table::Table;
+
+/// f(X) = 0.5 ||X - X*||_F^2 summed over layers: L-smooth with L = 1,
+/// grad_l f = X_l - X*_l.
+struct Quadratic {
+    targets: Vec<Matrix>,
+}
+
+impl Quadratic {
+    fn grad(&self, xs: &[Matrix]) -> Vec<Matrix> {
+        xs.iter()
+            .zip(&self.targets)
+            .map(|(x, t)| x.sub(t))
+            .collect()
+    }
+
+    fn grad_sq_norm(&self, xs: &[Matrix]) -> f64 {
+        self.grad(xs)
+            .iter()
+            .map(|g| (g.frobenius_norm() as f64).powi(2))
+            .sum()
+    }
+}
+
+/// Adversarial mini-batch noise in the frozen-subspace style of
+/// [HLH+24b]'s counterexample: the noise always lives in a *fixed* r-dim
+/// subspace `U_noise` with singular values larger than the signal's, and
+/// has zero mean (random signs / right factors). Dominant selection then
+/// picks exactly the noise directions at every refresh — the projector
+/// freezes onto a subspace containing **no descent direction** — while any
+/// selector with `delta > 0` inclusion probability still makes progress.
+struct AdversarialNoise {
+    u_noise: Matrix, // m x k, fixed orthonormal
+    spike: f32,
+}
+
+impl AdversarialNoise {
+    fn new(m: usize, k: usize, spike: f32, rng: &mut Pcg64) -> Self {
+        let (q, _) = sara::linalg::qr_thin(&Matrix::randn(m, k, 1.0, rng));
+        Self { u_noise: q, spike }
+    }
+
+    fn apply(&self, g: &Matrix, rng: &mut Pcg64) -> Matrix {
+        let k = self.u_noise.cols;
+        // zero-mean: random unit right-factors with random signs
+        let mut coeff = Matrix::randn(k, g.cols, 1.0, rng);
+        for row in 0..k {
+            let r = coeff.row_mut(row);
+            let norm: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+            let s = self.spike / norm;
+            for v in r.iter_mut() {
+                *v *= s;
+            }
+        }
+        let mut out = g.clone();
+        out.add_assign(&self.u_noise.matmul(&coeff));
+        out
+    }
+}
+
+struct RunOut {
+    grad_norms: Vec<f64>, // E||grad f||^2 at probe points
+    lemma_ratio: f64,     // mean ||(I-PP^T)grad||^2 / ||grad||^2
+}
+
+fn run_msgd(
+    selector_kind: Option<SelectorKind>, // None = full-rank MSGD
+    seed: u64,
+    steps: usize,
+    tau: usize,
+) -> RunOut {
+    let (m, n, layers, r) = (32usize, 64usize, 4usize, 8usize);
+    let mut rng = Pcg64::new(seed);
+    let problem = Quadratic {
+        targets: (0..layers)
+            .map(|_| Matrix::randn(m, n, 1.0, &mut rng))
+            .collect(),
+    };
+    let mut xs: Vec<Matrix> = (0..layers).map(|_| Matrix::zeros(m, n)).collect();
+    // theory hyperparameters (Theorem 3.4 flavor, scaled to this problem)
+    let beta1 = 0.3f32; // fresh-gradient mixing rate
+    let eta = 0.05f32;
+    // noise singular values (25) exceed the signal's top singular value
+    // (~sqrt(m)+sqrt(n) ~ 13.7), so dominant selection locks onto noise
+    let noise: Vec<AdversarialNoise> = (0..layers)
+        .map(|_| AdversarialNoise::new(m, r, 25.0, &mut rng))
+        .collect();
+
+    let mut selectors: Vec<_> = (0..layers)
+        .map(|l| selector_kind.map(|k| make_selector(k, seed, l)))
+        .collect();
+    let mut projectors: Vec<Option<Matrix>> = vec![None; layers];
+    let mut momenta: Vec<Matrix> = (0..layers).map(|_| Matrix::zeros(r, n)).collect();
+    let mut full_momenta: Vec<Matrix> =
+        (0..layers).map(|_| Matrix::zeros(m, n)).collect();
+
+    let mut grad_norms = Vec::new();
+    let mut lemma_num = 0.0f64;
+    let mut lemma_den = 0.0f64;
+
+    for t in 0..steps {
+        if t % (steps / 20).max(1) == 0 {
+            grad_norms.push(problem.grad_sq_norm(&xs));
+        }
+        let grads = problem.grad(&xs);
+        for l in 0..layers {
+            let g_noisy = noise[l].apply(&grads[l], &mut rng);
+            match &mut selectors[l] {
+                Some(sel) => {
+                    if t % tau == 0 {
+                        let p_new = sel.select(&g_noisy, r);
+                        if let Some(p_old) = &projectors[l] {
+                            // momentum re-projection (Lemma A.3 setting)
+                            let c = p_new.t_matmul(p_old);
+                            momenta[l] = c.matmul(&momenta[l]);
+                        }
+                        projectors[l] = Some(p_new);
+                    }
+                    let p = projectors[l].as_ref().unwrap();
+                    // Lemma 3.3 probe on the TRUE gradient
+                    let proj = p.matmul(&p.t_matmul(&grads[l]));
+                    let resid = grads[l].sub(&proj);
+                    lemma_num += (resid.frobenius_norm() as f64).powi(2);
+                    lemma_den += (grads[l].frobenius_norm() as f64).powi(2);
+                    // projected MSGD step
+                    let rg = p.t_matmul(&g_noisy);
+                    for (mv, rv) in momenta[l].data.iter_mut().zip(&rg.data) {
+                        *mv = (1.0 - beta1) * *mv + beta1 * rv;
+                    }
+                    let upd = p.matmul(&momenta[l]);
+                    xs[l].add_scaled(&upd, -eta);
+                }
+                None => {
+                    for (mv, gv) in full_momenta[l].data.iter_mut().zip(&g_noisy.data)
+                    {
+                        *mv = (1.0 - beta1) * *mv + beta1 * gv;
+                    }
+                    xs[l].add_scaled(&full_momenta[l], -eta);
+                }
+            }
+        }
+    }
+    grad_norms.push(problem.grad_sq_norm(&xs));
+    RunOut {
+        grad_norms,
+        lemma_ratio: if lemma_den > 0.0 { lemma_num / lemma_den } else { 0.0 },
+    }
+}
+
+fn main() {
+    let steps = 4000;
+    let tau = 50;
+    println!("MSGD convergence under adversarial fixed-subspace gradient noise");
+    println!("(Theorem 3.4/3.5 setting; m=32 n=64 layers=4 r=8 tau={tau};");
+    println!(" constant step size => convergence to the O(eta*sigma^2) noise ball)\n");
+
+    let methods: Vec<(&str, Option<SelectorKind>)> = vec![
+        ("MSGD-GaLore (dominant)", Some(SelectorKind::Dominant)),
+        ("MSGD-SARA", Some(SelectorKind::Sara)),
+        ("MSGD-GoLore", Some(SelectorKind::GoLore)),
+        ("full-rank MSGD", None),
+    ];
+
+    let mut table = Table::new(&[
+        "method", "||grad||^2 @0", "@25%", "@50%", "@100%", "Lemma3.3 ratio",
+    ]);
+    let mut finals = Vec::new();
+    for (label, kind) in &methods {
+        // average over 3 seeds for stable expectations
+        let mut acc: Option<Vec<f64>> = None;
+        let mut lemma = 0.0;
+        let seeds = 3u64;
+        for s in 0..seeds {
+            let out = run_msgd(*kind, 11 + s, steps, tau);
+            lemma += out.lemma_ratio / seeds as f64;
+            acc = Some(match acc {
+                None => out.grad_norms,
+                Some(mut a) => {
+                    for (x, y) in a.iter_mut().zip(&out.grad_norms) {
+                        *x += y;
+                    }
+                    a
+                }
+            });
+        }
+        let series: Vec<f64> =
+            acc.unwrap().iter().map(|x| x / seeds as f64).collect();
+        let q = series.len() - 1;
+        table.row(&[
+            label.to_string(),
+            format!("{:.1}", series[0]),
+            format!("{:.2}", series[q / 4]),
+            format!("{:.3}", series[q / 2]),
+            format!("{:.4}", series[q]),
+            if kind.is_some() { format!("{lemma:.3}") } else { "-".into() },
+        ]);
+        finals.push((label.to_string(), series[q], series[0]));
+    }
+    table.print();
+
+    println!("\nchecks:");
+    let get = |name: &str| finals.iter().find(|(l, _, _)| l.contains(name)).unwrap();
+    let (_, sara_f, sara_0) = get("SARA");
+    let (_, golore_f, _) = get("GoLore");
+    let (_, galore_f, _) = get("GaLore");
+    let (_, full_f, _) = get("full-rank");
+    let ok1 = *sara_f < sara_0 * 0.1;
+    let ok2 = (sara_f / golore_f).max(golore_f / sara_f) < 10.0;
+    let ok3 = *galore_f > sara_f * 3.0;
+    let ok4 = *sara_f < full_f * 1.5;
+    println!(
+        "  [{}] SARA converges to the noise ball (||grad||^2 drops >10x)",
+        if ok1 { "ok" } else { "FAIL" }
+    );
+    println!(
+        "  [{}] SARA ~ GoLore rate (Theorem 3.4 vs 3.5, same order)",
+        if ok2 { "ok" } else { "FAIL" }
+    );
+    println!(
+        "  [{}] dominant selection stalls under adversarial noise (GaLore \
+         has no guarantee)",
+        if ok3 { "ok" } else { "FAIL" }
+    );
+    println!(
+        "  [{}] SARA's noise ball matches full-rank MSGD's (no extra bias)",
+        if ok4 { "ok" } else { "FAIL" }
+    );
+    if !(ok1 && ok2 && ok3 && ok4) {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,121 @@
+"""AOT compile path: lower L2/L1 jax functions to HLO text + JSON manifest.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model config <name>:
+    artifacts/<name>.train.hlo.txt     (params..., tokens) -> (loss, grads...)
+    artifacts/<name>.eval.hlo.txt      (params..., tokens) -> (loss,)
+    artifacts/<name>.manifest.json     parameter order/shapes/kinds + config
+plus the standalone fused-optimizer artifact used by the Rust `fused-hlo`
+update path and runtime benches:
+    artifacts/galore_step.<r>x<m>x<n>.hlo.txt + .manifest.json
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS
+from .kernels.adam_update import galore_step
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, out_dir: str, use_pallas: bool = True) -> dict:
+    cfg = CONFIGS[name]
+    args = model.example_args(cfg)
+
+    train_text = to_hlo_text(
+        jax.jit(model.train_step(cfg, use_pallas)).lower(*args))
+    eval_text = to_hlo_text(
+        jax.jit(model.eval_step(cfg, use_pallas)).lower(*args))
+
+    manifest = {
+        "name": cfg.name,
+        "config": cfg.to_dict(),
+        "use_pallas": use_pallas,
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "init_std": s.init_std,
+                "kind": s.kind,
+            }
+            for s in model.param_specs(cfg)
+        ],
+        "tokens_shape": [cfg.batch, cfg.seq_len + 1],
+        "train_outputs": ["loss"] + [s.name for s in model.param_specs(cfg)],
+        "eval_outputs": ["loss"],
+    }
+
+    paths = {}
+    for kind, text in (("train", train_text), ("eval", eval_text)):
+        path = os.path.join(out_dir, f"{name}.{kind}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        paths[kind] = path
+    mpath = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {name}: train={len(train_text)}B eval={len(eval_text)}B "
+          f"params={len(manifest['params'])}")
+    return manifest
+
+
+def lower_galore_step(out_dir: str, rank: int, m: int, n: int) -> None:
+    """Standalone fused GaLore-Adam inner step (L1 adam_update kernel)."""
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((rank, n), f32),  # M
+        jax.ShapeDtypeStruct((rank, n), f32),  # V
+        jax.ShapeDtypeStruct((m, n), f32),     # G
+        jax.ShapeDtypeStruct((m, rank), f32),  # P
+        jax.ShapeDtypeStruct((), f32),         # t
+    )
+    text = to_hlo_text(jax.jit(galore_step).lower(*args))
+    stem = f"galore_step.{rank}x{m}x{n}"
+    with open(os.path.join(out_dir, f"{stem}.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, f"{stem}.manifest.json"), "w") as f:
+        json.dump({"rank": rank, "m": m, "n": n,
+                   "inputs": ["M", "V", "G", "P", "t"],
+                   "outputs": ["M2", "V2", "update"]}, f, indent=1)
+    print(f"[aot] {stem}: {len(text)}B")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=["test", "tiny", "small"],
+                    help=f"subset of {sorted(CONFIGS)}")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with pure-jnp oracles instead of L1 kernels")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in args.models:
+        lower_model(name, args.out_dir, use_pallas=not args.no_pallas)
+    # fused optimizer artifact at the `small` model's q_proj shape
+    cfg = CONFIGS["small"]
+    lower_galore_step(args.out_dir, rank=min(64, cfg.dim // 2),
+                      m=cfg.dim, n=cfg.dim)
+
+
+if __name__ == "__main__":
+    main()

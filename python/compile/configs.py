@@ -1,0 +1,68 @@
+"""Model configurations for the LLaMA family used in the SARA reproduction.
+
+The paper (Table 1/2) pretrains LLaMA 60M/130M/350M/1.1B on 8xA40. Our
+substrate is CPU-PJRT, so the *recorded* experiments run the reduced
+`tiny`/`small`/`medium` members of the same architecture family
+(RMSNorm + SwiGLU + RoPE, untied embedding/head, no biases), while the
+exact `llama60m` config from [ZZC+24] remains buildable for artifact
+generation. See DESIGN.md section 2 (substitutions).
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    n_blocks: int
+    n_heads: int
+    ffn_dim: int
+    seq_len: int
+    batch: int  # micro-batch baked into the AOT artifact
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.n_heads == 0
+        return self.dim // self.n_heads
+
+    def n_params(self) -> int:
+        d, f, v = self.dim, self.ffn_dim, self.vocab
+        per_block = 4 * d * d + 3 * d * f + 2 * d  # attn + mlp + 2 norms
+        return v * d * 2 + self.n_blocks * per_block + d  # embed+head+final norm
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["n_params"] = self.n_params()
+        return d
+
+
+def llama_ffn(dim: int, mult: int = 4) -> int:
+    """LLaMA-style SwiGLU hidden size: 2/3 * mult * dim rounded to 32."""
+    h = int(2 * mult * dim / 3)
+    return ((h + 31) // 32) * 32
+
+
+CONFIGS = {
+    # cargo-test artifact: small enough that every CI run compiles+executes it
+    "test": ModelConfig("test", vocab=256, dim=64, n_blocks=2, n_heads=4,
+                        ffn_dim=llama_ffn(64), seq_len=32, batch=4),
+    # ~2M params: figure-class experiments (F2/F3/F4 probes)
+    "tiny": ModelConfig("tiny", vocab=2048, dim=128, n_blocks=4, n_heads=4,
+                        ffn_dim=llama_ffn(128), seq_len=64, batch=8),
+    # ~11M params: Table 1 column "60M" stand-in
+    "small": ModelConfig("small", vocab=4096, dim=256, n_blocks=6, n_heads=8,
+                         ffn_dim=llama_ffn(256), seq_len=128, batch=8),
+    # ~29M params: Table 1 column "130M/350M" stand-in
+    "medium": ModelConfig("medium", vocab=8192, dim=384, n_blocks=8, n_heads=8,
+                          ffn_dim=llama_ffn(384), seq_len=128, batch=8),
+    # exact LLaMA-60M architecture from GaLore [ZZC+24] (buildable, not run in CI)
+    "llama60m": ModelConfig("llama60m", vocab=32000, dim=512, n_blocks=8,
+                            n_heads=8, ffn_dim=1376, seq_len=256, batch=4),
+    # ~124M params: the e2e "100M-class" driver config
+    "large100m": ModelConfig("large100m", vocab=32000, dim=768, n_blocks=12,
+                             n_heads=12, ffn_dim=llama_ffn(768), seq_len=256,
+                             batch=2),
+}

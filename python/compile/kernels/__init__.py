@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for the paper's compute hot-spots + pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .adam_update import adam_update, galore_step  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

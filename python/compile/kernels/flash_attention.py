@@ -1,0 +1,240 @@
+"""L1 Pallas kernel: blocked causal flash attention (forward + backward).
+
+Hardware adaptation (DESIGN.md section 7): the paper trains on A40 GPUs; we
+re-think the hot-spot for the TPU model instead of porting CUDA idioms.
+Threadblock tiling over shared memory becomes a ``BlockSpec`` HBM->VMEM
+schedule: the grid iterates (batch*heads, q-blocks), each program holds one
+``block_q x head_dim`` query tile resident in VMEM and streams
+``block_k x head_dim`` key/value tiles, keeping the running online-softmax
+statistics (m, l) in VMEM scratch and feeding MXU-shaped matmuls
+(``q_tile @ k_tile^T`` then ``p_tile @ v_tile``) with f32 accumulation.
+
+Runs under ``interpret=True`` (CPU-PJRT cannot execute Mosaic custom-calls);
+the TPU VMEM/MXU estimate lives in DESIGN.md section 8.
+
+The backward recomputes attention probabilities blockwise (flash-attention
+style) instead of materializing the S x S matrix, with separate dq and dkv
+kernels so each has a clean one-axis-parallel grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_k, seq_len):
+    """One (batch*head, q-block) program: online-softmax over k blocks."""
+    block_q, head_dim = q_ref.shape
+    start_q = pl.program_id(1) * block_q
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(start_k, carry):
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (pl.dslice(start_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(start_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [block_q, block_k] on the MXU
+        # causal mask within the tile
+        span_q = start_q + jax.lax.iota(jnp.int32, block_q)
+        span_k = start_k + jax.lax.iota(jnp.int32, block_k)
+        mask = span_q[:, None] >= span_k[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    # only k blocks at or before this q block contribute (causal)
+    num_k = (start_q + block_q + block_k - 1) // block_k
+    num_k = jnp.minimum(num_k, seq_len // block_k)
+    acc, m_i, l_i = jax.lax.fori_loop(
+        0, num_k, lambda i, c: body(i * block_k, c), (acc0, m0, l0))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m_i + jnp.log(l_i)).astype(jnp.float32)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               *, scale, block_k, seq_len):
+    block_q, head_dim = q_ref.shape
+    start_q = pl.program_id(1) * block_q
+    q = q_ref[...].astype(jnp.float32) * scale
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+
+    def body(start_k, dq):
+        k = pl.load(k_ref, (pl.dslice(start_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(start_k, block_k), slice(None)))
+        kf = k.astype(jnp.float32)
+        s = q @ kf.T
+        span_q = start_q + jax.lax.iota(jnp.int32, block_q)
+        span_k = start_k + jax.lax.iota(jnp.int32, block_k)
+        mask = span_q[:, None] >= span_k[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = do @ v.astype(jnp.float32).T
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ kf
+
+    num_k = (start_q + block_q + block_k - 1) // block_k
+    num_k = jnp.minimum(num_k, seq_len // block_k)
+    dq = jax.lax.fori_loop(
+        0, num_k, lambda i, a: body(i * block_k, a),
+        jnp.zeros((block_q, head_dim), jnp.float32))
+    dq_ref[...] = (dq * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, scale, block_q, seq_len):
+    block_k, head_dim = k_ref.shape
+    start_k = pl.program_id(1) * block_k
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    def body(start_q, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (pl.dslice(start_q, block_q), slice(None)))
+        do = pl.load(do_ref, (pl.dslice(start_q, block_q), slice(None)))
+        lse = pl.load(lse_ref, (pl.dslice(start_q, block_q),))
+        delta = pl.load(delta_ref, (pl.dslice(start_q, block_q),))
+        qf = q.astype(jnp.float32) * scale
+        s = qf @ k.T
+        span_q = start_q + jax.lax.iota(jnp.int32, block_q)
+        span_k = start_k + jax.lax.iota(jnp.int32, block_k)
+        mask = span_q[:, None] >= span_k[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dof = do.astype(jnp.float32)
+        dv = dv + p.T @ dof
+        dp = dof @ v.T
+        ds = p * (dp - delta[:, None])
+        dk = dk + ds.T @ qf
+        return dk, dv
+
+    # q blocks strictly before start_k contribute nothing (causal)
+    first_q = start_k // block_q
+    num_q = seq_len // block_q
+    dk0 = jnp.zeros((block_k, head_dim), jnp.float32)
+    dv0 = jnp.zeros((block_k, head_dim), jnp.float32)
+    dk, dv = jax.lax.fori_loop(
+        first_q, num_q, lambda i, c: body(i * block_q, c), (dk0, dv0))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _pick_block(seq_len: int, want: int) -> int:
+    b = min(want, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, scale=None, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K):
+    """Causal flash attention. q,k,v: [B, H, S, D] -> [B, H, S, D]."""
+    o, _ = _flash_fwd(q, k, v, scale, block_q, block_k)
+    return o
+
+
+def _resolve(q, scale, block_q, block_k):
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    return scale, _pick_block(s, block_q), _pick_block(s, block_k)
+
+
+def _flash_fwd(q, k, v, scale, block_q, block_k):
+    b, h, s, d = q.shape
+    scale, bq, bk = _resolve(q, scale, block_q, block_k)
+    grid = (b * h, s // bq)
+    qs = q.reshape(b * h, s, d)
+    ks = k.reshape(b * h, s, d)
+    vs = v.reshape(b * h, s, d)
+    kernel = functools.partial(_fwd_kernel, scale=scale, block_k=bk, seq_len=s)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bq), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, s), jnp.float32),
+        ],
+        interpret=True,
+    )(qs, ks, vs)
+    return o.reshape(b, h, s, d), (q, k, v, o.reshape(b, h, s, d), lse)
+
+
+def _attn_fwd_rule(q, k, v, scale, block_q, block_k):
+    o, res = _flash_fwd(q, k, v, scale, block_q, block_k)
+    return o, res
+
+
+def _attn_bwd_rule(scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    b, h, s, d = q.shape
+    scale, bq, bk = _resolve(q, scale, block_q, block_k)
+    # delta_i = sum_d o_i * do_i  (rowwise), standard flash-attn backward
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32),
+                    axis=-1).reshape(b * h, s)
+    qs, ks, vs = (t.reshape(b * h, s, d) for t in (q, k, v))
+    dos = do.reshape(b * h, s, d)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, block_k=bk, seq_len=s),
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bq), lambda i, j: (i, j)),
+            pl.BlockSpec((None, bq), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qs, ks, vs, dos, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, block_q=bq, seq_len=s),
+        grid=(b * h, s // bk),
+        in_specs=[
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        ],
+        interpret=True,
+    )(qs, ks, vs, dos, lse, delta)
+
+    return (dq.reshape(b, h, s, d), dk.reshape(b, h, s, d),
+            dv.reshape(b, h, s, d))
+
+
+flash_attention.defvjp(_attn_fwd_rule, _attn_bwd_rule)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+pytest (python/tests/test_kernels.py) asserts each Pallas kernel matches the
+oracle here under hypothesis-driven shape/dtype sweeps. These are also the
+reference implementations the L2 model can fall back to (``use_pallas=False``)
+so model-level equivalence tests can isolate kernel bugs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     scale: float | None = None) -> jax.Array:
+    """Causal softmax attention. q,k,v: [B, H, S, D] -> [B, H, S, D]."""
+    s = q.shape[-2]
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+
+
+def adam_update(m, v, r, t, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One fused (projected-)Adam moment update on the low-rank gradient R.
+
+    Returns (m', v', n) where n is the bias-corrected normalized step
+    M_hat / (sqrt(V_hat) + eps); the caller scales by alpha*lr and projects
+    back with P (GaLore-Adam update rule, paper section 2).
+    """
+    m2 = beta1 * m + (1.0 - beta1) * r
+    v2 = beta2 * v + (1.0 - beta2) * r * r
+    mhat = m2 / (1.0 - beta1 ** t)
+    vhat = v2 / (1.0 - beta2 ** t)
+    n = mhat / (jnp.sqrt(vhat) + eps)
+    return m2, v2, n
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA MLP: down( silu(x@gate) * (x@up) )."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def rope(x: jax.Array, base: float = 10000.0) -> jax.Array:
+    """Rotary position embedding applied to [B, H, S, D] (D even)."""
+    b, h, s, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)  # [S, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)

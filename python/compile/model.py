@@ -1,0 +1,157 @@
+"""L2: LLaMA-family transformer in JAX — forward, loss, and grads.
+
+The architecture matches the GaLore/SARA experimental setup [ZZC+24]:
+pre-RMSNorm, multi-head causal attention with RoPE, SwiGLU MLP, untied
+embedding / LM head, no biases anywhere.
+
+Parameters are a *flat, deterministically ordered* list of arrays (the AOT
+interchange requires a stable positional signature; the order is recorded in
+the artifact manifest). ``param_specs(cfg)`` is the single source of truth
+for that order.
+
+``train_step(cfg)`` builds the function that gets AOT-lowered:
+    (params..., tokens) -> (loss, grads...)
+with grads in the same order as params. ``eval_step(cfg)`` lowers loss-only.
+The hot-spots call the L1 Pallas kernels (``use_pallas=True``, the default
+for AOT) or the pure-jnp oracles (used by tests to isolate kernel bugs).
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import flash_attention, rmsnorm
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init_std: float
+    # "matrix" params are eligible for low-rank optimization (2-D weights of
+    # attention/MLP); "dense" (embeddings/head) and "norm" are full-rank.
+    kind: str
+
+
+def param_specs(cfg: ModelConfig) -> list:
+    """The canonical flat parameter order for config ``cfg``."""
+    d, f, v = cfg.dim, cfg.ffn_dim, cfg.vocab
+    std = 0.02
+    # residual-branch output projections get the GPT-2 style depth-scaled init
+    out_std = std / (2 * cfg.n_blocks) ** 0.5
+    specs = [ParamSpec("embed", (v, d), std, "dense")]
+    for b in range(cfg.n_blocks):
+        p = f"blocks.{b}."
+        specs += [
+            ParamSpec(p + "attn_norm", (d,), 0.0, "norm"),
+            ParamSpec(p + "q_proj", (d, d), std, "matrix"),
+            ParamSpec(p + "k_proj", (d, d), std, "matrix"),
+            ParamSpec(p + "v_proj", (d, d), std, "matrix"),
+            ParamSpec(p + "o_proj", (d, d), out_std, "matrix"),
+            ParamSpec(p + "mlp_norm", (d,), 0.0, "norm"),
+            ParamSpec(p + "gate_proj", (d, f), std, "matrix"),
+            ParamSpec(p + "up_proj", (d, f), std, "matrix"),
+            ParamSpec(p + "down_proj", (f, d), out_std, "matrix"),
+        ]
+    specs += [
+        ParamSpec("final_norm", (d,), 0.0, "norm"),
+        ParamSpec("lm_head", (d, v), std, "dense"),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> list:
+    """Gaussian init matching the manifest's init_std (norms init to 1)."""
+    params = []
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.kind == "norm":
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        else:
+            params.append(
+                spec.init_std * jax.random.normal(sub, spec.shape, jnp.float32))
+    return params
+
+
+def _norm(x, w, use_pallas):
+    return rmsnorm(x, w) if use_pallas else kref.rmsnorm(x, w)
+
+
+def _attention(q, k, v, use_pallas):
+    if use_pallas:
+        return flash_attention(q, k, v)
+    return kref.causal_attention(q, k, v)
+
+
+def forward(cfg: ModelConfig, params: list, tokens: jax.Array,
+            use_pallas: bool = True) -> jax.Array:
+    """tokens: [B, S] int32 -> logits [B, S, vocab]."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    embed = nxt()
+    x = embed[tokens]  # [B, S, D]
+    bsz, seq, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    for _ in range(cfg.n_blocks):
+        attn_norm, wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt(), nxt()
+        mlp_norm, wg, wu, wd = nxt(), nxt(), nxt(), nxt()
+        # attention block
+        y = _norm(x, attn_norm, use_pallas)
+        q = (y @ wq).reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+        k = (y @ wk).reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+        v = (y @ wv).reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+        q, k = kref.rope(q), kref.rope(k)
+        o = _attention(q, k, v, use_pallas)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, seq, d)
+        x = x + o @ wo
+        # MLP block
+        y = _norm(x, mlp_norm, use_pallas)
+        x = x + kref.swiglu(y, wg, wu, wd)
+    final_norm, lm_head = nxt(), nxt()
+    x = _norm(x, final_norm, use_pallas)
+    return x @ lm_head
+
+
+def loss_fn(cfg: ModelConfig, params: list, tokens: jax.Array,
+            use_pallas: bool = True) -> jax.Array:
+    """Next-token cross-entropy. tokens: [B, S+1]; mean over B*S positions."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs, use_pallas).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, use_pallas: bool = True):
+    """Returns fn(*params, tokens) -> (loss, *grads) for AOT lowering."""
+
+    def step(*args):
+        params, tokens = list(args[:-1]), args[-1]
+        loss, grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg, use_pallas=use_pallas))(
+                params, tokens)
+        return (loss, *grads)
+
+    return step
+
+
+def eval_step(cfg: ModelConfig, use_pallas: bool = True):
+    """Returns fn(*params, tokens) -> (loss,) for AOT lowering."""
+
+    def step(*args):
+        params, tokens = list(args[:-1]), args[-1]
+        return (loss_fn(cfg, params, tokens, use_pallas=use_pallas),)
+
+    return step
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs matching ``train_step``'s positional signature."""
+    specs = [jax.ShapeDtypeStruct(s.shape, jnp.float32)
+             for s in param_specs(cfg)]
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    return (*specs, tokens)

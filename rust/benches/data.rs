@@ -1,0 +1,59 @@
+//! Bench: data pipeline throughput — synthetic corpus generation, batch
+//! fill, streaming loader, tokenizer. The loader must comfortably outrun
+//! the PJRT step time so data is never the training bottleneck.
+
+use sara::data::{CorpusProfile, StreamingLoader, SyntheticCorpus, Tokenizer};
+use sara::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    section("token synthesis");
+    let mut c4 = SyntheticCorpus::new(CorpusProfile::C4, 32000, 0, 0);
+    let stats = b.run("c4 next_token x 4096", || {
+        let mut acc = 0u32;
+        for _ in 0..4096 {
+            acc = acc.wrapping_add(c4.next_token());
+        }
+        acc
+    });
+    println!(
+        "    -> {:.1} M tokens/s",
+        stats.throughput(4096.0) / 1e6
+    );
+    let mut slim = SyntheticCorpus::new(CorpusProfile::SlimPajama, 32000, 0, 0);
+    b.run("slimpajama next_token x 4096", || {
+        let mut acc = 0u32;
+        for _ in 0..4096 {
+            acc = acc.wrapping_add(slim.next_token());
+        }
+        acc
+    });
+
+    section("batch fill (GaLore hyperparams: batch 512 x seq 512... scaled)");
+    let mut corpus = SyntheticCorpus::new(CorpusProfile::C4, 32000, 1, 0);
+    b.run("fill_batch 8x129 (tiny cfg)", || corpus.fill_batch(8, 129));
+    b.run("fill_batch 64x513", || corpus.fill_batch(64, 513));
+
+    section("streaming loader (prefetch hides synthesis latency)");
+    let loader = StreamingLoader::new(CorpusProfile::C4, 32000, 2, 0, 8, 129, 8);
+    // warm the queue
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let stats = b.run("next_batch 8x129 (prefetched)", || loader.next_batch());
+    println!(
+        "    -> {:.2} M tokens/s through the queue",
+        stats.throughput(8.0 * 129.0) / 1e6
+    );
+
+    section("tokenizer (text ingestion path)");
+    let text = "the quick brown fox jumps over the lazy dog. ".repeat(2000);
+    let stats = b.run("build vocab from ~90KB", || Tokenizer::build(&text, 4096));
+    let tok = Tokenizer::build(&text, 4096);
+    let stats2 = b.run("encode ~90KB", || tok.encode(&text));
+    let words = text.split_whitespace().count() as f64;
+    println!(
+        "    -> build {:.1} MB/s, encode {:.2} M words/s",
+        text.len() as f64 / stats.median.as_secs_f64() / 1e6,
+        words / stats2.median.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,81 @@
+//! Bench: the per-step L3 optimizer hot path at the paper's 60M-config
+//! layer shapes (512x512 attention / 512x1376 MLP, rank 128):
+//! project R = P^T G, inner Adam update, un-project alpha * P N, and the
+//! full ParamOptimizer step for each wrapper/selector/inner combination.
+
+use sara::config::{InnerOpt, OptimConfig, SelectorKind, WrapperKind};
+use sara::linalg::Matrix;
+use sara::optim::{make_state, ParamOptimizer};
+use sara::rng::Pcg64;
+use sara::selector::make_selector;
+use sara::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Pcg64::new(0);
+    let (m, n, r) = (512usize, 1376usize, 128usize);
+
+    section(format!("projection pipeline pieces ({m}x{n}, rank {r})").as_str());
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    let p = {
+        let (q, _) = sara::linalg::qr_thin(&Matrix::randn(m, r, 1.0, &mut rng));
+        q
+    };
+    let rproj = p.t_matmul(&g);
+    b.run("project      R = P^T G", || p.t_matmul(&g));
+    b.run("un-project   U = P N", || p.matmul(&rproj));
+    let cfg = OptimConfig::default();
+    let mut adam = make_state(InnerOpt::Adam, r, n, &cfg);
+    let mut t = 0usize;
+    b.run("inner adam   N = adam(R)", || {
+        t += 1;
+        adam.direction(&rproj, t)
+    });
+
+    section("full ParamOptimizer.step per method (tau=200 amortized)");
+    for (wrapper, selector, inner, label) in [
+        (WrapperKind::GaLore, SelectorKind::Dominant, InnerOpt::Adam,
+         "galore-dominant-adam"),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::Adam,
+         "galore-sara-adam"),
+        (WrapperKind::GaLore, SelectorKind::GoLore, InnerOpt::Adam,
+         "golore-adam"),
+        (WrapperKind::Fira, SelectorKind::Sara, InnerOpt::Adam,
+         "fira-sara-adam"),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::Adafactor,
+         "galore-sara-adafactor"),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::Adam8bit,
+         "galore-sara-adam8bit"),
+    ] {
+        let mut cfg = OptimConfig::default();
+        cfg.wrapper = wrapper;
+        cfg.selector = selector;
+        cfg.inner = inner;
+        cfg.rank = r;
+        cfg.update_period = 200;
+        let sel = make_selector(selector, 0, 0);
+        let mut opt = ParamOptimizer::low_rank(m, n, &cfg, sel);
+        let mut grng = Pcg64::new(3);
+        let g = Matrix::randn(m, n, 1.0, &mut grng);
+        b.run(label, || opt.step(&g, 0.01));
+    }
+
+    section("full-rank Adam reference (what GaLore's memory saving costs)");
+    {
+        let cfg = OptimConfig::default();
+        let mut opt = ParamOptimizer::full(m, n, &cfg);
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        b.run("fullrank-adam", || opt.step(&g, 0.01));
+    }
+
+    section("selector refresh cost (amortized over tau=200 steps)");
+    for kind in [SelectorKind::Dominant, SelectorKind::Sara, SelectorKind::GoLore] {
+        let mut sel = make_selector(kind, 0, 0);
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let stats = b.run(&format!("refresh {kind:?}"), || sel.select(&g, r));
+        println!(
+            "    -> amortized per step @ tau=200: {:.2} µs",
+            stats.median.as_secs_f64() * 1e6 / 200.0
+        );
+    }
+}

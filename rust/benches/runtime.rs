@@ -1,0 +1,64 @@
+//! Bench: PJRT runtime — artifact compile time, train/eval execute latency,
+//! and steps/s throughput of the full Trainer loop (the end-to-end number
+//! every table's wallclock hangs off). Requires `make artifacts`.
+
+use sara::config::{RunConfig, SelectorKind, WrapperKind};
+use sara::runtime::Engine;
+use sara::train::{Probes, Trainer};
+use sara::util::bench::{section, Bencher};
+use std::time::Instant;
+
+fn main() {
+    if !std::path::Path::new("artifacts/test.train.hlo.txt").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::quick();
+
+    section("artifact load + compile");
+    let t0 = Instant::now();
+    let engine = Engine::load("artifacts", "test").unwrap();
+    println!("load+compile test model: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    section("PJRT execute latency (test model)");
+    let params = engine.init_params(0);
+    let tokens: Vec<i32> = (0..engine.tokens_per_batch())
+        .map(|i| (i % engine.manifest.vocab) as i32)
+        .collect();
+    b.run("train_step (fwd+bwd)", || {
+        engine.train_step(&params, &tokens).unwrap()
+    });
+    b.run("eval_loss  (fwd)", || {
+        engine.eval_loss(&params, &tokens).unwrap()
+    });
+
+    section("end-to-end Trainer steps/s per method (test model, 20 steps)");
+    let mut engine = Some(engine);
+    for (w, s, label) in [
+        (WrapperKind::FullRank, SelectorKind::Dominant, "full-rank adam"),
+        (WrapperKind::GaLore, SelectorKind::Dominant, "galore-adam"),
+        (WrapperKind::GaLore, SelectorKind::Sara, "galore-sara-adam"),
+        (WrapperKind::Fira, SelectorKind::Sara, "fira-sara-adam"),
+    ] {
+        let mut cfg = RunConfig::default();
+        cfg.model = "test".into();
+        cfg.total_steps = 20;
+        cfg.warmup_steps = 2;
+        cfg.optim.wrapper = w;
+        cfg.optim.selector = s;
+        cfg.optim.rank = 8;
+        cfg.optim.update_period = 10;
+        let mut trainer = Trainer::new(engine.take().unwrap(), cfg).unwrap();
+        let t0 = Instant::now();
+        let res = trainer.train(&mut Probes::default()).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let toks = 20.0 * trainer.engine.tokens_per_batch() as f64;
+        println!(
+            "{label:<20} {:>6.2} steps/s  {:>9.0} tok/s  (execute {:.0}% of wall)",
+            20.0 / secs,
+            toks / secs,
+            100.0 * res.execute_secs / res.wall_secs.max(1e-9),
+        );
+        engine = Some(trainer.into_engine());
+    }
+}

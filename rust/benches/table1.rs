@@ -1,0 +1,61 @@
+//! Bench: Table 1 end-to-end — wallclock of one full (scaled-down) Table-1
+//! row per method on the `test` model, i.e. the cost of regenerating the
+//! paper's main table, plus the optimizer-state memory each method holds
+//! (the paper's motivating axis). Requires `make artifacts`.
+//!
+//! The PPL-producing run itself is `sara exp table1` (see Makefile `exp`);
+//! this bench measures its cost envelope so scale-up is predictable.
+
+use sara::config::{InnerOpt, RunConfig, SelectorKind, WrapperKind};
+use sara::runtime::Engine;
+use sara::train::{Probes, Trainer};
+use std::time::Instant;
+
+fn main() {
+    if !std::path::Path::new("artifacts/test.train.hlo.txt").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let steps = 25usize;
+    println!("Table-1 row cost on `test` model ({steps} steps each):\n");
+    println!(
+        "{:<28} {:>10} {:>12} {:>14} {:>12}",
+        "method", "secs", "steps/s", "opt-state KiB", "final loss"
+    );
+
+    let mut engine = Some(Engine::load("artifacts", "test").unwrap());
+    let methods: Vec<(WrapperKind, SelectorKind, InnerOpt)> = vec![
+        (WrapperKind::FullRank, SelectorKind::Dominant, InnerOpt::Adam),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::Adam),
+        (WrapperKind::GaLore, SelectorKind::Dominant, InnerOpt::Adam),
+        (WrapperKind::Fira, SelectorKind::Sara, InnerOpt::Adam),
+        (WrapperKind::Fira, SelectorKind::Dominant, InnerOpt::Adam),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::Adafactor),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::AdamMini),
+        (WrapperKind::GaLore, SelectorKind::Sara, InnerOpt::Adam8bit),
+    ];
+    for (w, s, i) in methods {
+        let mut cfg = RunConfig::default();
+        cfg.model = "test".into();
+        cfg.total_steps = steps;
+        cfg.warmup_steps = 3;
+        cfg.optim.wrapper = w;
+        cfg.optim.selector = s;
+        cfg.optim.inner = i;
+        cfg.optim.rank = 8;
+        cfg.optim.update_period = 10;
+        cfg.eval_batches = 2;
+        let label = cfg.method_label();
+        let mut trainer = Trainer::new(engine.take().unwrap(), cfg).unwrap();
+        let t0 = Instant::now();
+        let res = trainer.train(&mut Probes::default()).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:<28} {secs:>10.2} {:>12.2} {:>14.1} {:>12.4}",
+            steps as f64 / secs,
+            res.optimizer_state_bytes as f64 / 1024.0,
+            res.losses.last().copied().unwrap_or(f32::NAN),
+        );
+        engine = Some(trainer.into_engine());
+    }
+}

@@ -1,0 +1,346 @@
+//! Run-configuration system: typed configs + a TOML-subset loader + presets.
+//!
+//! Every experiment is described by a [`RunConfig`] which can come from
+//! (a) a named preset (`RunConfig::preset("table1-small-galore-sara")`),
+//! (b) a `.toml` file via [`toml::TomlDoc`], or (c) CLI overrides applied
+//! on top of either. The experiment harness records the fully-resolved
+//! config next to its results so runs are reproducible.
+
+pub mod toml;
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// Which low-rank wrapper (or none) to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WrapperKind {
+    /// Full-rank: inner optimizer applied directly to every gradient.
+    FullRank,
+    /// GaLore: project -> inner optimizer -> project back.
+    GaLore,
+    /// Fira: GaLore + scaled residual term.
+    Fira,
+}
+
+/// Inner (stateful) optimizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InnerOpt {
+    Adam,
+    Adafactor,
+    AdamMini,
+    Adam8bit,
+    Msgd,
+}
+
+/// Subspace selection strategy (the paper's section 3 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectorKind {
+    /// Dominant subspace: top-r left singular vectors (GaLore default).
+    Dominant,
+    /// SARA: importance sampling of singular vectors (Algorithm 2).
+    Sara,
+    /// GoLore: orthonormalized Gaussian random projection.
+    GoLore,
+    /// Online PCA baseline [LLCql24].
+    OnlinePca,
+}
+
+/// Optimizer hyperparameters (paper Appendix B defaults).
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    pub wrapper: WrapperKind,
+    pub inner: InnerOpt,
+    pub selector: SelectorKind,
+    pub rank: usize,
+    /// Subspace refresh period tau (iterations).
+    pub update_period: usize,
+    /// GaLore scale factor alpha.
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Re-project the first moment into the new subspace on refresh
+    /// (the variant the convergence analysis assumes).
+    pub momentum_reproject: bool,
+    /// Fira residual limiter threshold.
+    pub fira_limiter: f32,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        Self {
+            wrapper: WrapperKind::GaLore,
+            inner: InnerOpt::Adam,
+            selector: SelectorKind::Sara,
+            rank: 32,
+            update_period: 200,
+            alpha: 0.25,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            momentum_reproject: true,
+            fira_limiter: 1.01,
+        }
+    }
+}
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Model artifact name (matches artifacts/<model>.train.hlo.txt).
+    pub model: String,
+    pub optim: OptimConfig,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// Cosine floor as a fraction of peak LR.
+    pub min_lr_ratio: f64,
+    pub grad_clip: f64,
+    pub seed: u64,
+    /// Dataset generator profile ("c4" | "slimpajama").
+    pub dataset: String,
+    /// Number of simulated data-parallel workers.
+    pub workers: usize,
+    /// Evaluate validation loss every N steps (0 = only at the end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Probe subspace overlap / spectra every N steps (0 = off).
+    pub probe_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            optim: OptimConfig::default(),
+            lr: 0.01,
+            warmup_steps: 100,
+            total_steps: 1000,
+            min_lr_ratio: 0.1,
+            grad_clip: 1.0,
+            seed: 42,
+            dataset: "c4".into(),
+            workers: 1,
+            eval_every: 0,
+            eval_batches: 8,
+            probe_every: 0,
+        }
+    }
+}
+
+pub fn parse_wrapper(s: &str) -> Result<WrapperKind> {
+    Ok(match s {
+        "full" | "fullrank" | "full-rank" => WrapperKind::FullRank,
+        "galore" => WrapperKind::GaLore,
+        "fira" => WrapperKind::Fira,
+        _ => bail!("unknown wrapper '{s}' (full|galore|fira)"),
+    })
+}
+
+pub fn parse_inner(s: &str) -> Result<InnerOpt> {
+    Ok(match s {
+        "adam" => InnerOpt::Adam,
+        "adafactor" => InnerOpt::Adafactor,
+        "adam-mini" | "adammini" => InnerOpt::AdamMini,
+        "adam8bit" | "adam-8bit" => InnerOpt::Adam8bit,
+        "msgd" | "sgdm" => InnerOpt::Msgd,
+        _ => bail!("unknown inner optimizer '{s}'"),
+    })
+}
+
+pub fn parse_selector(s: &str) -> Result<SelectorKind> {
+    Ok(match s {
+        "dominant" | "galore" | "svd" => SelectorKind::Dominant,
+        "sara" => SelectorKind::Sara,
+        "golore" | "random" => SelectorKind::GoLore,
+        "online-pca" | "onlinepca" | "pca" => SelectorKind::OnlinePca,
+        _ => bail!("unknown selector '{s}' (dominant|sara|golore|online-pca)"),
+    })
+}
+
+impl RunConfig {
+    /// Human-readable method label matching the paper's table rows,
+    /// e.g. "GaLore-SARA-Adam" or "Full-Rank Adam".
+    pub fn method_label(&self) -> String {
+        let inner = match self.optim.inner {
+            InnerOpt::Adam => "Adam",
+            InnerOpt::Adafactor => "Adafactor",
+            InnerOpt::AdamMini => "Adam-mini",
+            InnerOpt::Adam8bit => "Adam (8bit)",
+            InnerOpt::Msgd => "MSGD",
+        };
+        match self.optim.wrapper {
+            WrapperKind::FullRank => format!("Full-Rank {inner}"),
+            wrapper => {
+                let w = if wrapper == WrapperKind::GaLore { "GaLore" } else { "Fira" };
+                match self.optim.selector {
+                    SelectorKind::Dominant => format!("{w}-{inner}"),
+                    SelectorKind::Sara => format!("{w}-SARA-{inner}"),
+                    SelectorKind::GoLore => format!("GoLore-{inner}"),
+                    SelectorKind::OnlinePca => format!("OnlinePCA-{inner}"),
+                }
+            }
+        }
+    }
+
+    /// Apply CLI overrides (`--model`, `--lr`, `--steps`, `--rank`,
+    /// `--selector`, `--wrapper`, `--inner`, `--tau`, `--seed`,
+    /// `--dataset`, `--workers`, ...).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        self.lr = args.get_f64("lr", self.lr)?;
+        self.total_steps = args.get_usize("steps", self.total_steps)?;
+        self.warmup_steps = args.get_usize("warmup", self.warmup_steps)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.workers = args.get_usize("workers", self.workers)?;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        self.probe_every = args.get_usize("probe-every", self.probe_every)?;
+        if let Some(d) = args.get("dataset") {
+            self.dataset = d.to_string();
+        }
+        self.optim.rank = args.get_usize("rank", self.optim.rank)?;
+        self.optim.update_period = args.get_usize("tau", self.optim.update_period)?;
+        self.optim.alpha = args.get_f64("alpha", self.optim.alpha as f64)? as f32;
+        if let Some(s) = args.get("selector") {
+            self.optim.selector = parse_selector(s)?;
+        }
+        if let Some(s) = args.get("wrapper") {
+            self.optim.wrapper = parse_wrapper(s)?;
+        }
+        if let Some(s) = args.get("inner") {
+            self.optim.inner = parse_inner(s)?;
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (see [`toml`]), starting from defaults.
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml::TomlDoc::parse(&text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get_str("run", "model") {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str("run", "dataset") {
+            cfg.dataset = v.to_string();
+        }
+        cfg.lr = doc.get_f64("run", "lr").unwrap_or(cfg.lr);
+        cfg.total_steps = doc.get_usize("run", "steps").unwrap_or(cfg.total_steps);
+        cfg.warmup_steps = doc.get_usize("run", "warmup").unwrap_or(cfg.warmup_steps);
+        cfg.seed = doc.get_usize("run", "seed").unwrap_or(cfg.seed as usize) as u64;
+        cfg.workers = doc.get_usize("run", "workers").unwrap_or(cfg.workers);
+        cfg.eval_every = doc.get_usize("run", "eval_every").unwrap_or(cfg.eval_every);
+        cfg.probe_every =
+            doc.get_usize("run", "probe_every").unwrap_or(cfg.probe_every);
+        cfg.grad_clip = doc.get_f64("run", "grad_clip").unwrap_or(cfg.grad_clip);
+        if let Some(v) = doc.get_str("optim", "wrapper") {
+            cfg.optim.wrapper = parse_wrapper(v)?;
+        }
+        if let Some(v) = doc.get_str("optim", "inner") {
+            cfg.optim.inner = parse_inner(v)?;
+        }
+        if let Some(v) = doc.get_str("optim", "selector") {
+            cfg.optim.selector = parse_selector(v)?;
+        }
+        cfg.optim.rank = doc.get_usize("optim", "rank").unwrap_or(cfg.optim.rank);
+        cfg.optim.update_period =
+            doc.get_usize("optim", "tau").unwrap_or(cfg.optim.update_period);
+        cfg.optim.alpha =
+            doc.get_f64("optim", "alpha").unwrap_or(cfg.optim.alpha as f64) as f32;
+        cfg.optim.beta1 =
+            doc.get_f64("optim", "beta1").unwrap_or(cfg.optim.beta1 as f64) as f32;
+        cfg.optim.beta2 =
+            doc.get_f64("optim", "beta2").unwrap_or(cfg.optim.beta2 as f64) as f32;
+        if let Some(b) = doc.get_bool("optim", "momentum_reproject") {
+            cfg.optim.momentum_reproject = b;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels_match_paper_rows() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.method_label(), "GaLore-SARA-Adam");
+        c.optim.selector = SelectorKind::Dominant;
+        assert_eq!(c.method_label(), "GaLore-Adam");
+        c.optim.wrapper = WrapperKind::Fira;
+        c.optim.selector = SelectorKind::Sara;
+        assert_eq!(c.method_label(), "Fira-SARA-Adam");
+        c.optim.wrapper = WrapperKind::FullRank;
+        assert_eq!(c.method_label(), "Full-Rank Adam");
+        c.optim.wrapper = WrapperKind::GaLore;
+        c.optim.selector = SelectorKind::GoLore;
+        assert_eq!(c.method_label(), "GoLore-Adam");
+        c.optim.inner = InnerOpt::Adam8bit;
+        c.optim.selector = SelectorKind::Sara;
+        assert_eq!(c.method_label(), "GaLore-SARA-Adam (8bit)");
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = Args::parse(
+            "train --model small --lr 0.005 --rank 64 --selector dominant \
+             --wrapper fira --tau 50 --steps 10"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.lr, 0.005);
+        assert_eq!(c.optim.rank, 64);
+        assert_eq!(c.optim.selector, SelectorKind::Dominant);
+        assert_eq!(c.optim.wrapper, WrapperKind::Fira);
+        assert_eq!(c.optim.update_period, 50);
+        assert_eq!(c.total_steps, 10);
+    }
+
+    #[test]
+    fn bad_selector_is_an_error() {
+        assert!(parse_selector("frobnicate").is_err());
+        assert!(parse_inner("adamw9000").is_err());
+        assert!(parse_wrapper("lora").is_err());
+    }
+
+    #[test]
+    fn toml_file_roundtrip() {
+        let dir = std::env::temp_dir().join("sara_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(
+            &path,
+            r#"
+# experiment config
+[run]
+model = "small"
+lr = 0.005
+steps = 250
+dataset = "slimpajama"
+
+[optim]
+wrapper = "fira"
+selector = "sara"
+rank = 16
+tau = 40
+momentum_reproject = false
+"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.total_steps, 250);
+        assert_eq!(c.dataset, "slimpajama");
+        assert_eq!(c.optim.wrapper, WrapperKind::Fira);
+        assert_eq!(c.optim.rank, 16);
+        assert!(!c.optim.momentum_reproject);
+    }
+}

@@ -1,0 +1,195 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supported grammar (everything the configs in `configs/` use):
+//! `[section]` headers, `key = value` with string / integer / float / bool
+//! / flat array values, `#` comments, blank lines. Dotted keys, nested
+//! tables, multi-line strings and dates are intentionally out of scope.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: section -> key -> value. Top-level keys live in the
+/// section named "".
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: HashMap<String, HashMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+            };
+            let v = parse_value(value.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string: {s}");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated array: {s}");
+        };
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                let part = part.trim();
+                if !part.is_empty() {
+                    items.push(parse_value(part)?);
+                }
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[run]
+model = "tiny"       # inline comment
+lr = 0.01
+steps = 500
+deep = true
+ranks = [8, 16, 32]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_usize("", "top"), Some(1));
+        assert_eq!(doc.get_str("run", "model"), Some("tiny"));
+        assert_eq!(doc.get_f64("run", "lr"), Some(0.01));
+        assert_eq!(doc.get_usize("run", "steps"), Some(500));
+        assert_eq!(doc.get_bool("run", "deep"), Some(true));
+        match doc.get("run", "ranks") {
+            Some(TomlValue::Array(a)) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("name = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float_coercion() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(3.0));
+        assert_eq!(doc.get_usize("", "x"), Some(3));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+}

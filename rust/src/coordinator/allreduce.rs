@@ -1,0 +1,82 @@
+//! Gradient all-reduce over simulated data-parallel workers.
+//!
+//! The paper's runs use an 8-GPU node with data parallelism; our substrate
+//! simulates the workers as independent batch streams and reduces their
+//! gradients here. The reduction is a recursive-halving tree (the same
+//! communication pattern a real ring/tree all-reduce schedules), so worker
+//! count and reduction order are explicit and testable.
+
+use crate::runtime::Tensor;
+
+/// Average per-parameter gradients across workers:
+/// `workers[w][p]` -> `out[p] = mean_w workers[w][p]`.
+pub fn average(mut workers: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    assert!(!workers.is_empty(), "no workers");
+    let n = workers.len();
+    // recursive halving: pairwise sum until one buffer remains
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            // split_at_mut to take two disjoint &mut
+            let (left, right) = workers.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                d.add_scaled(s, 1.0);
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    let mut out = std::mem::take(&mut workers[0]);
+    let inv = 1.0 / n as f32;
+    for t in &mut out {
+        t.scale(inv);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads(v: f32) -> Vec<Tensor> {
+        vec![
+            Tensor::from_vec(&[2, 2], vec![v; 4]),
+            Tensor::from_vec(&[3], vec![2.0 * v; 3]),
+        ]
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let out = average(vec![grads(3.0), grads(3.0), grads(3.0)]);
+        assert_eq!(out[0].data, vec![3.0; 4]);
+        assert_eq!(out[1].data, vec![6.0; 3]);
+    }
+
+    #[test]
+    fn average_is_mean_for_any_worker_count() {
+        for n in 1..=9 {
+            let workers: Vec<Vec<Tensor>> =
+                (0..n).map(|w| grads(w as f32)).collect();
+            let out = average(workers);
+            let want = (0..n).map(|w| w as f32).sum::<f32>() / n as f32;
+            for &x in &out[0].data {
+                assert!((x - want).abs() < 1e-5, "n={n}: {x} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_passthrough() {
+        let out = average(vec![grads(7.0)]);
+        assert_eq!(out[0].data, vec![7.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no workers")]
+    fn empty_panics() {
+        average(Vec::new());
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordinator: simulated data-parallel gradient reduction, the
+//! experiment sweep runner behind every paper table/figure, and result
+//! recording.
+
+pub mod allreduce;
+pub mod experiments;
+pub mod modelspec;
+pub mod results;

@@ -1,0 +1,78 @@
+//! Rust-side mirror of `python/compile/model.py::param_specs` — used by the
+//! memory-accounting experiment to report optimizer-state footprints for
+//! the *paper's* model sizes (60M..1.1B) without needing their artifacts.
+
+/// (name, rows, cols, is_matrix) per parameter. 1-D params use cols=len.
+pub fn param_shapes(
+    vocab: usize,
+    dim: usize,
+    ffn: usize,
+    n_blocks: usize,
+) -> Vec<(String, usize, usize, bool)> {
+    let mut v = vec![("embed".to_string(), vocab, dim, false)];
+    for b in 0..n_blocks {
+        let p = format!("blocks.{b}.");
+        v.push((p.clone() + "attn_norm", 1, dim, false));
+        for w in ["q_proj", "k_proj", "v_proj", "o_proj"] {
+            v.push((p.clone() + w, dim, dim, true));
+        }
+        v.push((p.clone() + "mlp_norm", 1, dim, false));
+        v.push((p.clone() + "gate_proj", dim, ffn, true));
+        v.push((p.clone() + "up_proj", dim, ffn, true));
+        v.push((p.clone() + "down_proj", ffn, dim, true));
+    }
+    v.push(("final_norm".to_string(), 1, dim, false));
+    v.push(("lm_head".to_string(), dim, vocab, false));
+    v
+}
+
+/// The paper's LLaMA configs (Table 1/2): (label, vocab, dim, ffn, blocks,
+/// rank used by the paper).
+pub fn paper_configs() -> Vec<(&'static str, usize, usize, usize, usize, usize)> {
+    vec![
+        ("60M", 32000, 512, 1376, 8, 128),
+        ("130M", 32000, 768, 2048, 12, 256),
+        ("350M", 32000, 1024, 2736, 24, 256),
+        ("1.1B", 32000, 2048, 5461, 22, 512),
+    ]
+}
+
+/// Total parameter count for a config.
+pub fn total_params(vocab: usize, dim: usize, ffn: usize, blocks: usize) -> usize {
+    param_shapes(vocab, dim, ffn, blocks)
+        .iter()
+        .map(|(_, r, c, _)| r * c)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_land_in_band() {
+        for (label, v, d, f, b, _) in paper_configs() {
+            let n = total_params(v, d, f, b) as f64;
+            let want = match label {
+                "60M" => 60e6,
+                "130M" => 130e6,
+                "350M" => 350e6,
+                _ => 1.1e9,
+            };
+            assert!(
+                (n / want - 1.0).abs() < 0.35,
+                "{label}: {n:.2e} vs {want:.2e}"
+            );
+        }
+    }
+
+    #[test]
+    fn shapes_match_python_layout() {
+        let shapes = param_shapes(256, 64, 192, 2);
+        assert_eq!(shapes.len(), 2 + 9 * 2 + 1);
+        assert_eq!(shapes[0].0, "embed");
+        assert_eq!(shapes[2].0, "blocks.0.q_proj");
+        assert!(shapes[2].3);
+        assert!(!shapes[1].3); // norm is not matrix
+    }
+}

@@ -1,0 +1,11 @@
+//! Data pipeline substrate: synthetic pretraining corpora (the C4 /
+//! SlimPajama stand-ins — see DESIGN.md section 2), a word-level tokenizer
+//! for the text ingestion path, and a threaded streaming batcher.
+
+mod batcher;
+mod corpus;
+mod tokenizer;
+
+pub use batcher::{Batch, StreamingLoader};
+pub use corpus::{CorpusProfile, SyntheticCorpus};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,124 @@
+//! Word-level tokenizer for the text ingestion path (examples that feed
+//! real text files instead of the synthetic id stream). Frequency-ranked
+//! vocab with `<unk>`/`<bos>` specials; whitespace + punctuation splitting.
+
+use std::collections::HashMap;
+
+pub const UNK: u32 = 0;
+pub const BOS: u32 = 1;
+const SPECIALS: usize = 2;
+
+/// Frequency-built word vocabulary.
+pub struct Tokenizer {
+    token_to_id: HashMap<String, u32>,
+    id_to_token: Vec<String>,
+}
+
+fn split_words(text: &str) -> impl Iterator<Item = &str> {
+    text.split(|c: char| c.is_whitespace() || ",.;:!?\"()[]{}".contains(c))
+        .filter(|w| !w.is_empty())
+}
+
+impl Tokenizer {
+    /// Build from training text, keeping the `max_vocab - SPECIALS` most
+    /// frequent (lowercased) words.
+    pub fn build(text: &str, max_vocab: usize) -> Self {
+        assert!(max_vocab > SPECIALS);
+        let mut freq: HashMap<String, usize> = HashMap::new();
+        for w in split_words(text) {
+            *freq.entry(w.to_lowercase()).or_default() += 1;
+        }
+        let mut ranked: Vec<(String, usize)> = freq.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(max_vocab - SPECIALS);
+
+        let mut id_to_token = vec!["<unk>".to_string(), "<bos>".to_string()];
+        let mut token_to_id = HashMap::new();
+        for (w, _) in ranked {
+            token_to_id.insert(w.clone(), id_to_token.len() as u32);
+            id_to_token.push(w);
+        }
+        Self { token_to_id, id_to_token }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_token.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        split_words(text)
+            .map(|w| {
+                self.token_to_id
+                    .get(&w.to_lowercase())
+                    .copied()
+                    .unwrap_or(UNK)
+            })
+            .collect()
+    }
+
+    /// Encode with a leading `<bos>` (what the LM training path consumes).
+    pub fn encode_with_bos(&self, text: &str) -> Vec<u32> {
+        let mut ids = vec![BOS];
+        ids.extend(self.encode(text));
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.id_to_token
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<unk>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_encode_decode_roundtrip() {
+        let text = "the cat sat on the mat. The cat ran!";
+        let tok = Tokenizer::build(text, 32);
+        let ids = tok.encode("the cat sat");
+        assert_eq!(ids.len(), 3);
+        assert_eq!(tok.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let tok = Tokenizer::build("alpha beta gamma", 16);
+        let ids = tok.encode("alpha zeta");
+        assert_eq!(ids[1], UNK);
+        assert_ne!(ids[0], UNK);
+    }
+
+    #[test]
+    fn vocab_cap_keeps_most_frequent() {
+        let text = "a a a a b b b c c d";
+        let tok = Tokenizer::build(text, SPECIALS + 2); // room for 2 words
+        assert_eq!(tok.vocab_size(), 4);
+        assert_ne!(tok.encode("a")[0], UNK);
+        assert_ne!(tok.encode("b")[0], UNK);
+        assert_eq!(tok.encode("d")[0], UNK);
+    }
+
+    #[test]
+    fn bos_prefix() {
+        let tok = Tokenizer::build("alpha beta", 16);
+        let ids = tok.encode_with_bos("alpha");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids.len(), 2);
+    }
+
+    #[test]
+    fn punctuation_is_stripped() {
+        let tok = Tokenizer::build("hello, world!", 16);
+        assert_eq!(tok.encode("hello world").len(), 2);
+        assert_eq!(tok.encode("(hello)"), tok.encode("hello"));
+    }
+}

@@ -1,0 +1,37 @@
+//! # SARA — importance sampling for low-rank optimization in LLM pretraining
+//!
+//! A production-grade Rust + JAX + Pallas reproduction of *"Breaking the
+//! Frozen Subspace: Importance Sampling for Low-Rank Optimization in LLM
+//! Pretraining"* (CS.LG 2025).
+//!
+//! The crate is the L3 layer of a three-layer stack (see `DESIGN.md`):
+//!
+//! * [`runtime`] loads AOT-compiled JAX/Pallas model artifacts (HLO text)
+//!   and executes them via the PJRT C API — python never runs at train time.
+//! * [`optim`] + [`selector`] implement the paper's contribution: a family
+//!   of low-rank optimizers (GaLore, Fira over Adam / Adafactor / Adam-mini
+//!   / 8-bit Adam / MSGD) whose projection subspace is chosen by a pluggable
+//!   [`selector::Selector`] — dominant (GaLore), **SARA importance
+//!   sampling** (Algorithm 2), GoLore random projections, or online PCA.
+//! * [`train`] + [`coordinator`] orchestrate pretraining runs, probes and
+//!   the paper's experiment sweeps (Tables 1–4, Figures 1–4, App. F).
+//!
+//! Substrates ([`linalg`], [`rng`], [`quant`], [`data`], [`util`],
+//! [`config`], [`metrics`]) are implemented from scratch — the build is
+//! fully offline and self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod selector;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

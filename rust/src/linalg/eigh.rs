@@ -1,0 +1,181 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi rotation method.
+//!
+//! Jacobi is the right tool here: the Gram matrices the SVD route feeds it
+//! are small (m ≤ 2048, usually ≤ 512), it is unconditionally stable, it
+//! computes eigen*vectors* to high relative accuracy (they become the
+//! projection basis, so accuracy matters more than raw speed), and it is
+//! ~80 lines with no workspace games.
+
+use super::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: returns `(eigenvalues,
+/// eigenvectors)` with eigenvalues sorted **descending** and eigenvector
+/// `k` stored in column `k` of the returned matrix (`A = V diag(w) V^T`).
+pub fn eigh_symmetric(a: &Matrix, max_sweeps: usize) -> (Vec<f32>, Matrix) {
+    // 0.3 * RMS threshold: the perf-pass default (EXPERIMENTS.md §Perf)
+    eigh_symmetric_with_threshold(a, max_sweeps, 0.3)
+}
+
+/// Variant exposing the threshold-Jacobi skip factor (fraction of the RMS
+/// off-diagonal below which a rotation is skipped within a sweep).
+/// `thr_factor = 0.0` recovers classical cyclic Jacobi — kept public so
+/// the `overhead` bench can report the before/after of the perf pass.
+pub fn eigh_symmetric_with_threshold(
+    a: &Matrix,
+    max_sweeps: usize,
+    thr_factor: f64,
+) -> (Vec<f32>, Matrix) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    // f64 working copy: Jacobi's accuracy comes from accumulating rotations
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let off = |m: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[i * n + j] * m[i * n + j];
+            }
+        }
+        s
+    };
+    let fro: f64 = m.iter().map(|x| x * x).sum::<f64>();
+    let tol = 1e-28 * fro.max(1e-300);
+
+    for _sweep in 0..max_sweeps {
+        let off_now = off(&m);
+        if off_now <= tol {
+            break;
+        }
+        // threshold Jacobi (perf pass, EXPERIMENTS.md §Perf): skip
+        // rotations on entries well below the RMS off-diagonal this sweep
+        // — they contribute negligibly now and shrink anyway as the big
+        // entries are annihilated. Threshold decays with off_now, so
+        // convergence to `tol` is preserved.
+        let pairs = (n * (n - 1) / 2).max(1) as f64;
+        let thr2 = thr_factor * thr_factor * off_now / pairs; // (f * RMS)^2
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq * apq <= thr2 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // rows/cols p and q of M
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // accumulate V
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract, sort descending by eigenvalue
+    let mut order: Vec<usize> = (0..n).collect();
+    let eig: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    order.sort_by(|&a, &b| eig[b].total_cmp(&eig[a]));
+
+    let mut w = Vec::with_capacity(n);
+    let mut vec_out = Matrix::zeros(n, n);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        w.push(eig[old_col] as f32);
+        for r in 0..n {
+            vec_out.data[r * n + new_col] = v[r * n + old_col] as f32;
+        }
+    }
+    (w, vec_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::rng::Pcg64;
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut s = a.matmul(&a.transpose());
+        s.scale(1.0 / n as f32);
+        s
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        for n in [2, 5, 16, 33] {
+            let a = random_symmetric(n, n as u64);
+            let (w, v) = eigh_symmetric(&a, 30);
+            // A ?= V diag(w) V^T
+            let mut vd = v.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    vd.data[r * n + c] *= w[c];
+                }
+            }
+            let rec = vd.matmul(&v.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending_and_psd() {
+        let a = random_symmetric(24, 7);
+        let (w, _) = eigh_symmetric(&a, 30);
+        for pair in w.windows(2) {
+            assert!(pair[0] >= pair[1] - 1e-5);
+        }
+        // Gram construction => PSD
+        assert!(*w.last().unwrap() > -1e-4);
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(40, 9);
+        let (_, v) = eigh_symmetric(&a, 30);
+        assert!(orthogonality_defect(&v) < 1e-5);
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, &d) in [3.0f32, -1.0, 7.5, 0.0].iter().enumerate() {
+            a.set(i, i, d);
+        }
+        let (w, _) = eigh_symmetric(&a, 10);
+        assert_eq!(w, vec![7.5, 3.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn trace_is_preserved() {
+        let a = random_symmetric(17, 11);
+        let tr: f32 = (0..17).map(|i| a.get(i, i)).sum();
+        let (w, _) = eigh_symmetric(&a, 30);
+        let sum: f32 = w.iter().sum();
+        assert!((tr - sum).abs() < 1e-3 * tr.abs().max(1.0));
+    }
+}

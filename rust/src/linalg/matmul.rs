@@ -1,0 +1,184 @@
+//! GEMM kernels for the optimizer hot path.
+//!
+//! The projection pair `R = P^T G` and `U = P N` dominate L3 compute
+//! between selector refreshes, so these are written as cache-blocked,
+//! unrolled i-k-j loops over row-major storage (the j-innermost form
+//! autovectorizes well with -O3). Multi-threading happens a level up
+//! (the coordinator parallelizes over layers, which is embarrassing),
+//! keeping these kernels allocation-free and simple.
+
+use super::Matrix;
+
+/// Panel size for the k dimension (fits L1 alongside a C-row panel).
+const KC: usize = 256;
+
+impl Matrix {
+    /// C = A @ B.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, b.rows,
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, b.rows, b.cols
+        );
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut c);
+        c
+    }
+
+    /// C = A^T @ B without materializing A^T (the `R = P^T G` hot path:
+    /// A is m x r with r small, so we walk A column-wise).
+    pub fn t_matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(
+            self.rows, b.rows,
+            "t_matmul shape mismatch: ({}x{})^T @ {}x{}",
+            self.rows, self.cols, b.rows, b.cols
+        );
+        let (m, r) = (self.rows, self.cols);
+        let n = b.cols;
+        let mut c = Matrix::zeros(r, n);
+        // C[i,:] += A[k,i] * B[k,:]  — row-major streaming over both inputs
+        for k in 0..m {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for i in 0..r {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A @ B^T without materializing B^T (Gram matrices `G G^T`).
+    pub fn matmul_t(&self, b: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, b.cols,
+            "matmul_t shape mismatch: {}x{} @ ({}x{})^T",
+            self.rows, self.cols, b.rows, b.cols
+        );
+        let mut c = Matrix::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = c.row_mut(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0.0f64;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    acc += x as f64 * y as f64;
+                }
+                crow[j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    /// Symmetric Gram matrix `self @ self^T` exploiting symmetry (half the
+    /// FLOPs of `matmul_t(self, self)`); f64 accumulation for the SVD path.
+    pub fn gram(&self) -> Matrix {
+        let m = self.rows;
+        let mut g = Matrix::zeros(m, m);
+        for i in 0..m {
+            let ri = self.row(i);
+            for j in i..m {
+                let rj = self.row(j);
+                let mut acc = 0.0f64;
+                for (&x, &y) in ri.iter().zip(rj) {
+                    acc += x as f64 * y as f64;
+                }
+                let v = acc as f32;
+                g.data[i * m + j] = v;
+                g.data[j * m + i] = v;
+            }
+        }
+        g
+    }
+}
+
+/// C += A @ B into a preallocated buffer (C must be zeroed by the caller if
+/// a fresh product is wanted). Blocked over k to keep the B panel hot.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!(a.cols, b.rows);
+    debug_assert_eq!((c.rows, c.cols), (m, n));
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                // j-innermost: contiguous loads of B and C, autovectorizes
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Matrix;
+    use crate::rng::Pcg64;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols {
+                    acc += a.get(i, k) as f64 * b.get(k, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_odd_shapes() {
+        let mut rng = Pcg64::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 300, 31)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let diff = a.matmul(&b).max_abs_diff(&naive(&a, &b));
+            assert!(diff < 1e-3, "({m},{k},{n}): {diff}");
+        }
+    }
+
+    #[test]
+    fn t_matmul_equals_explicit_transpose() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(40, 8, 1.0, &mut rng);
+        let b = Matrix::randn(40, 23, 1.0, &mut rng);
+        let diff = a.t_matmul(&b).max_abs_diff(&a.transpose().matmul(&b));
+        assert!(diff < 1e-4, "{diff}");
+    }
+
+    #[test]
+    fn matmul_t_equals_explicit_transpose() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(11, 29, 1.0, &mut rng);
+        let b = Matrix::randn(7, 29, 1.0, &mut rng);
+        let diff = a.matmul_t(&b).max_abs_diff(&a.matmul(&b.transpose()));
+        assert!(diff < 1e-4, "{diff}");
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_matches() {
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(13, 37, 1.0, &mut rng);
+        let g = a.gram();
+        assert!(g.max_abs_diff(&g.transpose()) == 0.0);
+        assert!(g.max_abs_diff(&a.matmul_t(&a)) < 1e-4);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dense linear-algebra substrate (from scratch, f32 storage / f64 accumulate).
+//!
+//! The paper's algorithms need exactly four nontrivial primitives on top of
+//! GEMM: thin QR (GoLore's random-projection orthonormalization), symmetric
+//! eigendecomposition (Jacobi), left-SVD (dominant + SARA selectors), and
+//! Frobenius geometry. All are implemented here and property-tested; sizes
+//! are the paper's (m ≤ 2048), where the Gram-matrix SVD route is both
+//! simple and fast.
+
+mod eigh;
+mod matmul;
+mod matrix;
+mod qr;
+mod svd;
+
+pub use eigh::{eigh_symmetric, eigh_symmetric_with_threshold};
+pub use matrix::Matrix;
+pub use qr::{orthogonality_defect, qr_thin};
+pub use svd::{left_singular_vectors, singular_values, svd_thin, SvdResult};
+
+/// Machine-epsilon-scaled tolerance used across the module's tests.
+pub const TEST_EPS: f32 = 1e-4;

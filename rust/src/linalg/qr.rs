@@ -1,0 +1,135 @@
+//! Thin QR via modified Gram–Schmidt with one re-orthogonalization pass.
+//!
+//! Used by the GoLore selector (orthonormalize a Gaussian sketch) and by
+//! online-PCA's basis maintenance. MGS+reorth ("twice is enough", Kahan)
+//! gives orthogonality to ~machine eps for the well-conditioned random
+//! matrices these selectors feed it, at half the code of Householder.
+
+use super::Matrix;
+
+/// Thin QR of an `m x n` matrix with `m >= n`: returns `Q` (`m x n`,
+/// orthonormal columns) and `R` (`n x n`, upper triangular).
+///
+/// Rank deficiency is handled by replacing a collapsed column with a unit
+/// coordinate vector orthogonal to the span built so far (the selectors
+/// only need *an* orthonormal basis, not the exact range).
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin needs rows >= cols, got {m}x{n}");
+    // work in column-major f64 for accumulation
+    let mut q: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.get(i, j) as f64).collect())
+        .collect();
+    let mut r = Matrix::zeros(n, n);
+
+    for j in 0..n {
+        // two MGS passes against previous columns
+        for _pass in 0..2 {
+            for k in 0..j {
+                let dot: f64 = (0..m).map(|i| q[k][i] * q[j][i]).sum();
+                r.data[k * n + j] += dot as f32;
+                for i in 0..m {
+                    q[j][i] -= dot * q[k][i];
+                }
+            }
+        }
+        let norm: f64 = q[j].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-10 {
+            // collapsed column: substitute a coordinate vector and re-run
+            // the orthogonalization against the span built so far
+            let pick = j; // e_j is as good as any deterministic choice
+            for i in 0..m {
+                q[j][i] = if i == pick { 1.0 } else { 0.0 };
+            }
+            for k in 0..j {
+                let dot: f64 = (0..m).map(|i| q[k][i] * q[j][i]).sum();
+                for i in 0..m {
+                    q[j][i] -= dot * q[k][i];
+                }
+            }
+            let nn: f64 = q[j].iter().map(|x| x * x).sum::<f64>().sqrt();
+            for v in q[j].iter_mut() {
+                *v /= nn.max(1e-30);
+            }
+            r.data[j * n + j] = 0.0;
+        } else {
+            for v in q[j].iter_mut() {
+                *v /= norm;
+            }
+            r.data[j * n + j] = norm as f32;
+        }
+    }
+
+    let mut qm = Matrix::zeros(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            qm.data[i * n + j] = q[j][i] as f32;
+        }
+    }
+    (qm, r)
+}
+
+/// ||Q^T Q - I||_max — orthogonality defect, used by tests and probes.
+pub fn orthogonality_defect(q: &Matrix) -> f32 {
+    let qtq = q.t_matmul(q);
+    let n = qtq.rows;
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((qtq.get(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs_input() {
+        let mut rng = Pcg64::new(0);
+        for &(m, n) in &[(8, 8), (50, 10), (129, 7)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let diff = q.matmul(&r).max_abs_diff(&a);
+            assert!(diff < 1e-4, "({m},{n}): {diff}");
+        }
+    }
+
+    #[test]
+    fn q_columns_are_orthonormal() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::randn(200, 32, 1.0, &mut rng);
+        let (q, _) = qr_thin(&a);
+        assert!(orthogonality_defect(&q) < 1e-5);
+    }
+
+    #[test]
+    fn r_is_upper_triangular_with_nonneg_diag() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(30, 12, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..12 {
+            assert!(r.get(i, i) >= 0.0);
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_still_orthonormal() {
+        // two identical columns
+        let mut rng = Pcg64::new(3);
+        let mut a = Matrix::randn(20, 4, 1.0, &mut rng);
+        for i in 0..20 {
+            let v = a.get(i, 0);
+            a.set(i, 1, v);
+        }
+        let (q, _) = qr_thin(&a);
+        assert!(orthogonality_defect(&q) < 1e-5);
+    }
+}

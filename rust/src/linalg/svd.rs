@@ -1,0 +1,159 @@
+//! SVD tailored to the selectors' needs: **left** singular vectors and
+//! singular values of a wide-ish gradient `G in R^{m x n}` with `m <= n`.
+//!
+//! Route: Gram matrix `A = G G^T` (m x m), symmetric Jacobi eigh, then
+//! `sigma_i = sqrt(max(lambda_i, 0))`. The selectors only consume `U` and
+//! `S` (Algorithm 2 lines 3-6 never touch `V`), so this avoids the n-sized
+//! factor entirely; when `V` is wanted (spectrum probes on weight deltas)
+//! it is recovered as `V = G^T U S^{-1}` per retained component.
+
+use super::{eigh_symmetric, Matrix};
+
+/// Thin SVD result. `u`: m x k, `s`: k (descending), `vt`: k x n (optional).
+pub struct SvdResult {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub vt: Option<Matrix>,
+}
+
+/// Default Jacobi sweep budget — converges in <= 12 sweeps for every
+/// gradient matrix we feed it; 30 is a generous safety margin.
+const SWEEPS: usize = 30;
+
+/// Left singular vectors + singular values of `g` (requires rows <= cols;
+/// the trainer transposes taller-than-wide gradients before calling, which
+/// is also what GaLore does to always project the *short* side).
+pub fn left_singular_vectors(g: &Matrix) -> (Matrix, Vec<f32>) {
+    assert!(
+        g.rows <= g.cols,
+        "left_singular_vectors expects m <= n, got {}x{}",
+        g.rows,
+        g.cols
+    );
+    let gram = g.gram();
+    let (lam, u) = eigh_symmetric(&gram, SWEEPS);
+    let s = lam.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    (u, s)
+}
+
+/// Singular values only.
+pub fn singular_values(g: &Matrix) -> Vec<f32> {
+    if g.rows <= g.cols {
+        left_singular_vectors(g).1
+    } else {
+        let t = g.transpose();
+        left_singular_vectors(&t).1
+    }
+}
+
+/// Thin SVD with the right factor, rank-truncated to `k` components.
+pub fn svd_thin(g: &Matrix, k: usize) -> SvdResult {
+    let transposed = g.rows > g.cols;
+    let work = if transposed { g.transpose() } else { g.clone() };
+    let (u_full, s_full) = left_singular_vectors(&work);
+    let k = k.min(work.rows);
+    let idx: Vec<usize> = (0..k).collect();
+    let u = u_full.select_columns(&idx);
+    let s: Vec<f32> = s_full[..k].to_vec();
+
+    // V^T = S^{-1} U^T G  (k x n); guard tiny sigmas
+    let ut_g = u.t_matmul(&work);
+    let mut vt = ut_g;
+    for (i, &si) in s.iter().enumerate() {
+        let inv = if si > 1e-12 { 1.0 / si } else { 0.0 };
+        for v in vt.row_mut(i) {
+            *v *= inv;
+        }
+    }
+
+    if transposed {
+        // G = U S V^T  =>  G^T = V S U^T: swap roles
+        SvdResult { u: vt.transpose(), s, vt: Some(u.transpose()) }
+    } else {
+        SvdResult { u, s, vt: Some(vt) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn u_orthonormal_and_sigma_descending() {
+        let mut rng = Pcg64::new(0);
+        let g = Matrix::randn(24, 60, 1.0, &mut rng);
+        let (u, s) = left_singular_vectors(&g);
+        assert!(orthogonality_defect(&u) < 1e-4);
+        for p in s.windows(2) {
+            assert!(p[0] >= p[1] - 1e-4);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn reconstruction_with_full_rank() {
+        let mut rng = Pcg64::new(1);
+        let g = Matrix::randn(12, 30, 1.0, &mut rng);
+        let r = svd_thin(&g, 12);
+        // U diag(S) V^T ?= G
+        let mut us = r.u.clone();
+        for row in 0..us.rows {
+            for c in 0..us.cols {
+                us.data[row * us.cols + c] *= r.s[c];
+            }
+        }
+        let rec = us.matmul(r.vt.as_ref().unwrap());
+        assert!(rec.max_abs_diff(&g) < 2e-3, "{}", rec.max_abs_diff(&g));
+    }
+
+    #[test]
+    fn reconstruction_transposed_input() {
+        let mut rng = Pcg64::new(2);
+        let g = Matrix::randn(40, 9, 1.0, &mut rng);
+        let r = svd_thin(&g, 9);
+        let mut us = r.u.clone();
+        for row in 0..us.rows {
+            for c in 0..us.cols {
+                us.data[row * us.cols + c] *= r.s[c];
+            }
+        }
+        let rec = us.matmul(r.vt.as_ref().unwrap());
+        assert!(rec.max_abs_diff(&g) < 2e-3);
+    }
+
+    #[test]
+    fn truncated_svd_is_best_low_rank_approx_energy() {
+        // Build G with known rank-3 structure + noise; top-3 truncation must
+        // capture almost all energy.
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(16, 3, 1.0, &mut rng);
+        let b = Matrix::randn(3, 50, 1.0, &mut rng);
+        let mut g = a.matmul(&b);
+        let noise = Matrix::randn(16, 50, 0.01, &mut rng);
+        g.add_assign(&noise);
+        let s = singular_values(&g);
+        let top: f32 = s[..3].iter().map(|x| x * x).sum();
+        let tail: f32 = s[3..].iter().map(|x| x * x).sum();
+        assert!(top / (top + tail) > 0.99);
+    }
+
+    #[test]
+    fn singular_values_match_frobenius() {
+        let mut rng = Pcg64::new(4);
+        let g = Matrix::randn(10, 22, 1.0, &mut rng);
+        let s = singular_values(&g);
+        let energy: f32 = s.iter().map(|x| x * x).sum();
+        let fro = g.frobenius_norm();
+        assert!((energy.sqrt() - fro).abs() < 1e-2 * fro);
+    }
+
+    #[test]
+    fn agrees_with_known_2x2() {
+        // G = [[3, 0], [0, 4]] padded to 2x3: singular values {4, 3}
+        let g = Matrix::from_vec(2, 3, vec![3.0, 0.0, 0.0, 0.0, 4.0, 0.0]);
+        let s = singular_values(&g);
+        assert!((s[0] - 4.0).abs() < 1e-4 && (s[1] - 3.0).abs() < 1e-4);
+    }
+}

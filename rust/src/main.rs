@@ -1,0 +1,171 @@
+//! `sara` — L3 coordinator CLI for the SARA reproduction.
+//!
+//! Subcommands:
+//!   train   — run one pretraining configuration
+//!   exp     — reproduce a paper table/figure (table1..4, fig1..4, memory)
+//!   eval    — evaluate a checkpoint's validation PPL
+//!   info    — print artifact manifest details
+//!
+//! Examples:
+//!   sara train --model tiny --selector sara --steps 500 --eval-every 100
+//!   sara exp table1 --models tiny --steps 300
+//!   sara exp fig3 --model tiny --steps 800 --tau 40
+
+use anyhow::{bail, Context, Result};
+use sara::config::RunConfig;
+use sara::coordinator::experiments as exp;
+use sara::runtime::Engine;
+use sara::train::{Checkpoint, Probes, Trainer};
+use sara::util::cli::Args;
+
+fn main() {
+    sara::util::log::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: sara <train|exp|eval|info> [options]\n\
+     \n\
+     sara train --model <name> [--selector sara|dominant|golore|online-pca]\n\
+     \u{20}          [--wrapper galore|fira|full] [--inner adam|adafactor|adam-mini|adam8bit|msgd]\n\
+     \u{20}          [--steps N] [--lr F] [--rank R] [--tau T] [--workers W]\n\
+     \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
+     \u{20}          [--save ckpt.bin]\n\
+     sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
+     \u{20}          [--steps N] [--rank R] [--tau T] [--anchor N] [--per-layer]\n\
+     sara eval --model <name> --ckpt ckpt.bin\n\
+     sara info --model <name>"
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)
+            .with_context(|| format!("loading {path}"))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    if cfg.eval_every == 0 {
+        cfg.eval_every = (cfg.total_steps / 10).max(1);
+    }
+    let engine = Engine::load(exp::ARTIFACTS, &cfg.model)?;
+    println!(
+        "model '{}' ({} params, {} tensors) | method {}",
+        cfg.model,
+        engine.manifest.n_params,
+        engine.manifest.params.len(),
+        cfg.method_label()
+    );
+    let mut trainer = Trainer::new(engine, cfg.clone())?;
+    let result = trainer.train(&mut Probes::default())?;
+    println!(
+        "\nfinal: val loss {:.4}  PPL {:.3}  optimizer state {:.2} MiB",
+        result.final_val_loss,
+        result.final_ppl,
+        result.optimizer_state_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "timing: {:.1}s total, {:.1}s in PJRT execute ({:.0}% of wall)",
+        result.wall_secs,
+        result.execute_secs,
+        100.0 * result.execute_secs / result.wall_secs.max(1e-9)
+    );
+    if let Some(path) = args.get("save") {
+        let ck = Checkpoint {
+            step: trainer.current_step(),
+            params: trainer.params.clone(),
+        };
+        ck.save(std::path::Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn parse_models(args: &Args, default: &str) -> Vec<String> {
+    args.get("models")
+        .unwrap_or(default)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("exp needs a target\n{}", usage()))?;
+    let steps = args.get_usize("steps", 300)?;
+    let rank = args.get_usize("rank", 16)?;
+    let tau = args.get_usize("tau", 40)?;
+    let models = parse_models(args, "tiny");
+    let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let single = args.get_or("model", model_refs.first().copied().unwrap_or("tiny"));
+    match which {
+        "table1" => exp::table1(&model_refs, steps, rank, tau)?,
+        "table2" => exp::table2(single, steps, rank, tau)?,
+        "table3" => exp::table3(&model_refs, steps, rank, tau)?,
+        "table4" => exp::table4(&model_refs, steps, rank, tau)?,
+        "fig1" | "fig2" | "fig3" => {
+            let anchor = args.get_usize("anchor", steps / 3)?;
+            exp::fig_overlap(single, steps, rank, tau, anchor,
+                             args.flag("per-layer"))?;
+        }
+        "fig4" => exp::fig_spectrum(single, steps, rank, tau,
+                                    args.flag("per-layer"))?,
+        "memory" => exp::memory_table()?,
+        "ablation" => exp::ablation(single, steps)?,
+        other => bail!("unknown experiment '{other}'\n{}", usage()),
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let ckpt = args.get("ckpt").context("--ckpt required")?;
+    let engine = Engine::load(exp::ARTIFACTS, model)?;
+    let ck = Checkpoint::load(std::path::Path::new(ckpt))?;
+    let mut cfg = RunConfig::default();
+    cfg.model = model.to_string();
+    cfg.apply_args(args)?;
+    let mut trainer = Trainer::new(engine, cfg)?;
+    trainer.params = ck.params;
+    let vl = trainer.validate()?;
+    println!("checkpoint step {} | val loss {vl:.4} | PPL {:.3}", ck.step, vl.exp());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let man = sara::runtime::Manifest::load(
+        &std::path::PathBuf::from(exp::ARTIFACTS)
+            .join(format!("{model}.manifest.json")),
+    )?;
+    println!(
+        "model {} | vocab {} dim {} blocks {} | {} params in {} tensors",
+        man.name, man.vocab, man.dim, man.n_blocks, man.n_params,
+        man.params.len()
+    );
+    println!("tokens shape {:?}", man.tokens_shape);
+    for p in &man.params {
+        println!("  {:<28} {:?} {:?}", p.name, p.shape, p.kind);
+    }
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! Subspace / spectrum metrics used throughout the paper's evaluation.
+//!
+//! * [`overlap`] — the GARD18 subspace-overlap metric of section 4.3:
+//!   `overlap(U, V) = (1/r) * sum_i ||U^T V[:, i]||^2` in [0, 1].
+//! * [`AdjacentOverlapTracker`] / anchor overlap — Figures 1-3, App. F.2/F.3.
+//! * [`normalized_spectrum`] / [`effective_rank`] — Figure 4, App. F.1.
+
+use crate::linalg::{singular_values, Matrix};
+
+/// GARD18 overlap between the column spans of two orthonormal matrices
+/// (`m x r` each). 1.0 = identical subspace, ~r/m for random subspaces.
+pub fn overlap(u: &Matrix, v: &Matrix) -> f64 {
+    assert_eq!(u.rows, v.rows, "subspace ambient dims differ");
+    let r = v.cols;
+    // ||U^T v_i||^2 summed = ||U^T V||_F^2
+    let utv = u.t_matmul(v);
+    let fro2: f64 = utv.data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    fro2 / r as f64
+}
+
+/// Cosine-similarity-style diagnostic from Q-GaLore [ZJY+24]: mean absolute
+/// cosine between matched columns (order-sensitive, used for comparison
+/// against `overlap` in fig2 to show the phenomenon is metric-independent).
+pub fn matched_cosine(u: &Matrix, v: &Matrix) -> f64 {
+    assert_eq!((u.rows, u.cols), (v.rows, v.cols));
+    let mut acc = 0.0;
+    for c in 0..u.cols {
+        let mut dot = 0.0f64;
+        for r in 0..u.rows {
+            dot += u.get(r, c) as f64 * v.get(r, c) as f64;
+        }
+        acc += dot.abs();
+    }
+    acc / u.cols as f64
+}
+
+/// Normalized singular-value profile of a matrix (Figure 4): singular
+/// values divided by the largest one, descending.
+pub fn normalized_spectrum(m: &Matrix) -> Vec<f32> {
+    let s = singular_values(m);
+    let top = s.first().copied().unwrap_or(0.0).max(1e-30);
+    s.iter().map(|&x| x / top).collect()
+}
+
+/// Effective rank (exponential of spectral entropy) — a scalar summary of
+/// how "high-rank" a weight update is; higher = more evenly distributed
+/// singular values.
+pub fn effective_rank(m: &Matrix) -> f64 {
+    let s = singular_values(m);
+    let total: f64 = s.iter().map(|&x| x as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &x in &s {
+        let p = x as f64 / total;
+        if p > 1e-12 {
+            h -= p * p.ln();
+        }
+    }
+    h.exp()
+}
+
+/// Rolling tracker for adjacent-subspace overlap (Figures 1-3): feed it the
+/// projector at every refresh; it records `overlap(P_{k-1}, P_k)` plus the
+/// overlap against a fixed anchor once [`Self::set_anchor`] is called.
+#[derive(Default)]
+pub struct AdjacentOverlapTracker {
+    prev: Option<Matrix>,
+    anchor: Option<Matrix>,
+    pub adjacent: Vec<f64>,
+    pub vs_anchor: Vec<f64>,
+    pub steps: Vec<usize>,
+}
+
+impl AdjacentOverlapTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_anchor(&mut self, p: Matrix) {
+        self.anchor = Some(p);
+    }
+
+    pub fn observe(&mut self, step: usize, p: &Matrix) {
+        if let Some(prev) = &self.prev {
+            if prev.rows == p.rows {
+                self.adjacent.push(overlap(prev, p));
+                self.steps.push(step);
+            }
+        }
+        if let Some(anchor) = &self.anchor {
+            if anchor.rows == p.rows {
+                self.vs_anchor.push(overlap(anchor, p));
+            }
+        }
+        self.prev = Some(p.clone());
+    }
+
+    pub fn mean_adjacent(&self) -> f64 {
+        if self.adjacent.is_empty() {
+            return f64::NAN;
+        }
+        self.adjacent.iter().sum::<f64>() / self.adjacent.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr_thin;
+    use crate::rng::Pcg64;
+
+    fn random_orthonormal(m: usize, r: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::randn(m, r, 1.0, &mut rng);
+        qr_thin(&a).0
+    }
+
+    #[test]
+    fn overlap_self_is_one() {
+        let u = random_orthonormal(32, 8, 0);
+        assert!((overlap(&u, &u) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn overlap_orthogonal_subspaces_is_zero() {
+        // span(e0..e3) vs span(e4..e7)
+        let mut u = Matrix::zeros(16, 4);
+        let mut v = Matrix::zeros(16, 4);
+        for i in 0..4 {
+            u.set(i, i, 1.0);
+            v.set(i + 4, i, 1.0);
+        }
+        assert!(overlap(&u, &v).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_random_subspaces_near_r_over_m() {
+        // E[overlap] = r/m for uniformly random r-dim subspaces of R^m
+        let (m, r) = (64, 8);
+        let mut acc = 0.0;
+        let trials = 30;
+        for t in 0..trials {
+            let u = random_orthonormal(m, r, 100 + t);
+            let v = random_orthonormal(m, r, 200 + t);
+            acc += overlap(&u, &v);
+        }
+        let mean = acc / trials as f64;
+        let expect = r as f64 / m as f64;
+        assert!((mean - expect).abs() < 0.05, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn overlap_is_symmetric_and_bounded() {
+        let u = random_orthonormal(24, 6, 1);
+        let v = random_orthonormal(24, 6, 2);
+        let a = overlap(&u, &v);
+        let b = overlap(&v, &u);
+        assert!((a - b).abs() < 1e-6);
+        assert!((0.0..=1.0 + 1e-6).contains(&a));
+    }
+
+    #[test]
+    fn effective_rank_extremes() {
+        // identity-like: perfectly flat spectrum -> effective rank = n
+        let eye = Matrix::identity(8);
+        assert!((effective_rank(&eye) - 8.0).abs() < 0.05);
+        // rank-1: effective rank ~ 1
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::randn(8, 1, 1.0, &mut rng);
+        let b = Matrix::randn(1, 12, 1.0, &mut rng);
+        let r1 = a.matmul(&b);
+        assert!(effective_rank(&r1) < 1.3);
+    }
+
+    #[test]
+    fn normalized_spectrum_starts_at_one_and_descends() {
+        let mut rng = Pcg64::new(4);
+        let m = Matrix::randn(10, 20, 1.0, &mut rng);
+        let s = normalized_spectrum(&m);
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        for p in s.windows(2) {
+            assert!(p[0] >= p[1] - 1e-5);
+        }
+    }
+
+    #[test]
+    fn tracker_records_series() {
+        let mut t = AdjacentOverlapTracker::new();
+        let a = random_orthonormal(16, 4, 5);
+        let b = random_orthonormal(16, 4, 6);
+        t.set_anchor(a.clone());
+        t.observe(0, &a);
+        t.observe(200, &b);
+        assert_eq!(t.adjacent.len(), 1);
+        assert_eq!(t.vs_anchor.len(), 2);
+        assert!((t.vs_anchor[0] - 1.0).abs() < 1e-5);
+        assert!(t.mean_adjacent() < 1.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! 8-bit Adam [DLSZ21]: Adam whose `M`/`V` states live in blockwise 8-bit
+//! storage ([`crate::quant`]) and are dequantized/requantized around each
+//! update — the "GaLore-Adam (8bit)" rows of Table 1. The quantization
+//! noise this injects into the moments is the behaviour those rows probe.
+
+use super::OptState;
+use crate::config::OptimConfig;
+use crate::linalg::Matrix;
+use crate::quant::{LogQuantizedTensor, QuantizedTensor};
+
+pub struct Adam8bit {
+    m: QuantizedTensor,
+    /// second moment in log-domain 8-bit: V needs *relative* precision or
+    /// the beta2=0.999 EMA amplifies linear-grid round-off (see quant docs)
+    v: LogQuantizedTensor,
+    rows: usize,
+    cols: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: usize,
+    // scratch buffers reused across steps (perf: avoid per-step allocs)
+    m_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+}
+
+impl Adam8bit {
+    pub fn new(rows: usize, cols: usize, cfg: &OptimConfig) -> Self {
+        let zeros = vec![0.0f32; rows * cols];
+        Self {
+            m: QuantizedTensor::quantize(&zeros),
+            v: LogQuantizedTensor::quantize(&zeros),
+            rows,
+            cols,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            t: 0,
+            m_buf: vec![0.0; rows * cols],
+            v_buf: vec![0.0; rows * cols],
+        }
+    }
+}
+
+impl OptState for Adam8bit {
+    fn name(&self) -> &'static str {
+        "adam-8bit"
+    }
+
+    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+        debug_assert_eq!((r.rows, r.cols), (self.rows, self.cols));
+        self.t += 1;
+        let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
+        let c2 = 1.0 / (1.0 - self.beta2.powi(self.t as i32));
+        self.m.dequantize_into(&mut self.m_buf);
+        self.v.dequantize_into(&mut self.v_buf);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..r.data.len() {
+            let g = r.data[i];
+            let m = self.beta1 * self.m_buf[i] + (1.0 - self.beta1) * g;
+            // V must stay non-negative despite quantization round-off
+            let v = (self.beta2 * self.v_buf[i] + (1.0 - self.beta2) * g * g)
+                .max(0.0);
+            self.m_buf[i] = m;
+            self.v_buf[i] = v;
+            out.data[i] = (m * c1) / ((v * c2).sqrt() + self.eps);
+        }
+        self.m = QuantizedTensor::quantize(&self.m_buf);
+        self.v = LogQuantizedTensor::quantize(&self.v_buf);
+        out
+    }
+
+    fn reproject(&mut self, c: &Matrix) {
+        self.m.dequantize_into(&mut self.m_buf);
+        let m = Matrix::from_vec(self.rows, self.cols, self.m_buf.clone());
+        let m2 = c.matmul(&m);
+        self.rows = c.rows;
+        self.m_buf = m2.data;
+        self.m = QuantizedTensor::quantize(&self.m_buf);
+        if self.v_buf.len() != self.rows * self.cols {
+            self.v_buf.resize(self.rows * self.cols, 0.0);
+            self.v = LogQuantizedTensor::quantize(&self.v_buf);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.nbytes() + self.v.nbytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Adam;
+    use crate::optim::OptState;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn tracks_full_precision_adam_closely() {
+        let cfg = OptimConfig::default();
+        let mut q8 = Adam8bit::new(8, 32, &cfg);
+        let mut fp = Adam::new(8, 32, &cfg);
+        let mut rng = Pcg64::new(0);
+        let mut worst: f32 = 0.0;
+        for t in 1..=50 {
+            let g = Matrix::randn(8, 32, 1.0, &mut rng);
+            let d8 = q8.direction(&g, t);
+            let df = fp.direction(&g, t);
+            let rel = d8.max_abs_diff(&df)
+                / df.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            worst = worst.max(rel);
+        }
+        // 8-bit moments: direction error stays in the few-percent range
+        assert!(worst < 0.15, "worst relative direction error {worst}");
+    }
+
+    #[test]
+    fn memory_is_quarter_of_dense() {
+        let cfg = OptimConfig::default();
+        let q8 = Adam8bit::new(64, 1024, &cfg);
+        let dense = 2 * 64 * 1024 * 4;
+        assert!(q8.state_bytes() * 3 < dense, "{}", q8.state_bytes());
+    }
+
+    #[test]
+    fn v_never_goes_negative() {
+        let cfg = OptimConfig::default();
+        let mut q8 = Adam8bit::new(4, 16, &cfg);
+        let mut rng = Pcg64::new(1);
+        for t in 1..=30 {
+            let g = Matrix::randn(4, 16, 0.01, &mut rng);
+            q8.direction(&g, t);
+            assert!(q8.v_buf.iter().all(|&v| v >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Adam-mini [ZCL+24]: one second-moment scalar per row-block instead of
+//! per element — removes >99% of `V` while keeping Adam's per-block
+//! learning-rate adaptation. In the projected `r x n` stream each row is a
+//! natural block (one subspace direction), matching the paper's
+//! GaLore-Adam-mini rows (beta2 = 0.95 per Appendix B).
+
+use super::OptState;
+use crate::config::OptimConfig;
+use crate::linalg::Matrix;
+
+pub struct AdamMini {
+    m: Matrix,
+    /// one v per row (subspace direction)
+    v: Vec<f32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: usize,
+}
+
+impl AdamMini {
+    pub fn new(rows: usize, cols: usize, cfg: &OptimConfig) -> Self {
+        Self {
+            m: Matrix::zeros(rows, cols),
+            v: vec![0.0; rows],
+            beta1: cfg.beta1,
+            // Adam-mini's recommended beta2 (Appendix B: 0.95)
+            beta2: 0.95f32.min(cfg.beta2),
+            eps: cfg.eps,
+            t: 0,
+        }
+    }
+}
+
+impl OptState for AdamMini {
+    fn name(&self) -> &'static str {
+        "adam-mini"
+    }
+
+    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+        let (rows, cols) = (r.rows, r.cols);
+        self.t += 1;
+        let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
+        let c2 = 1.0 / (1.0 - self.beta2.powi(self.t as i32));
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            let grow = r.row(i);
+            let mean_sq =
+                grow.iter().map(|&x| x * x).sum::<f32>() / cols as f32;
+            let v = self.beta2 * self.v[i] + (1.0 - self.beta2) * mean_sq;
+            self.v[i] = v;
+            let denom = (v * c2).sqrt() + self.eps;
+            let mrow = self.m.row_mut(i);
+            let orow = &mut out.data[i * cols..(i + 1) * cols];
+            for j in 0..cols {
+                let m = self.beta1 * mrow[j] + (1.0 - self.beta1) * grow[j];
+                mrow[j] = m;
+                orow[j] = (m * c1) / denom;
+            }
+        }
+        out
+    }
+
+    fn reproject(&mut self, c: &Matrix) {
+        self.m = c.matmul(&self.m);
+        if c.rows != self.v.len() {
+            self.v.resize(c.rows, 0.0);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.data.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn v_is_per_row() {
+        let cfg = OptimConfig::default();
+        let mini = AdamMini::new(32, 512, &cfg);
+        // V memory = 32 floats, not 32*512
+        assert_eq!(mini.state_bytes(), (32 * 512 + 32) * 4);
+    }
+
+    #[test]
+    fn rows_with_larger_gradients_get_smaller_effective_lr() {
+        let cfg = OptimConfig::default();
+        let mut mini = AdamMini::new(2, 64, &cfg);
+        let mut rng = Pcg64::new(0);
+        let mut g = Matrix::zeros(2, 64);
+        let mut d = Matrix::zeros(2, 64);
+        for t in 1..=100 {
+            for j in 0..64 {
+                g.set(0, j, rng.next_normal() as f32 * 0.1);
+                g.set(1, j, rng.next_normal() as f32 * 10.0);
+            }
+            d = mini.direction(&g, t);
+        }
+        // normalized directions should have comparable row norms even
+        // though raw gradient norms differ by 100x
+        let n0: f32 = d.row(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+        let n1: f32 = d.row(1).iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n0 / n1 - 1.0).abs() < 0.5, "n0={n0} n1={n1}");
+    }
+}

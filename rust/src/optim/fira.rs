@@ -1,0 +1,81 @@
+//! Fira's residual-scaling machinery [CFL+24].
+//!
+//! Fira adds the low-rank approximation error `S = (I - P P^T) G` back into
+//! the update, scaled so its magnitude matches what the inner (Adam-style)
+//! optimizer would have done to it: `phi(S) = (||N||_F / ||R||_F) * S`,
+//! where `N` is the normalized low-rank direction and `R` the projected
+//! gradient. A *norm-growth limiter* caps the ratio against its running
+//! average to suppress loss spikes (Fira section 3.3).
+
+/// Stateful scale computer with Fira's norm-growth limiter.
+#[derive(Clone, Debug)]
+pub struct FiraResidual {
+    ema: f32,
+    /// max allowed ratio as a multiple of the running average (cfg.fira_limiter)
+    limiter: f32,
+    initialized: bool,
+}
+
+impl FiraResidual {
+    pub fn new(limiter: f32) -> Self {
+        Self { ema: 0.0, limiter: limiter.max(1.0), initialized: false }
+    }
+
+    /// Compute the scaling factor for this step from the norms of the
+    /// normalized direction `n` and the raw projected gradient `r`.
+    pub fn scale(&mut self, n_norm: f32, r_norm: f32) -> f32 {
+        if r_norm <= 1e-30 {
+            return 0.0;
+        }
+        let ratio = n_norm / r_norm;
+        if !self.initialized {
+            self.initialized = true;
+            self.ema = ratio;
+            return ratio;
+        }
+        // limiter: cap sudden growth against the running average
+        let capped = ratio.min(self.limiter * self.ema);
+        self.ema = 0.9 * self.ema + 0.1 * capped;
+        capped
+    }
+
+    pub fn current_ema(&self) -> f32 {
+        self.ema
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_call_passes_through() {
+        let mut f = FiraResidual::new(1.01);
+        assert!((f.scale(2.0, 4.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn limiter_caps_spikes() {
+        let mut f = FiraResidual::new(1.01);
+        f.scale(1.0, 1.0); // ema = 1.0
+        // a 100x ratio spike must be capped to ~1.01 * ema
+        let s = f.scale(100.0, 1.0);
+        assert!(s <= 1.01 + 1e-5, "spike passed: {s}");
+    }
+
+    #[test]
+    fn steady_ratio_is_stable() {
+        let mut f = FiraResidual::new(1.01);
+        let mut last = 0.0;
+        for _ in 0..100 {
+            last = f.scale(0.7, 1.0);
+        }
+        assert!((last - 0.7).abs() < 0.05, "{last}");
+    }
+
+    #[test]
+    fn zero_gradient_returns_zero() {
+        let mut f = FiraResidual::new(1.01);
+        assert_eq!(f.scale(1.0, 0.0), 0.0);
+    }
+}

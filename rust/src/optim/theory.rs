@@ -1,0 +1,191 @@
+//! Theorem 3.4 / 3.5 machinery: the convergence-theory hyperparameter
+//! prescriptions and rate bounds, computable so experiments (and users)
+//! can instantiate the theory's schedule instead of hand-tuning.
+//!
+//! Theorem 3.4 (low-rank MSGD-SARA with momentum re-projection): with
+//!   beta1 = (1 + sqrt(delta^{3/2} sigma^2 T / (L Delta)))^{-1}
+//!   tau   = ceil(64 / (3 delta beta1))
+//!   eta   = (4L + sqrt(80L^2/(3 delta beta1^2) + 80 tau^2 L^2/(3 delta))
+//!               + sqrt(16 tau L^2 / (3 beta1)))^{-1}
+//! the average squared gradient norm is
+//!   O( L Delta / (delta^{2.5} T) + sqrt(L Delta sigma^2 / (delta^{3.5} T)) ).
+//!
+//! For SARA, `delta` is the minimum per-direction inclusion probability of
+//! the importance sampler (Lemma 3.3); for GoLore it is exactly `r/m`
+//! (Theorem 3.5). [`sara_delta_lower_bound`] estimates SARA's delta from a
+//! singular spectrum; [`min_horizon`] is the theorem's T requirement.
+
+/// Problem constants the theorems are stated over.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemConstants {
+    /// Smoothness constant (Assumption 3.1).
+    pub l_smooth: f64,
+    /// f(x0) - inf f (the "Delta" in the bound).
+    pub delta_f: f64,
+    /// Mini-batch gradient noise bound sigma^2 (Assumption 3.2).
+    pub sigma2: f64,
+}
+
+/// The theorem's prescribed hyperparameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TheoremSchedule {
+    pub beta1: f64,
+    pub tau: usize,
+    pub eta: f64,
+}
+
+/// Theorem 3.4's hyperparameter choices for inclusion probability `delta`
+/// and horizon `T`.
+pub fn theorem_schedule(c: &ProblemConstants, delta: f64, t: usize) -> TheoremSchedule {
+    assert!(delta > 0.0 && delta <= 1.0, "delta in (0,1], got {delta}");
+    assert!(t > 0);
+    let l = c.l_smooth;
+    let beta1 =
+        1.0 / (1.0 + (delta.powf(1.5) * c.sigma2 * t as f64 / (l * c.delta_f)).sqrt());
+    let tau = (64.0 / (3.0 * delta * beta1)).ceil() as usize;
+    let tau_f = tau as f64;
+    let eta = 1.0
+        / (4.0 * l
+            + (80.0 * l * l / (3.0 * delta * beta1 * beta1)
+                + 80.0 * tau_f * tau_f * l * l / (3.0 * delta))
+                .sqrt()
+            + (16.0 * tau_f * l * l / (3.0 * beta1)).sqrt());
+    TheoremSchedule { beta1, tau, eta }
+}
+
+/// Theorem 3.4's minimum horizon:
+/// `T >= 2 + 128/(3 delta) + (128 sigma)^2 / (9 sqrt(delta) L Delta)`.
+pub fn min_horizon(c: &ProblemConstants, delta: f64) -> usize {
+    (2.0 + 128.0 / (3.0 * delta)
+        + (128.0 * c.sigma2.sqrt()).powi(2)
+            / (9.0 * delta.sqrt() * c.l_smooth * c.delta_f))
+        .ceil() as usize
+}
+
+/// The rate bound's value (up to the hidden constant, taken as 1):
+/// `L Delta / (delta^{2.5} T) + sqrt(L Delta sigma^2 / (delta^{3.5} T))`.
+pub fn rate_bound(c: &ProblemConstants, delta: f64, t: usize) -> f64 {
+    let ld = c.l_smooth * c.delta_f;
+    ld / (delta.powf(2.5) * t as f64)
+        + (ld * c.sigma2 / (delta.powf(3.5) * t as f64)).sqrt()
+}
+
+/// GoLore's inclusion probability (Theorem 3.5): exactly r/m.
+pub fn golore_delta(rank: usize, m: usize) -> f64 {
+    rank as f64 / m as f64
+}
+
+/// Lower bound on SARA's per-direction inclusion probability `delta` from
+/// a singular spectrum: the first draw alone includes direction `i` with
+/// probability `w_i = s_i / sum(s)`, and sampling without replacement only
+/// increases inclusion, so `delta >= min_i w_i` (and `delta < r/m` when the
+/// spectrum is non-uniform — the comparison under Theorem 3.5).
+pub fn sara_delta_lower_bound(spectrum: &[f32]) -> f64 {
+    let total: f64 = spectrum.iter().map(|&s| s as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    spectrum
+        .iter()
+        .map(|&s| s as f64 / total)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Empirical delta: inclusion frequency of each direction over repeated
+/// SARA draws; returns the minimum (a Monte-Carlo estimate of Lemma 3.3's
+/// delta for a given spectrum).
+pub fn sara_delta_empirical(spectrum: &[f32], rank: usize, trials: usize, seed: u64) -> f64 {
+    use crate::rng::{sample_weighted_without_replacement, Pcg64};
+    let m = spectrum.len();
+    let total: f64 = spectrum.iter().map(|&s| s as f64).sum();
+    let weights: Vec<f64> = spectrum
+        .iter()
+        .map(|&s| (s as f64 / total).max(1e-12))
+        .collect();
+    let mut counts = vec![0usize; m];
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..trials {
+        for i in sample_weighted_without_replacement(&mut rng, &weights, rank) {
+            counts[i] += 1;
+        }
+    }
+    counts
+        .iter()
+        .map(|&c| c as f64 / trials as f64)
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> ProblemConstants {
+        ProblemConstants { l_smooth: 1.0, delta_f: 10.0, sigma2: 4.0 }
+    }
+
+    #[test]
+    fn schedule_satisfies_theorem_constraints() {
+        let c = consts();
+        for delta in [0.05, 0.25, 1.0] {
+            let t = min_horizon(&c, delta).max(1000);
+            let s = theorem_schedule(&c, delta, t);
+            assert!(s.beta1 > 0.0 && s.beta1 <= 1.0);
+            // tau >= 64/(3 delta beta1) (Theorem A.5's condition)
+            assert!(s.tau as f64 >= 64.0 / (3.0 * delta * s.beta1) - 1.0);
+            // eta below each of Theorem A.5's three caps
+            let l = c.l_smooth;
+            assert!(s.eta <= 1.0 / (4.0 * l) + 1e-12);
+            assert!(s.eta <= (3.0 * delta * s.beta1 * s.beta1 / (80.0 * l * l)).sqrt());
+            assert!(s.eta <= (3.0 * delta / (80.0 * (s.tau as f64).powi(2) * l * l)).sqrt());
+        }
+    }
+
+    #[test]
+    fn rate_decays_with_horizon_and_improves_with_delta() {
+        let c = consts();
+        assert!(rate_bound(&c, 0.25, 10_000) < rate_bound(&c, 0.25, 1_000));
+        assert!(rate_bound(&c, 0.5, 10_000) < rate_bound(&c, 0.1, 10_000));
+    }
+
+    #[test]
+    fn rate_is_o_one_over_sqrt_t_asymptotically() {
+        let c = consts();
+        let r1 = rate_bound(&c, 0.25, 100_000);
+        let r2 = rate_bound(&c, 0.25, 400_000);
+        // 4x horizon -> ~2x improvement in the sqrt regime
+        let ratio = r1 / r2;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn golore_delta_is_r_over_m() {
+        assert_eq!(golore_delta(128, 512), 0.25);
+    }
+
+    #[test]
+    fn sara_delta_below_golore_for_skewed_spectrum() {
+        // paper discussion after Theorem 3.5: importance sampling makes
+        // delta < r/m, trading worst-case rate for empirical quality
+        let spectrum: Vec<f32> = (0..16).map(|i| 0.8f32.powi(i)).collect();
+        let lower = sara_delta_lower_bound(&spectrum);
+        let emp = sara_delta_empirical(&spectrum, 4, 20_000, 0);
+        let golore = golore_delta(4, 16);
+        assert!(lower > 0.0);
+        assert!(emp >= lower - 0.01, "empirical {emp} vs lower bound {lower}");
+        assert!(emp < golore, "emp {emp} should be < r/m {golore}");
+    }
+
+    #[test]
+    fn uniform_spectrum_recovers_r_over_m() {
+        let spectrum = vec![1.0f32; 16];
+        let emp = sara_delta_empirical(&spectrum, 4, 20_000, 1);
+        assert!((emp - 0.25).abs() < 0.02, "{emp}");
+    }
+
+    #[test]
+    fn min_horizon_monotone_in_noise() {
+        let mut hi = consts();
+        hi.sigma2 = 100.0;
+        assert!(min_horizon(&hi, 0.25) > min_horizon(&consts(), 0.25));
+    }
+}

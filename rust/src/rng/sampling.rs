@@ -1,0 +1,189 @@
+//! Weighted sampling **without replacement** — the probabilistic core of
+//! SARA (Algorithm 2, line 4).
+//!
+//! The paper defines the sample law sequentially: draw index `i_1` with
+//! probability `w_{i_1}`, then `i_2` with probability
+//! `w_{i_2} / (1 - w_{i_1})`, and so on (successive sampling). We realize
+//! exactly this distribution with the Efraimidis–Spirakis exponential-keys
+//! construction: give item `i` the key `E_i / w_i` with `E_i ~ Exp(1)` and
+//! keep the `r` smallest keys. The equivalence is classical (ES 2006): the
+//! argmin over `E_i / w_i` is distributed `w_i / Σw`, and conditioning on
+//! removal reproduces the successive-sampling chain. One pass, O(m log r).
+
+use super::Pcg64;
+
+/// Gumbel / exponential key helper (exposed for tests and reuse by the
+/// GoLore selector's sub-sampling mode).
+pub struct Gumbel;
+
+impl Gumbel {
+    /// Standard Exp(1) variate.
+    #[inline]
+    pub fn exp1(rng: &mut Pcg64) -> f64 {
+        let u = loop {
+            let u = rng.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln()
+    }
+}
+
+/// Draw `r` distinct indices from `0..weights.len()` with probability
+/// proportional to `weights`, *without replacement*, following the paper's
+/// successive-sampling law. Weights must be non-negative with at least `r`
+/// strictly positive entries; zero-weight items are never selected.
+///
+/// Returns indices in **ascending order** (Algorithm 2 line 5 sorts the
+/// sample so the new basis aligns with optimizer-state columns).
+pub fn sample_weighted_without_replacement(
+    rng: &mut Pcg64,
+    weights: &[f64],
+    r: usize,
+) -> Vec<usize> {
+    let m = weights.len();
+    assert!(r <= m, "rank {r} exceeds number of items {m}");
+    let positive = weights.iter().filter(|&&w| w > 0.0).count();
+    assert!(
+        positive >= r,
+        "need at least {r} positive weights, found {positive}"
+    );
+
+    // (key, index) max-heap of size r over keys E_i / w_i — keep smallest r.
+    // r is small (128-512) so a simple Vec-based heap is plenty.
+    let mut heap: Vec<(f64, usize)> = Vec::with_capacity(r);
+    for (i, &w) in weights.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        let key = Gumbel::exp1(rng) / w;
+        if heap.len() < r {
+            heap.push((key, i));
+            if heap.len() == r {
+                heap.sort_by(|a, b| b.0.total_cmp(&a.0)); // max first
+            }
+        } else if key < heap[0].0 {
+            // replace current max, re-sift (linear insert: r is small and
+            // replacement becomes rare once the heap fills with small keys)
+            heap[0] = (key, i);
+            let mut j = 0;
+            while j + 1 < heap.len() && heap[j].0 < heap[j + 1].0 {
+                heap.swap(j, j + 1);
+                j += 1;
+            }
+        }
+    }
+    let mut idx: Vec<usize> = heap.into_iter().map(|(_, i)| i).collect();
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_sorted_distinct_indices() {
+        let mut rng = Pcg64::new(0);
+        let w = vec![1.0; 20];
+        for _ in 0..50 {
+            let s = sample_weighted_without_replacement(&mut rng, &w, 8);
+            assert_eq!(s.len(), 8);
+            for pair in s.windows(2) {
+                assert!(pair[0] < pair[1], "not sorted-distinct: {s:?}");
+            }
+            assert!(*s.last().unwrap() < 20);
+        }
+    }
+
+    #[test]
+    fn zero_weight_items_never_selected() {
+        let mut rng = Pcg64::new(1);
+        let mut w = vec![1.0; 10];
+        w[3] = 0.0;
+        w[7] = 0.0;
+        for _ in 0..200 {
+            let s = sample_weighted_without_replacement(&mut rng, &w, 5);
+            assert!(!s.contains(&3) && !s.contains(&7));
+        }
+    }
+
+    #[test]
+    fn r_equals_m_returns_everything() {
+        let mut rng = Pcg64::new(2);
+        let w = vec![0.5, 1.0, 2.0, 4.0];
+        let s = sample_weighted_without_replacement(&mut rng, &w, 4);
+        assert_eq!(s, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn first_draw_marginals_match_weights() {
+        // With r=1, P(select i) = w_i / sum(w). Chi-square-ish check.
+        let mut rng = Pcg64::new(3);
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let total: f64 = w.iter().sum();
+        let n = 40_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[sample_weighted_without_replacement(&mut rng, &w, 1)[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p_hat = c as f64 / n as f64;
+            let p = w[i] / total;
+            assert!((p_hat - p).abs() < 0.01, "i={i} p_hat={p_hat} p={p}");
+        }
+    }
+
+    #[test]
+    fn inclusion_probability_increases_with_weight() {
+        // Heavier items must be included more often in an r=2 of 4 sample.
+        let mut rng = Pcg64::new(4);
+        let w = vec![0.1, 0.5, 1.0, 5.0];
+        let n = 20_000;
+        let mut incl = [0usize; 4];
+        for _ in 0..n {
+            for i in sample_weighted_without_replacement(&mut rng, &w, 2) {
+                incl[i] += 1;
+            }
+        }
+        assert!(incl[0] < incl[1] && incl[1] < incl[2] && incl[2] < incl[3]);
+        // dominant item is nearly always in
+        assert!(incl[3] as f64 / n as f64 > 0.9);
+    }
+
+    #[test]
+    fn successive_sampling_law_pairwise() {
+        // For r=2, P((i1,i2) in some order) should match the paper's chain
+        // probability P(a first)P(b | a) + P(b first)P(a | b).
+        let w = [0.5, 0.3, 0.2];
+        let total: f64 = w.iter().sum();
+        let p = |a: usize, b: usize| {
+            let wa = w[a] / total;
+            let wb = w[b] / total;
+            wa * wb / (1.0 - wa) + wb * wa / (1.0 - wb)
+        };
+        let mut rng = Pcg64::new(5);
+        let n = 60_000;
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..n {
+            let s = sample_weighted_without_replacement(&mut rng, &w.to_vec(), 2);
+            *counts.entry((s[0], s[1])).or_insert(0usize) += 1;
+        }
+        for (&(a, b), &c) in &counts {
+            let want = p(a, b);
+            let got = c as f64 / n as f64;
+            assert!(
+                (got - want).abs() < 0.015,
+                "pair ({a},{b}): got {got:.4} want {want:.4}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive weights")]
+    fn panics_without_enough_positive_weights() {
+        let mut rng = Pcg64::new(6);
+        sample_weighted_without_replacement(&mut rng, &[1.0, 0.0, 0.0], 2);
+    }
+}

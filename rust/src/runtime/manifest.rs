@@ -1,0 +1,156 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! and the Rust runtime (parameter order, shapes, kinds, model config).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// What kind of parameter a tensor is (mirrors model.py's ParamSpec.kind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// 2-D attention/MLP weight — eligible for low-rank optimization.
+    Matrix,
+    /// Embedding / LM head — always full-rank (GaLore convention).
+    Dense,
+    /// RMSNorm gain — full-rank, initialized to ones.
+    Norm,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_std: f32,
+    pub kind: ParamKind,
+}
+
+/// Parsed `<model>.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub params: Vec<ParamInfo>,
+    pub tokens_shape: Vec<usize>,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_blocks: usize,
+    pub n_params: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("manifest is not valid JSON")?;
+        let cfg = j.field("config")?;
+        let mut params = Vec::new();
+        for p in j.field("params")?.as_arr()? {
+            let kind = match p.field("kind")?.as_str()? {
+                "matrix" => ParamKind::Matrix,
+                "dense" => ParamKind::Dense,
+                "norm" => ParamKind::Norm,
+                other => bail!("unknown param kind '{other}'"),
+            };
+            params.push(ParamInfo {
+                name: p.field("name")?.as_str()?.to_string(),
+                shape: p
+                    .field("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_>>()?,
+                init_std: p.field("init_std")?.as_f64()? as f32,
+                kind,
+            });
+        }
+        let tokens_shape = j
+            .field("tokens_shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            name: j.field("name")?.as_str()?.to_string(),
+            params,
+            tokens_shape,
+            vocab: cfg.field("vocab")?.as_usize()?,
+            dim: cfg.field("dim")?.as_usize()?,
+            n_blocks: cfg.field("n_blocks")?.as_usize()?,
+            n_params: cfg.field("n_params")?.as_usize()?,
+            seq_len: cfg.field("seq_len")?.as_usize()?,
+            batch: cfg.field("batch")?.as_usize()?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Total f32 parameter count (validates against config.n_params).
+    pub fn count_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Indices of low-rank-eligible (matrix) parameters.
+    pub fn matrix_param_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind == ParamKind::Matrix)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Short layer-type label, e.g. "blocks.3.q_proj" -> "q_proj".
+    pub fn layer_type(name: &str) -> &str {
+        name.rsplit('.').next().unwrap_or(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "name": "test",
+ "config": {"name": "test", "vocab": 256, "dim": 64, "n_blocks": 2,
+            "n_heads": 4, "ffn_dim": 192, "seq_len": 32, "batch": 4,
+            "head_dim": 16, "n_params": 123456},
+ "use_pallas": true,
+ "params": [
+  {"name": "embed", "shape": [256, 64], "init_std": 0.02, "kind": "dense"},
+  {"name": "blocks.0.attn_norm", "shape": [64], "init_std": 0.0, "kind": "norm"},
+  {"name": "blocks.0.q_proj", "shape": [64, 64], "init_std": 0.02, "kind": "matrix"}
+ ],
+ "tokens_shape": [4, 33],
+ "train_outputs": ["loss", "embed", "blocks.0.attn_norm", "blocks.0.q_proj"],
+ "eval_outputs": ["loss"]
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[2].kind, ParamKind::Matrix);
+        assert_eq!(m.tokens_shape, vec![4, 33]);
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.matrix_param_indices(), vec![2]);
+        assert_eq!(m.count_params(), 256 * 64 + 64 + 64 * 64);
+    }
+
+    #[test]
+    fn layer_type_extraction() {
+        assert_eq!(Manifest::layer_type("blocks.3.q_proj"), "q_proj");
+        assert_eq!(Manifest::layer_type("embed"), "embed");
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("\"matrix\"", "\"sparse\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

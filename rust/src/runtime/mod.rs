@@ -1,0 +1,206 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Pattern (from the
+//! verified reference in /opt/xla-example/load_hlo): HLO **text** ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`. Text is the interchange format
+//! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids
+//! in serialized protos.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{Manifest, ParamInfo, ParamKind};
+pub use tensor::{tokens_to_literal, Tensor};
+
+use crate::rng::{fold_seed, Pcg64};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded model: compiled train/eval executables + manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    /// Wallclock spent inside PJRT execute (perf accounting).
+    pub execute_secs: std::cell::Cell<f64>,
+    pub execute_calls: std::cell::Cell<u64>,
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path:?}"))
+}
+
+impl Engine {
+    /// Load `artifacts/<model>.{train,eval}.hlo.txt` + manifest and compile
+    /// both executables on the PJRT CPU client.
+    pub fn load(artifacts_dir: &str, model: &str) -> Result<Self> {
+        let dir = PathBuf::from(artifacts_dir);
+        let manifest = Manifest::load(&dir.join(format!("{model}.manifest.json")))?;
+        if manifest.count_params() != manifest.n_params {
+            bail!(
+                "manifest param count {} != config n_params {}",
+                manifest.count_params(),
+                manifest.n_params
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "runtime",
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let train_exe = compile(&client, &dir.join(format!("{model}.train.hlo.txt")))?;
+        let eval_exe = compile(&client, &dir.join(format!("{model}.eval.hlo.txt")))?;
+        Ok(Self {
+            client,
+            train_exe,
+            eval_exe,
+            manifest,
+            execute_secs: std::cell::Cell::new(0.0),
+            execute_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Initialize parameters per the manifest's init_std (norms -> ones),
+    /// with a per-parameter RNG stream so init is order-independent.
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        self.manifest
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut t = Tensor::zeros(&p.shape);
+                match p.kind {
+                    ParamKind::Norm => t.data.fill(1.0),
+                    _ => {
+                        let mut rng =
+                            Pcg64::with_stream(fold_seed(seed, i as u64), 0x1417);
+                        rng.fill_normal(&mut t.data, p.init_std);
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+
+    fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        params: &[Tensor],
+        tokens: &[i32],
+    ) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.manifest.params.len() {
+            bail!(
+                "expected {} params, got {}",
+                self.manifest.params.len(),
+                params.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(params.len() + 1);
+        for (t, info) in params.iter().zip(&self.manifest.params) {
+            debug_assert_eq!(t.shape, info.shape, "param {} shape", info.name);
+            literals.push(t.to_literal()?);
+        }
+        literals.push(tokens_to_literal(tokens, &self.manifest.tokens_shape)?);
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        self.execute_secs
+            .set(self.execute_secs.get() + t0.elapsed().as_secs_f64());
+        self.execute_calls.set(self.execute_calls.get() + 1);
+        // aot.py lowers with return_tuple=True
+        Ok(out.to_tuple()?)
+    }
+
+    /// One fwd+bwd step: returns (loss, per-parameter gradients).
+    pub fn train_step(
+        &self,
+        params: &[Tensor],
+        tokens: &[i32],
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let outs = self.execute(&self.train_exe, params, tokens)?;
+        if outs.len() != 1 + params.len() {
+            bail!(
+                "train artifact returned {} outputs, expected {}",
+                outs.len(),
+                1 + params.len()
+            );
+        }
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let grads = outs[1..]
+            .iter()
+            .zip(&self.manifest.params)
+            .map(|(lit, info)| Tensor::from_literal(lit, &info.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// Loss-only evaluation step.
+    pub fn eval_loss(&self, params: &[Tensor], tokens: &[i32]) -> Result<f32> {
+        let outs = self.execute(&self.eval_exe, params, tokens)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// Tokens per train batch (batch * (seq_len + 1)).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.manifest.tokens_shape.iter().product()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// A standalone compiled computation (e.g. the fused galore_step artifact).
+pub struct StandaloneExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl StandaloneExe {
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        Ok(Self { exe: compile(client, path)? })
+    }
+
+    pub fn load_cpu(path: &Path) -> Result<(xla::PjRtClient, Self)> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = Self::load(&client, path)?;
+        Ok((client, exe))
+    }
+
+    /// Execute with tensor inputs + optional trailing f32 scalar, returning
+    /// all tuple outputs as tensors with the given shapes.
+    pub fn run(
+        &self,
+        inputs: &[&Tensor],
+        scalar: Option<f32>,
+        out_shapes: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>> {
+        let mut lits = Vec::new();
+        for t in inputs {
+            lits.push(t.to_literal()?);
+        }
+        if let Some(s) = scalar {
+            lits.push(xla::Literal::vec1(&[s]).reshape(&[])?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        if outs.len() != out_shapes.len() {
+            bail!("expected {} outputs, got {}", out_shapes.len(), outs.len());
+        }
+        outs.iter()
+            .zip(out_shapes)
+            .map(|(lit, shape)| Tensor::from_literal(lit, shape))
+            .collect()
+    }
+}

@@ -1,0 +1,138 @@
+//! N-dimensional f32 tensor used at the runtime boundary (model parameters
+//! include 1-D norm weights, so the 2-D [`crate::linalg::Matrix`] is not
+//! enough). Conversion to/from [`xla::Literal`] lives here.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "tensor shape/data mismatch"
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_matrix(&self) -> bool {
+        self.shape.len() == 2
+    }
+
+    /// Borrowing 2-D view as a Matrix (copies data; matrices here are the
+    /// per-layer weights, copied once per optimizer step anyway).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            bail!("tensor of rank {} is not a matrix", self.shape.len());
+        }
+        Ok(Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone()))
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Self {
+        Self { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    /// In-place `self -= delta` (weight update application).
+    pub fn sub_assign(&mut self, delta: &Tensor) {
+        assert_eq!(self.shape, delta.shape);
+        for (a, b) in self.data.iter_mut().zip(&delta.data) {
+            *a -= b;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data
+            .iter()
+            .map(|&x| x as f64 * x as f64)
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    /// Convert to an xla Literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a Literal back (must be f32).
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!(
+                "literal has {} elements, expected shape {:?}",
+                data.len(),
+                shape
+            );
+        }
+        Ok(Tensor::from_vec(shape, data))
+    }
+}
+
+/// Int32 token batch -> Literal of shape [batch, seq].
+pub fn tokens_to_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(tokens).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = Tensor::from_matrix(&m);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.to_matrix().unwrap(), m);
+    }
+
+    #[test]
+    fn sub_assign_applies_updates() {
+        let mut w = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let d = Tensor::from_vec(&[2], vec![0.5, -0.5]);
+        w.sub_assign(&d);
+        assert_eq!(w.data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    fn non_matrix_rejected() {
+        let t = Tensor::zeros(&[4]);
+        assert!(t.to_matrix().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+}

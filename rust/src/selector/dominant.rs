@@ -1,0 +1,68 @@
+//! Dominant-subspace selection — GaLore's choice [ZZC+24]: the projector is
+//! the top-r left singular vectors of the mini-batch gradient. This is the
+//! baseline whose "frozen subspace" failure mode (paper section 3.1) SARA
+//! addresses.
+
+use super::Selector;
+use crate::linalg::{left_singular_vectors, Matrix};
+
+/// Deterministic top-r left-singular-vector selector.
+#[derive(Default)]
+pub struct Dominant;
+
+impl Dominant {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Selector for Dominant {
+    fn name(&self) -> &'static str {
+        "dominant"
+    }
+
+    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
+        let (u, _s) = left_singular_vectors(g);
+        let idx: Vec<usize> = (0..rank.min(u.cols)).collect();
+        u.select_columns(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::*;
+    use super::*;
+    use crate::metrics::overlap;
+
+    #[test]
+    fn recovers_planted_dominant_subspace() {
+        // G has 4 strong directions then a sharp drop; Dominant must span them
+        let spectrum = [10.0, 9.0, 8.0, 7.0, 0.1, 0.05];
+        let g = planted_gradient(16, 40, &spectrum, 0.001, 0);
+        let mut sel = Dominant::new();
+        let p = sel.select(&g, 4);
+        assert_orthonormal(&p);
+        // re-select from the same gradient must be (nearly) identical span
+        let p2 = sel.select(&g, 4);
+        assert!((overlap(&p, &p2) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn projection_captures_top_energy() {
+        let spectrum = [5.0, 4.0, 3.0, 0.01, 0.01];
+        let g = planted_gradient(12, 30, &spectrum, 0.0, 1);
+        let mut sel = Dominant::new();
+        let p = sel.select(&g, 3);
+        // ||P P^T G||_F^2 should be ~ (25+16+9)/(25+16+9+...) of ||G||_F^2
+        let proj = p.matmul(&p.t_matmul(&g));
+        let ratio = (proj.frobenius_norm() / g.frobenius_norm()).powi(2);
+        assert!(ratio > 0.999, "captured energy ratio {ratio}");
+    }
+
+    #[test]
+    fn rank_clamped_to_m() {
+        let g = planted_gradient(6, 20, &[1.0; 6], 0.0, 2);
+        let p = Dominant::new().select(&g, 32);
+        assert_eq!(p.cols, 6);
+    }
+}

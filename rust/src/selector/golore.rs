@@ -1,0 +1,73 @@
+//! GoLore — gradient-independent random low-rank projection [HLH+24b].
+//!
+//! The projector is an orthonormalized Gaussian sketch: `P = QR(Omega).Q`
+//! with `Omega ~ N(0, 1)^{m x r}`. Unbiased in the JL sense, carries the
+//! provable convergence guarantee of Theorem 3.5 with `delta = r/m`, but
+//! ignores gradient information entirely — the baseline SARA beats
+//! empirically (Table 3) while matching its convergence rate.
+
+use super::Selector;
+use crate::linalg::{qr_thin, Matrix};
+use crate::rng::Pcg64;
+
+/// Random-projection selector.
+pub struct GoLore {
+    rng: Pcg64,
+}
+
+impl GoLore {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg64::with_stream(seed, 0x601e) }
+    }
+}
+
+impl Selector for GoLore {
+    fn name(&self) -> &'static str {
+        "golore"
+    }
+
+    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
+        let m = g.rows;
+        let r = rank.min(m);
+        let omega = Matrix::randn(m, r, 1.0, &mut self.rng);
+        qr_thin(&omega).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::*;
+    use super::*;
+    use crate::metrics::overlap;
+
+    #[test]
+    fn projector_is_orthonormal_and_gradient_independent() {
+        let g1 = planted_gradient(16, 32, &[9.0, 1.0], 0.1, 0);
+        let g2 = planted_gradient(16, 32, &[1.0, 9.0], 0.1, 1);
+        let mut a = GoLore::new(5);
+        let mut b = GoLore::new(5);
+        let p1 = a.select(&g1, 4);
+        let p2 = b.select(&g2, 4);
+        assert_orthonormal(&p1);
+        // same seed, different gradients -> identical projector
+        assert_eq!(p1.data, p2.data);
+    }
+
+    #[test]
+    fn adjacent_overlap_matches_r_over_m_in_expectation() {
+        let g = planted_gradient(40, 80, &[1.0; 40], 0.0, 2);
+        let mut sel = GoLore::new(6);
+        let (m, r) = (40usize, 8usize);
+        let mut prev = sel.select(&g, r);
+        let mut acc = 0.0;
+        let trials = 25;
+        for _ in 0..trials {
+            let p = sel.select(&g, r);
+            acc += overlap(&prev, &p);
+            prev = p;
+        }
+        let mean = acc / trials as f64;
+        let expect = r as f64 / m as f64;
+        assert!((mean - expect).abs() < 0.08, "mean={mean} expect={expect}");
+    }
+}

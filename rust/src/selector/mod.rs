@@ -1,0 +1,158 @@
+//! Subspace selection strategies — the axis the paper studies (section 3).
+//!
+//! A [`Selector`] produces, every `tau` steps, an `m x r` matrix `P` with
+//! orthonormal columns that the low-rank optimizer projects gradients onto
+//! (`R = P^T G`). The paper's contribution, [`Sara`], replaces GaLore's
+//! deterministic dominant-subspace choice ([`Dominant`]) with importance
+//! sampling over singular vectors; [`GoLore`] (random projection) and
+//! [`OnlinePca`] [LLCql24] are the competing baselines of Table 3.
+//!
+//! One selector instance is owned per weight matrix (selectors may carry
+//! per-layer state, e.g. online PCA's running basis or SARA's RNG stream).
+
+mod dominant;
+mod golore;
+mod online_pca;
+mod sara;
+
+pub use dominant::Dominant;
+pub use golore::GoLore;
+pub use online_pca::OnlinePca;
+pub use sara::Sara;
+
+use crate::config::SelectorKind;
+use crate::linalg::Matrix;
+use crate::rng::fold_seed;
+
+/// A subspace-selection strategy for one weight matrix.
+pub trait Selector: Send {
+    /// Strategy name for logs/tables.
+    fn name(&self) -> &'static str;
+
+    /// Produce a fresh orthonormal projector `P in R^{m x r}` from the
+    /// current mini-batch gradient `g` (`m x n`, caller guarantees
+    /// `m <= n`). Called every `tau` steps (Algorithm 2, line 2).
+    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix;
+}
+
+/// Instantiate a selector for layer `layer_idx` with a per-layer RNG stream
+/// derived from `seed`.
+pub fn make_selector(
+    kind: SelectorKind,
+    seed: u64,
+    layer_idx: usize,
+) -> Box<dyn Selector> {
+    let layer_seed = fold_seed(seed, layer_idx as u64);
+    match kind {
+        SelectorKind::Dominant => Box::new(Dominant::new()),
+        SelectorKind::Sara => Box::new(Sara::new(layer_seed)),
+        SelectorKind::GoLore => Box::new(GoLore::new(layer_seed)),
+        SelectorKind::OnlinePca => Box::new(OnlinePca::new(layer_seed)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+    use crate::linalg::orthogonality_defect;
+    use crate::rng::Pcg64;
+
+    /// Gradient with a planted spectrum: G = U diag(s) V^T + noise.
+    ///
+    /// The *structure* (U, V, spectrum) is derived from the low 32 bits of
+    /// `seed`; the *noise realization* from the high bits. Passing
+    /// `structure | (t << 32)` models a frozen-subspace gradient stream
+    /// (same true subspace, fresh mini-batch noise each draw).
+    pub fn planted_gradient(
+        m: usize,
+        n: usize,
+        spectrum: &[f32],
+        noise: f32,
+        seed: u64,
+    ) -> Matrix {
+        let structure_seed = seed & 0xffff_ffff;
+        let noise_seed = seed >> 32;
+        let mut rng = Pcg64::new(structure_seed);
+        let (u, _) = crate::linalg::qr_thin(&Matrix::randn(m, m, 1.0, &mut rng));
+        let (v, _) = crate::linalg::qr_thin(&Matrix::randn(n, m, 1.0, &mut rng));
+        let mut us = u.clone();
+        for r in 0..m {
+            for c in 0..m {
+                us.data[r * m + c] *= spectrum.get(c).copied().unwrap_or(0.0);
+            }
+        }
+        let mut g = us.matmul(&v.transpose());
+        if noise > 0.0 {
+            let mut nrng = Pcg64::with_stream(noise_seed, 0x401e);
+            g.add_assign(&Matrix::randn(m, n, noise, &mut nrng));
+        }
+        g
+    }
+
+    pub fn assert_orthonormal(p: &Matrix) {
+        assert!(
+            orthogonality_defect(p) < 1e-4,
+            "projector not orthonormal: defect {}",
+            orthogonality_defect(p)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_util::*;
+    use super::*;
+    use crate::metrics::overlap;
+
+    /// The paper's headline behavioural contrast (Figure 1): on a gradient
+    /// stream with a *stable* dominant subspace, Dominant re-selects nearly
+    /// the same subspace every time (overlap ~1) while SARA explores
+    /// (overlap strictly lower).
+    #[test]
+    fn sara_explores_where_dominant_freezes() {
+        // geometric spectrum: clear (but not degenerate) ordering, so the
+        // top-8 subspace is stable under small mini-batch noise
+        let spectrum: Vec<f32> = (0..32).map(|i| 0.9f32.powi(i)).collect();
+        let mut dom = Dominant::new();
+        let mut sara = Sara::new(7);
+        let r = 8;
+        let mut dom_overlaps = Vec::new();
+        let mut sara_overlaps = Vec::new();
+        let mut prev_dom: Option<Matrix> = None;
+        let mut prev_sara: Option<Matrix> = None;
+        for t in 0..6u64 {
+            // same planted subspace every period, fresh noise realization
+            let g = planted_gradient(32, 96, &spectrum, 0.002, 7 | (t << 32));
+            let pd = dom.select(&g, r);
+            let ps = sara.select(&g, r);
+            assert_orthonormal(&pd);
+            assert_orthonormal(&ps);
+            if let (Some(a), Some(b)) = (&prev_dom, &prev_sara) {
+                dom_overlaps.push(overlap(a, &pd));
+                sara_overlaps.push(overlap(b, &ps));
+            }
+            prev_dom = Some(pd);
+            prev_sara = Some(ps);
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (md, ms) = (mean(&dom_overlaps), mean(&sara_overlaps));
+        assert!(md > 0.95, "dominant should freeze, got {md}");
+        assert!(ms < md - 0.1, "sara should explore: sara={ms} dom={md}");
+    }
+
+    #[test]
+    fn factory_returns_every_kind() {
+        for kind in [
+            crate::config::SelectorKind::Dominant,
+            crate::config::SelectorKind::Sara,
+            crate::config::SelectorKind::GoLore,
+            crate::config::SelectorKind::OnlinePca,
+        ] {
+            let mut s = make_selector(kind, 1, 0);
+            let g = planted_gradient(16, 24, &[4.0, 2.0, 1.0], 0.1, 3);
+            let p = s.select(&g, 4);
+            assert_eq!((p.rows, p.cols), (16, 4));
+            assert_orthonormal(&p);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! SARA — importance **SA**mpling for low-**RA**nk optimization: the
+//! paper's contribution (Algorithm 2).
+//!
+//! Every refresh:
+//!   1. SVD the mini-batch gradient `G = U S V^T`           (line 3)
+//!   2. sample r of the m left singular vectors *without replacement*
+//!      with probabilities `w_i = S_i / sum_j S_j`           (line 4)
+//!   3. sort the sampled indices ascending so the new basis columns align
+//!      with the optimizer-state columns                     (line 5)
+//!   4. `P = U[:, I]`                                        (line 6)
+//!
+//! Lemma 3.3 needs every `p_i > 0`; singular values of real mini-batch
+//! gradients are strictly positive, and the sampler ignores exact zeros
+//! (only mathematically-degenerate gradients produce them), which keeps
+//! `delta = min_i p_i` positive over the sampled support.
+
+use super::Selector;
+use crate::linalg::{left_singular_vectors, Matrix};
+use crate::rng::{sample_weighted_without_replacement, Pcg64};
+
+/// Importance-sampling selector with its own RNG stream.
+pub struct Sara {
+    rng: Pcg64,
+    /// Record of the last sampled index set (exposed for probes/tests).
+    pub last_indices: Vec<usize>,
+}
+
+impl Sara {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg64::with_stream(seed, 0x5a7a), last_indices: Vec::new() }
+    }
+}
+
+impl Selector for Sara {
+    fn name(&self) -> &'static str {
+        "sara"
+    }
+
+    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
+        let (u, s) = left_singular_vectors(g);
+        let m = u.cols;
+        let r = rank.min(m);
+        let total: f64 = s.iter().map(|&x| x as f64).sum();
+        let weights: Vec<f64> = if total > 0.0 {
+            s.iter().map(|&x| x as f64 / total).collect()
+        } else {
+            // zero gradient: fall back to uniform (any subspace is as good)
+            vec![1.0 / m as f64; m]
+        };
+        // guard: if fewer than r strictly-positive weights (rank-deficient
+        // gradient), pad the support with uniform mass on the zero tail so
+        // the sampler stays well-defined.
+        let positive = weights.iter().filter(|&&w| w > 0.0).count();
+        let weights = if positive < r {
+            let eps = 1e-12;
+            weights.iter().map(|&w| w.max(eps)).collect()
+        } else {
+            weights
+        };
+        let idx = sample_weighted_without_replacement(&mut self.rng, &weights, r);
+        self.last_indices = idx.clone();
+        u.select_columns(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::*;
+    use super::*;
+    use crate::metrics::overlap;
+
+    #[test]
+    fn indices_are_sorted_ascending() {
+        let g = planted_gradient(24, 48, &[8., 7., 6., 5., 4., 3., 2., 1.], 0.05, 0);
+        let mut sel = Sara::new(1);
+        for _ in 0..10 {
+            let p = sel.select(&g, 6);
+            assert_orthonormal(&p);
+            for w in sel.last_indices.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_singular_directions_sampled_more_often() {
+        // spectrum with one dominant direction: index 0 must appear in
+        // nearly every sample, flat tail indices far less often.
+        let mut spectrum = vec![0.2f32; 16];
+        spectrum[0] = 50.0;
+        let g = planted_gradient(16, 40, &spectrum, 0.0, 2);
+        let mut sel = Sara::new(3);
+        let trials = 200;
+        let mut count0 = 0;
+        for _ in 0..trials {
+            sel.select(&g, 4);
+            if sel.last_indices.contains(&0) {
+                count0 += 1;
+            }
+        }
+        assert!(count0 as f64 / trials as f64 > 0.97, "{count0}/{trials}");
+    }
+
+    #[test]
+    fn adjacent_overlap_lower_than_dominant_on_frozen_stream() {
+        // direct check of the Figure 1 claim at the selector level
+        let spectrum: Vec<f32> = (0..20).map(|i| (20 - i) as f32).collect();
+        let mut sara = Sara::new(9);
+        let mut prev: Option<Matrix> = None;
+        let mut acc = 0.0;
+        let mut n = 0;
+        for t in 0..8u64 {
+            let g = planted_gradient(20, 60, &spectrum, 0.01, 50 | (t << 32));
+            let p = sara.select(&g, 5);
+            if let Some(q) = &prev {
+                acc += overlap(q, &p);
+                n += 1;
+            }
+            prev = Some(p);
+        }
+        let mean = acc / n as f64;
+        assert!(mean < 0.9, "sara adjacent overlap {mean} should be < 0.9");
+        assert!(mean > 0.1, "but not degenerate either: {mean}");
+    }
+
+    #[test]
+    fn zero_gradient_falls_back_to_uniform() {
+        let g = Matrix::zeros(8, 16);
+        let mut sel = Sara::new(4);
+        let p = sel.select(&g, 3);
+        assert_eq!((p.rows, p.cols), (8, 3));
+        assert_orthonormal(&p);
+    }
+
+    #[test]
+    fn rank_deficient_gradient_pads_support() {
+        // rank-2 gradient but r=4: sampler must still return 4 directions
+        let g = planted_gradient(8, 20, &[3.0, 2.0], 0.0, 5);
+        let mut sel = Sara::new(6);
+        let p = sel.select(&g, 4);
+        assert_eq!(p.cols, 4);
+        assert_orthonormal(&p);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = planted_gradient(12, 24, &[4., 3., 2., 1.], 0.1, 7);
+        let mut a = Sara::new(42);
+        let mut b = Sara::new(42);
+        let pa = a.select(&g, 4);
+        let pb = b.select(&g, 4);
+        assert_eq!(pa.data, pb.data);
+    }
+}

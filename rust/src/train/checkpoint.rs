@@ -1,0 +1,126 @@
+//! Checkpoint format: a tiny self-describing binary container for model
+//! parameters + step counter (magic, version, shapes, little-endian f32).
+//! Used by the trainer's periodic snapshots and the Figure-4 ΔW probes
+//! (spectrum of `W_{28k} - W_{30k}`-style checkpoint diffs).
+
+use crate::runtime::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SARACKP1";
+
+/// Saved training state.
+pub struct Checkpoint {
+    pub step: usize,
+    pub params: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("{path:?}"))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.step as u64).to_le_bytes())?;
+        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for t in &self.params {
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("{path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a SARA checkpoint");
+        }
+        let step = read_u64(&mut r)? as usize;
+        let nparams = read_u32(&mut r)? as usize;
+        if nparams > 1_000_000 {
+            bail!("implausible param count {nparams}");
+        }
+        let mut params = Vec::with_capacity(nparams);
+        for _ in 0..nparams {
+            let rank = read_u32(&mut r)? as usize;
+            if rank > 8 {
+                bail!("implausible tensor rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            let data = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(Self { step, params })
+    }
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sara_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let params = vec![
+            Tensor::from_vec(&[2, 3], vec![1., -2., 3.5, 0., 1e-9, 7.]),
+            Tensor::from_vec(&[4], vec![9., 8., 7., 6.]),
+        ];
+        let ck = Checkpoint { step: 1234, params: params.clone() };
+        let p = tmp("roundtrip.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.params, params);
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let p = tmp("garbage.ckpt");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/x.ckpt")).is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! Training loop: Algorithm 1 of the paper driving the AOT-compiled model.
+//!
+//! Per step: fetch batches from the streaming loaders (one stream per
+//! simulated data-parallel worker), run the compiled fwd+bwd executable per
+//! worker, all-reduce (average) gradients, global-norm clip, then apply one
+//! [`crate::optim::ParamOptimizer`] step per parameter (parallelized across
+//! parameters — the per-layer optimizer work is embarrassingly parallel),
+//! under a warmup+cosine LR schedule. Periodic validation (PPL), subspace
+//! probes, and checkpoints hang off the loop.
+
+pub mod checkpoint;
+pub mod probe;
+pub mod schedule;
+
+pub use checkpoint::Checkpoint;
+pub use probe::{DeltaSpectrumProbe, SubspaceProbe};
+pub use schedule::CosineSchedule;
+
+use crate::config::{RunConfig, WrapperKind};
+use crate::coordinator::allreduce;
+use crate::data::{CorpusProfile, StreamingLoader};
+use crate::linalg::Matrix;
+use crate::optim::ParamOptimizer;
+use crate::runtime::{Engine, ParamKind, Tensor};
+use crate::selector::make_selector;
+use anyhow::Result;
+
+/// Final result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub losses: Vec<f32>,
+    pub val_history: Vec<(usize, f64)>,
+    pub final_val_loss: f64,
+    pub final_ppl: f64,
+    pub optimizer_state_bytes: usize,
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// Optional probe bundle threaded into [`Trainer::train`].
+#[derive(Default)]
+pub struct Probes {
+    pub subspace: Option<SubspaceProbe>,
+    pub delta_spectrum: Option<DeltaSpectrumProbe>,
+    pub delta_spectra_out: Vec<(String, Vec<f32>)>,
+}
+
+/// The L3 trainer for one run configuration.
+pub struct Trainer {
+    pub engine: Engine,
+    pub cfg: RunConfig,
+    pub params: Vec<Tensor>,
+    opts: Vec<ParamOptimizer>,
+    schedule: CosineSchedule,
+    loaders: Vec<StreamingLoader>,
+    val_loader: StreamingLoader,
+    step: usize,
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, cfg: RunConfig) -> Result<Self> {
+        let params = engine.init_params(cfg.seed);
+        let man = &engine.manifest;
+        let mut opts = Vec::with_capacity(man.params.len());
+        for (i, info) in man.params.iter().enumerate() {
+            let (rows, cols) = match info.shape.len() {
+                2 => (info.shape[0], info.shape[1]),
+                1 => (1, info.shape[0]),
+                _ => (1, info.shape.iter().product()),
+            };
+            let use_lowrank = cfg.optim.wrapper != WrapperKind::FullRank
+                && info.kind == ParamKind::Matrix;
+            let opt = if use_lowrank {
+                let sel = make_selector(cfg.optim.selector, cfg.seed, i);
+                ParamOptimizer::low_rank(rows, cols, &cfg.optim, sel)
+            } else {
+                // norms/embeddings (and the full-rank baseline) use the
+                // inner optimizer directly, per GaLore's convention
+                ParamOptimizer::full(rows, cols, &cfg.optim)
+            };
+            opts.push(opt);
+        }
+        let schedule = CosineSchedule::new(
+            cfg.lr,
+            cfg.warmup_steps,
+            cfg.total_steps,
+            cfg.min_lr_ratio,
+        );
+        let profile = CorpusProfile::from_name(&cfg.dataset);
+        let (batch, seqp1) = (man.tokens_shape[0], man.tokens_shape[1]);
+        let workers = cfg.workers.max(1);
+        let loaders = (0..workers)
+            .map(|w| {
+                StreamingLoader::new(
+                    profile, man.vocab, cfg.seed, w as u64, batch, seqp1, 4,
+                )
+            })
+            .collect();
+        // validation stream: far-away stream id, never used for training
+        let val_loader = StreamingLoader::new(
+            profile, man.vocab, cfg.seed, 1_000_000, batch, seqp1, 2,
+        );
+        Ok(Self { engine, cfg, params, opts, schedule, loaders, val_loader, step: 0 })
+    }
+
+    /// Gradient step over all simulated workers: execute the compiled model
+    /// per worker stream, then all-reduce (average).
+    fn compute_gradients(&mut self) -> Result<(f32, Vec<Tensor>)> {
+        let mut worker_grads: Vec<Vec<Tensor>> = Vec::new();
+        let mut losses = Vec::new();
+        for loader in &self.loaders {
+            let batch = loader.next_batch();
+            let (loss, grads) = self.engine.train_step(&self.params, &batch.tokens)?;
+            losses.push(loss);
+            worker_grads.push(grads);
+        }
+        let grads = allreduce::average(worker_grads);
+        let loss = losses.iter().sum::<f32>() / losses.len() as f32;
+        Ok((loss, grads))
+    }
+
+    /// Global-norm gradient clipping (in place). Returns the pre-clip norm.
+    fn clip_gradients(&self, grads: &mut [Tensor]) -> f64 {
+        let norm: f64 = grads
+            .iter()
+            .map(|g| {
+                g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>()
+            })
+            .sum::<f64>()
+            .sqrt();
+        let clip = self.cfg.grad_clip;
+        if clip > 0.0 && norm > clip {
+            let s = (clip / norm) as f32;
+            for g in grads.iter_mut() {
+                g.scale(s);
+            }
+        }
+        norm
+    }
+
+    /// One full optimizer step; returns the train loss.
+    pub fn step_once(&mut self) -> Result<f32> {
+        let (loss, mut grads) = self.compute_gradients()?;
+        self.clip_gradients(&mut grads);
+        let lr = self.schedule.lr(self.step) as f32;
+
+        // per-parameter optimizer updates, parallel over parameters
+        let deltas = parallel_optimizer_step(&mut self.opts, &grads, lr);
+        for (p, d) in self.params.iter_mut().zip(&deltas) {
+            p.sub_assign(d);
+        }
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Validation loss over `eval_batches` held-out batches.
+    pub fn validate(&self) -> Result<f64> {
+        let mut acc = 0.0;
+        let n = self.cfg.eval_batches.max(1);
+        for _ in 0..n {
+            let b = self.val_loader.next_batch();
+            acc += self.engine.eval_loss(&self.params, &b.tokens)? as f64;
+        }
+        Ok(acc / n as f64)
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step
+    }
+
+    /// Recover the engine (compiled executables) for reuse by the next run
+    /// in a sweep — avoids recompiling the HLO per table row.
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+
+    /// Current optimizer-state footprint in bytes (memory table).
+    pub fn optimizer_state_bytes(&self) -> usize {
+        self.opts.iter().map(|o| o.state_bytes()).sum()
+    }
+
+    /// Run the full configured training loop.
+    pub fn train(&mut self, probes: &mut Probes) -> Result<TrainResult> {
+        let t0 = std::time::Instant::now();
+        let execute_at_start = self.engine.execute_secs.get();
+        let mut losses = Vec::with_capacity(self.cfg.total_steps);
+        let mut val_history = Vec::new();
+        let names: Vec<String> = self
+            .engine
+            .manifest
+            .params
+            .iter()
+            .map(|p| p.name.clone())
+            .collect();
+
+        for t in 0..self.cfg.total_steps {
+            let loss = self.step_once()?;
+            losses.push(loss);
+
+            if self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0 {
+                let vl = self.validate()?;
+                val_history.push((t + 1, vl));
+                crate::info!(
+                    "train",
+                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  lr {:.2e}",
+                    t + 1,
+                    loss,
+                    vl,
+                    vl.exp(),
+                    self.schedule.lr(t)
+                );
+            } else if (t + 1) % 50 == 0 {
+                crate::info!(
+                    "train",
+                    "step {:>6}  loss {:.4}  lr {:.2e}",
+                    t + 1,
+                    loss,
+                    self.schedule.lr(t)
+                );
+            }
+
+            // probes
+            if self.cfg.probe_every > 0 && t % self.cfg.probe_every == 0 {
+                if let Some(sp) = probes.subspace.as_mut() {
+                    for (i, opt) in self.opts.iter().enumerate() {
+                        if let Some(p) = opt.projector() {
+                            sp.observe(&names[i], t, p);
+                        }
+                    }
+                }
+            }
+            if let Some(dp) = probes.delta_spectrum.as_mut() {
+                if let Some(spectra) = dp.observe(t, &self.params, &names) {
+                    probes.delta_spectra_out = spectra;
+                }
+            }
+        }
+
+        let final_val = self.validate()?;
+        Ok(TrainResult {
+            losses,
+            val_history,
+            final_val_loss: final_val,
+            final_ppl: final_val.exp(),
+            optimizer_state_bytes: self.optimizer_state_bytes(),
+            steps: self.cfg.total_steps,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            execute_secs: self.engine.execute_secs.get() - execute_at_start,
+        })
+    }
+}
+
+/// Run every parameter's optimizer step, fanning out across threads.
+/// Gradients of 1-D params are viewed as 1 x n matrices.
+pub fn parallel_optimizer_step(
+    opts: &mut [ParamOptimizer],
+    grads: &[Tensor],
+    lr: f32,
+) -> Vec<Tensor> {
+    let n = opts.len();
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n.max(1));
+    let mut out: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+
+    // chunk (opt, grad, slot) triples across scoped threads
+    let mut work: Vec<(&mut ParamOptimizer, &Tensor, &mut Option<Tensor>)> =
+        opts.iter_mut()
+            .zip(grads.iter())
+            .zip(out.iter_mut())
+            .map(|((o, g), s)| (o, g, s))
+            .collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for batch in work.chunks_mut(chunk.max(1)) {
+            scope.spawn(move || {
+                for (opt, grad, slot) in batch.iter_mut() {
+                    let shape = grad.shape.clone();
+                    let g2 = if shape.len() == 2 {
+                        grad.to_matrix().expect("2-D grad")
+                    } else {
+                        Matrix::from_vec(1, grad.numel(), grad.data.clone())
+                    };
+                    let d = opt.step(&g2, lr);
+                    let mut t = Tensor::from_matrix(&d);
+                    t.shape = shape;
+                    **slot = Some(t);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|t| t.expect("delta computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimConfig;
+
+    #[test]
+    fn parallel_step_matches_shapes_and_descends() {
+        let cfg = OptimConfig::default();
+        let mut opts = vec![
+            ParamOptimizer::full(4, 6, &cfg),
+            ParamOptimizer::full(1, 10, &cfg),
+        ];
+        let grads = vec![
+            Tensor::from_vec(&[4, 6], vec![1.0; 24]),
+            Tensor::from_vec(&[10], vec![-1.0; 10]),
+        ];
+        let deltas = parallel_optimizer_step(&mut opts, &grads, 0.1);
+        assert_eq!(deltas[0].shape, vec![4, 6]);
+        assert_eq!(deltas[1].shape, vec![10]);
+        // Adam first step = sign(g) * lr
+        assert!((deltas[0].data[0] - 0.1).abs() < 1e-3);
+        assert!((deltas[1].data[0] + 0.1).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,181 @@
+//! Training-time probes for the paper's figures: per-layer adjacent /
+//! anchor subspace overlap (Figures 1-3, App. F.2-F.3) and checkpointed
+//! weight snapshots for the ΔW spectrum analysis (Figure 4, App. F.1).
+
+use crate::linalg::Matrix;
+use crate::metrics::{normalized_spectrum, AdjacentOverlapTracker};
+use crate::runtime::Tensor;
+use std::collections::HashMap;
+
+/// Per-layer subspace-overlap probe.
+#[derive(Default)]
+pub struct SubspaceProbe {
+    /// layer name -> overlap tracker
+    trackers: HashMap<String, AdjacentOverlapTracker>,
+    /// step at which the anchor is captured (Figure 3b uses 2000)
+    pub anchor_step: Option<usize>,
+}
+
+impl SubspaceProbe {
+    pub fn new(anchor_step: Option<usize>) -> Self {
+        Self { trackers: HashMap::new(), anchor_step }
+    }
+
+    /// Record layer `name`'s current projector at `step`.
+    pub fn observe(&mut self, name: &str, step: usize, p: &Matrix) {
+        let tracker = self.trackers.entry(name.to_string()).or_default();
+        if let Some(anchor_at) = self.anchor_step {
+            if step >= anchor_at && tracker.vs_anchor.is_empty() {
+                // first observation at/after the anchor step becomes the anchor
+                if tracker.adjacent.len() + 1 >= 1 && step >= anchor_at {
+                    tracker.set_anchor(p.clone());
+                }
+            }
+        }
+        tracker.observe(step, p);
+    }
+
+    pub fn layers(&self) -> Vec<&String> {
+        let mut v: Vec<_> = self.trackers.keys().collect();
+        v.sort();
+        v
+    }
+
+    pub fn tracker(&self, name: &str) -> Option<&AdjacentOverlapTracker> {
+        self.trackers.get(name)
+    }
+
+    /// Mean adjacent overlap across all layers (Figure 2's aggregate view).
+    pub fn mean_adjacent_overlap(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .trackers
+            .values()
+            .map(|t| t.mean_adjacent())
+            .filter(|v| v.is_finite())
+            .collect();
+        if vals.is_empty() {
+            return f64::NAN;
+        }
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+
+    /// Aggregate by layer *type* (q_proj, gate_proj, ...) as in Figure 2.
+    pub fn mean_adjacent_by_type(&self) -> Vec<(String, f64)> {
+        let mut acc: HashMap<String, (f64, usize)> = HashMap::new();
+        for (name, t) in &self.trackers {
+            let m = t.mean_adjacent();
+            if !m.is_finite() {
+                continue;
+            }
+            let ty = name.rsplit('.').next().unwrap_or(name).to_string();
+            let e = acc.entry(ty).or_insert((0.0, 0));
+            e.0 += m;
+            e.1 += 1;
+        }
+        let mut out: Vec<(String, f64)> = acc
+            .into_iter()
+            .map(|(k, (s, n))| (k, s / n as f64))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+/// Weight-delta spectrum probe (Figure 4): snapshot weights at two steps,
+/// then report the normalized singular spectrum of the difference.
+pub struct DeltaSpectrumProbe {
+    first: Option<Vec<Tensor>>,
+    pub first_step: usize,
+    pub second_step: usize,
+}
+
+impl DeltaSpectrumProbe {
+    pub fn new(first_step: usize, second_step: usize) -> Self {
+        assert!(first_step < second_step);
+        Self { first: None, first_step, second_step }
+    }
+
+    /// Call every step with the live params; returns spectra when the
+    /// second snapshot fires.
+    pub fn observe(
+        &mut self,
+        step: usize,
+        params: &[Tensor],
+        names: &[String],
+    ) -> Option<Vec<(String, Vec<f32>)>> {
+        if step == self.first_step {
+            self.first = Some(params.to_vec());
+        }
+        if step == self.second_step {
+            let first = self.first.as_ref()?;
+            let mut out = Vec::new();
+            for ((a, b), name) in first.iter().zip(params).zip(names) {
+                if a.shape.len() != 2 {
+                    continue;
+                }
+                let mut d = b.clone();
+                d.add_scaled(a, -1.0);
+                if let Ok(m) = d.to_matrix() {
+                    out.push((name.clone(), normalized_spectrum(&m)));
+                }
+            }
+            return Some(out);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr_thin;
+    use crate::rng::Pcg64;
+
+    fn ortho(m: usize, r: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        qr_thin(&Matrix::randn(m, r, 1.0, &mut rng)).0
+    }
+
+    #[test]
+    fn probe_aggregates_by_layer_type() {
+        let mut probe = SubspaceProbe::new(None);
+        for step in [0, 200, 400] {
+            probe.observe("blocks.0.q_proj", step, &ortho(16, 4, step as u64));
+            probe.observe("blocks.1.q_proj", step, &ortho(16, 4, 50 + step as u64));
+            probe.observe("blocks.0.up_proj", step, &ortho(16, 4, 0)); // frozen
+        }
+        let by_type = probe.mean_adjacent_by_type();
+        let get = |ty: &str| {
+            by_type.iter().find(|(k, _)| k == ty).map(|(_, v)| *v).unwrap()
+        };
+        assert!((get("up_proj") - 1.0).abs() < 1e-5, "frozen layer");
+        assert!(get("q_proj") < 0.9, "random layers explore");
+        assert!(probe.mean_adjacent_overlap().is_finite());
+    }
+
+    #[test]
+    fn anchor_is_captured_at_step() {
+        let mut probe = SubspaceProbe::new(Some(200));
+        probe.observe("l", 0, &ortho(8, 2, 1));
+        probe.observe("l", 200, &ortho(8, 2, 2));
+        probe.observe("l", 400, &ortho(8, 2, 3));
+        let t = probe.tracker("l").unwrap();
+        // anchor vs itself (at 200) + vs 400
+        assert_eq!(t.vs_anchor.len(), 2);
+        assert!((t.vs_anchor[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn delta_spectrum_fires_once() {
+        let mut probe = DeltaSpectrumProbe::new(1, 3);
+        let names = vec!["w".to_string()];
+        let p1 = vec![Tensor::from_vec(&[2, 2], vec![0.0; 4])];
+        let mut p2 = p1.clone();
+        p2[0].data = vec![1.0, 0.0, 0.0, 0.5];
+        assert!(probe.observe(1, &p1, &names).is_none());
+        assert!(probe.observe(2, &p1, &names).is_none());
+        let spectra = probe.observe(3, &p2, &names).unwrap();
+        assert_eq!(spectra.len(), 1);
+        assert!((spectra[0].1[0] - 1.0).abs() < 1e-5);
+    }
+}

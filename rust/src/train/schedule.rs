@@ -1,0 +1,73 @@
+//! Learning-rate schedules (paper Appendix B: linear warmup + cosine decay
+//! to a floor).
+
+/// Warmup-then-cosine schedule.
+#[derive(Clone, Debug)]
+pub struct CosineSchedule {
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// floor as a fraction of peak (GaLore uses 0.1)
+    pub min_ratio: f64,
+}
+
+impl CosineSchedule {
+    pub fn new(peak_lr: f64, warmup: usize, total: usize, min_ratio: f64) -> Self {
+        Self {
+            peak_lr,
+            warmup_steps: warmup,
+            total_steps: total.max(1),
+            min_ratio,
+        }
+    }
+
+    /// LR at 0-based step `t`.
+    pub fn lr(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return self.peak_lr * (t + 1) as f64 / self.warmup_steps as f64;
+        }
+        let span = (self.total_steps.saturating_sub(self.warmup_steps)).max(1);
+        let progress =
+            ((t - self.warmup_steps.min(t)) as f64 / span as f64).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        let floor = self.peak_lr * self.min_ratio;
+        floor + (self.peak_lr - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear_to_peak() {
+        let s = CosineSchedule::new(0.01, 10, 100, 0.1);
+        assert!((s.lr(0) - 0.001).abs() < 1e-12);
+        assert!((s.lr(4) - 0.005).abs() < 1e-12);
+        assert!((s.lr(9) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_to_floor() {
+        let s = CosineSchedule::new(0.01, 10, 100, 0.1);
+        assert!((s.lr(100) - 0.001).abs() < 1e-9);
+        assert!(s.lr(1000) >= 0.001 - 1e-12); // clamped past the end
+    }
+
+    #[test]
+    fn monotone_decreasing_after_warmup() {
+        let s = CosineSchedule::new(0.01, 5, 50, 0.1);
+        let mut prev = f64::MAX;
+        for t in 5..55 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_starts_at_peak() {
+        let s = CosineSchedule::new(0.5, 0, 10, 0.0);
+        assert!((s.lr(0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (criterion is unavailable offline; this is the
+//! small, honest subset we need: warmup, N timed iterations, robust stats).
+//!
+//! Used by every `rust/benches/*.rs` target (`harness = false`) and by the
+//! perf pass in EXPERIMENTS.md §Perf.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>7} iters  mean {:>12}  median {:>12}  p10 {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+        );
+    }
+
+    /// ops/sec at the median.
+    pub fn throughput(&self, per_iter_ops: f64) -> f64 {
+        per_iter_ops / self.median.as_secs_f64()
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: warms up for `warmup`, then times batches until
+/// `measure` wallclock has elapsed (at least 5 samples).
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Honors `SARA_BENCH_FAST=1` (CI / time-boxed runs): shorter warmup
+    /// and measurement windows.
+    pub fn from_env() -> Self {
+        if std::env::var("SARA_BENCH_FAST").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one logical operation and
+    /// return a value (wrapped in `black_box` here to defeat DCE).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // warmup
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < 1 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // measurement: individual samples
+        let mut samples: Vec<Duration> = Vec::new();
+        let meas_start = Instant::now();
+        while meas_start.elapsed() < self.measure || samples.len() < 5 {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            median: samples[n / 2],
+            p10: samples[n / 10],
+            p90: samples[(n * 9) / 10],
+            min: samples[0],
+        };
+        stats.print();
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Single-shot measurement for expensive cases (no warmup, one sample).
+    pub fn once<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        let t0 = Instant::now();
+        black_box(f());
+        let d = t0.elapsed();
+        let stats = BenchStats {
+            name: format!("{name} (single shot)"),
+            iters: 1,
+            mean: d,
+            median: d,
+            p10: d,
+            p90: d,
+            min: d,
+        };
+        stats.print();
+        self.results.push(stats.clone());
+        stats
+    }
+}
+
+/// Print a section header for bench groups.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_produces_sane_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            results: Vec::new(),
+        };
+        let stats = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.p90);
+        assert!(stats.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

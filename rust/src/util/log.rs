@@ -1,0 +1,70 @@
+//! Leveled stderr logger with wallclock-since-start timestamps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // info
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+fn start() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Initialize the start-of-run clock (call early in main).
+pub fn init() {
+    let _ = start();
+}
+
+pub fn log(level: Level, tag: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let lvl = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    eprintln!("[{t:9.3}s {lvl} {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $tag,
+                               &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $tag,
+                               &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $tag,
+                               &format!($($arg)*))
+    };
+}

@@ -1,0 +1,8 @@
+//! Self-contained utility substrate: JSON, CLI parsing, logging, and the
+//! micro-benchmark harness (the build is offline — no serde/clap/criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod table;

@@ -1,0 +1,215 @@
+//! Integration: the python-AOT -> rust-PJRT bridge, end to end.
+//!
+//! Requires `make artifacts` (the `test` model). These tests are the
+//! numeric ground truth for the interchange: the compiled HLO must produce
+//! the same losses/gradients the jax model produces (pytest checks the jax
+//! side against the Pallas oracles; here we check the rust side against
+//! invariants + cross-step consistency).
+
+use sara::runtime::{Engine, Manifest, ParamKind, StandaloneExe, Tensor};
+use std::path::Path;
+
+fn artifacts_dir() -> String {
+    // tests run from the crate root
+    "artifacts".to_string()
+}
+
+fn have_artifacts() -> bool {
+    Path::new(&artifacts_dir()).join("test.train.hlo.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn engine_loads_and_validates_manifest() {
+    require_artifacts!();
+    let engine = Engine::load(&artifacts_dir(), "test").unwrap();
+    let man = &engine.manifest;
+    assert_eq!(man.name, "test");
+    assert_eq!(man.count_params(), man.n_params);
+    assert!(man.matrix_param_indices().len() >= 7 * man.n_blocks);
+    assert_eq!(engine.platform(), "cpu");
+}
+
+#[test]
+fn init_params_match_manifest_shapes_and_kinds() {
+    require_artifacts!();
+    let engine = Engine::load(&artifacts_dir(), "test").unwrap();
+    let params = engine.init_params(1);
+    for (p, info) in params.iter().zip(&engine.manifest.params) {
+        assert_eq!(p.shape, info.shape, "{}", info.name);
+        match info.kind {
+            ParamKind::Norm => assert!(p.data.iter().all(|&x| x == 1.0)),
+            _ => {
+                let std = info.init_std;
+                let emp = (p.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+                    / p.data.len() as f64)
+                    .sqrt();
+                assert!(
+                    (emp - std as f64).abs() < 0.25 * std as f64 + 1e-6,
+                    "{}: emp std {emp} vs {std}",
+                    info.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn train_step_returns_finite_loss_near_log_vocab_and_full_grads() {
+    require_artifacts!();
+    let engine = Engine::load(&artifacts_dir(), "test").unwrap();
+    let params = engine.init_params(2);
+    let tokens: Vec<i32> = (0..engine.tokens_per_batch())
+        .map(|i| (i % engine.manifest.vocab) as i32)
+        .collect();
+    let (loss, grads) = engine.train_step(&params, &tokens).unwrap();
+    assert!(loss.is_finite());
+    // tiny init => near-uniform predictions => loss ~ ln(vocab)
+    let want = (engine.manifest.vocab as f32).ln();
+    assert!((loss - want).abs() < 0.5, "loss {loss} vs ln(V) {want}");
+    assert_eq!(grads.len(), params.len());
+    for (g, info) in grads.iter().zip(&engine.manifest.params) {
+        assert_eq!(g.shape, info.shape);
+        assert!(g.data.iter().all(|x| x.is_finite()), "{}", info.name);
+    }
+    // at least the lm_head gradient must be nonzero
+    assert!(grads.last().unwrap().frobenius_norm() > 0.0);
+}
+
+#[test]
+fn eval_loss_matches_train_loss_on_same_batch() {
+    require_artifacts!();
+    let engine = Engine::load(&artifacts_dir(), "test").unwrap();
+    let params = engine.init_params(3);
+    let tokens: Vec<i32> = (0..engine.tokens_per_batch())
+        .map(|i| ((i * 7 + 3) % engine.manifest.vocab) as i32)
+        .collect();
+    let (train_loss, _) = engine.train_step(&params, &tokens).unwrap();
+    let eval_loss = engine.eval_loss(&params, &tokens).unwrap();
+    assert!(
+        (train_loss - eval_loss).abs() < 1e-4,
+        "train {train_loss} vs eval {eval_loss}"
+    );
+}
+
+#[test]
+fn execution_is_deterministic() {
+    require_artifacts!();
+    let engine = Engine::load(&artifacts_dir(), "test").unwrap();
+    let params = engine.init_params(4);
+    let tokens: Vec<i32> = vec![5; engine.tokens_per_batch()];
+    let (l1, g1) = engine.train_step(&params, &tokens).unwrap();
+    let (l2, g2) = engine.train_step(&params, &tokens).unwrap();
+    assert_eq!(l1, l2);
+    for (a, b) in g1.iter().zip(&g2) {
+        assert_eq!(a.data, b.data);
+    }
+}
+
+#[test]
+fn sgd_on_repeated_batch_reduces_loss_through_pjrt() {
+    require_artifacts!();
+    let engine = Engine::load(&artifacts_dir(), "test").unwrap();
+    let mut params = engine.init_params(5);
+    let tokens: Vec<i32> = (0..engine.tokens_per_batch())
+        .map(|i| ((i * 31 + 1) % engine.manifest.vocab) as i32)
+        .collect();
+    let (first, _) = engine.train_step(&params, &tokens).unwrap();
+    let mut last = first;
+    for _ in 0..8 {
+        let (loss, grads) = engine.train_step(&params, &tokens).unwrap();
+        last = loss;
+        for (p, g) in params.iter_mut().zip(&grads) {
+            p.add_scaled(g, -0.5);
+        }
+    }
+    assert!(last < first, "loss did not descend: {first} -> {last}");
+}
+
+#[test]
+fn fused_galore_step_artifact_matches_rust_math() {
+    require_artifacts!();
+    let stem = "galore_step.64x256x256";
+    let path = Path::new("artifacts").join(format!("{stem}.hlo.txt"));
+    if !path.exists() {
+        eprintln!("skipping: {stem} artifact missing");
+        return;
+    }
+    let (_client, exe) = StandaloneExe::load_cpu(&path).unwrap();
+    let (rank, m, n) = (64usize, 256usize, 256usize);
+    let mut rng = sara::rng::Pcg64::new(0);
+    let mk = |rows: usize, cols: usize, rng: &mut sara::rng::Pcg64| {
+        let mut t = Tensor::zeros(&[rows, cols]);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    };
+    let mm = mk(rank, n, &mut rng);
+    let mut vv = mk(rank, n, &mut rng);
+    for v in &mut vv.data {
+        *v = v.abs();
+    }
+    let g = mk(m, n, &mut rng);
+    // orthonormal P from QR
+    let p_raw = mk(m, rank, &mut rng);
+    let (q, _) = sara::linalg::qr_thin(&p_raw.to_matrix().unwrap());
+    let p = Tensor::from_matrix(&q);
+    let t_step = 3.0f32;
+
+    let outs = exe
+        .run(
+            &[&mm, &vv, &g, &p],
+            Some(t_step),
+            &[vec![rank, n], vec![rank, n], vec![m, n]],
+        )
+        .unwrap();
+
+    // rust-side reference: R = P^T G; fused adam; update = alpha * P N
+    let r = q.t_matmul(&g.to_matrix().unwrap());
+    let (b1, b2, eps, alpha) = (0.9f32, 0.999f32, 1e-8f32, 0.25f32);
+    let c1 = 1.0 / (1.0 - b1.powf(t_step));
+    let c2 = 1.0 / (1.0 - b2.powf(t_step));
+    let mut m2 = Tensor::zeros(&[rank, n]);
+    let mut nmat = sara::linalg::Matrix::zeros(rank, n);
+    for i in 0..rank * n {
+        let mval = b1 * mm.data[i] + (1.0 - b1) * r.data[i];
+        let vval = b2 * vv.data[i] + (1.0 - b2) * r.data[i] * r.data[i];
+        m2.data[i] = mval;
+        nmat.data[i] = (mval * c1) / ((vval * c2).sqrt() + eps);
+    }
+    let mut upd = q.matmul(&nmat);
+    upd.scale(alpha);
+
+    let max_m_err = outs[0]
+        .data
+        .iter()
+        .zip(&m2.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let max_u_err = outs[2]
+        .data
+        .iter()
+        .zip(&upd.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_m_err < 1e-4, "M mismatch {max_m_err}");
+    assert!(max_u_err < 1e-3, "update mismatch {max_u_err}");
+}
+
+#[test]
+fn manifest_rejects_corrupted_param_counts() {
+    require_artifacts!();
+    let text = std::fs::read_to_string(
+        Path::new("artifacts").join("test.manifest.json"),
+    )
+    .unwrap();
+    let broken = text.replace("\"n_params\"", "\"n_params_x\"");
+    assert!(Manifest::parse(&broken).is_err());
+}

@@ -1,0 +1,358 @@
+//! Property-based invariant tests (hand-rolled generators over PCG64 — no
+//! external proptest crate in the offline build). Each property runs many
+//! randomized cases; failures print the case seed for replay.
+
+use sara::config::{InnerOpt, OptimConfig, SelectorKind, WrapperKind};
+use sara::coordinator::allreduce;
+use sara::linalg::{
+    eigh_symmetric, left_singular_vectors, orthogonality_defect, qr_thin,
+    singular_values, Matrix,
+};
+use sara::metrics::overlap;
+use sara::optim::ParamOptimizer;
+use sara::quant::QuantizedTensor;
+use sara::rng::{sample_weighted_without_replacement, Pcg64};
+use sara::runtime::Tensor;
+use sara::selector::{make_selector, Selector};
+use sara::util::json::Json;
+
+const CASES: u64 = 40;
+
+fn rand_dims(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.next_bounded((hi - lo + 1) as u64) as usize
+}
+
+// ---------------------------------------------------------------- linalg
+
+#[test]
+fn prop_qr_reconstructs_and_is_orthonormal() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed);
+        let n = rand_dims(&mut rng, 1, 24);
+        let m = n + rand_dims(&mut rng, 0, 40);
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        let (q, r) = qr_thin(&a);
+        assert!(orthogonality_defect(&q) < 1e-4, "seed {seed}");
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-3, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_svd_energy_conservation() {
+    // sum sigma_i^2 == ||G||_F^2 for every random G
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(100 + seed);
+        let m = rand_dims(&mut rng, 2, 24);
+        let n = m + rand_dims(&mut rng, 0, 30);
+        let g = Matrix::randn(m, n, 0.5, &mut rng);
+        let s = singular_values(&g);
+        let energy: f64 = s.iter().map(|&x| (x as f64).powi(2)).sum();
+        let fro2 = (g.frobenius_norm() as f64).powi(2);
+        assert!(
+            (energy - fro2).abs() < 1e-3 * fro2.max(1e-9),
+            "seed {seed}: {energy} vs {fro2}"
+        );
+    }
+}
+
+#[test]
+fn prop_eigh_eigenpairs_satisfy_definition() {
+    // A v_k ~= w_k v_k for the top eigenpair of random symmetric A
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(200 + seed);
+        let n = rand_dims(&mut rng, 2, 20);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let a = b.gram();
+        let (w, v) = eigh_symmetric(&a, 40);
+        let v0 = Matrix::from_vec(n, 1, v.col(0));
+        let av = a.matmul(&v0);
+        let wv = {
+            let mut x = v0.clone();
+            x.scale(w[0]);
+            x
+        };
+        let scale = w[0].abs().max(1.0);
+        assert!(
+            av.max_abs_diff(&wv) < 2e-3 * scale,
+            "seed {seed}: residual {}",
+            av.max_abs_diff(&wv)
+        );
+    }
+}
+
+#[test]
+fn prop_projection_residual_bound_lemma_3_3() {
+    // Lemma 3.3's mechanism: ||(I - P P^T) G||_F^2 <= ||G||_F^2 always,
+    // and == sum of unselected sigma_i^2 when P comes from G's own SVD.
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(300 + seed);
+        let m = rand_dims(&mut rng, 3, 16);
+        let n = m + rand_dims(&mut rng, 1, 20);
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let r = 1 + rng.next_bounded(m as u64 - 1) as usize;
+        let (u, s) = left_singular_vectors(&g);
+        let idx: Vec<usize> = (0..r).collect();
+        let p = u.select_columns(&idx);
+        let proj = p.matmul(&p.t_matmul(&g));
+        let resid = g.sub(&proj);
+        let resid2 = (resid.frobenius_norm() as f64).powi(2);
+        let g2 = (g.frobenius_norm() as f64).powi(2);
+        assert!(resid2 <= g2 * (1.0 + 1e-4), "seed {seed}");
+        let tail: f64 = s[r..].iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(
+            (resid2 - tail).abs() < 2e-3 * g2.max(1e-9),
+            "seed {seed}: resid {resid2} vs tail {tail}"
+        );
+    }
+}
+
+// -------------------------------------------------------------- sampling
+
+#[test]
+fn prop_sampling_without_replacement_support_and_order() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(400 + seed);
+        let m = rand_dims(&mut rng, 2, 40);
+        let r = 1 + rng.next_bounded(m as u64) as usize;
+        let weights: Vec<f64> =
+            (0..m).map(|_| rng.next_f64() + 1e-3).collect();
+        let s = sample_weighted_without_replacement(&mut rng, &weights, r);
+        assert_eq!(s.len(), r, "seed {seed}");
+        for w in s.windows(2) {
+            assert!(w[0] < w[1], "seed {seed}: not sorted unique {s:?}");
+        }
+        assert!(*s.last().unwrap() < m);
+    }
+}
+
+// -------------------------------------------------------------- selector
+
+#[test]
+fn prop_every_selector_yields_orthonormal_projector() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg64::new(500 + seed);
+        let m = rand_dims(&mut rng, 4, 24);
+        let n = m + rand_dims(&mut rng, 0, 16);
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let r = 1 + rng.next_bounded(m as u64 / 2 + 1) as usize;
+        for kind in [
+            SelectorKind::Dominant,
+            SelectorKind::Sara,
+            SelectorKind::GoLore,
+            SelectorKind::OnlinePca,
+        ] {
+            let mut sel = make_selector(kind, seed, 0);
+            let p = sel.select(&g, r);
+            assert_eq!((p.rows, p.cols), (m, r), "{kind:?} seed {seed}");
+            assert!(
+                orthogonality_defect(&p) < 1e-4,
+                "{kind:?} seed {seed}: defect {}",
+                orthogonality_defect(&p)
+            );
+            // overlap with itself is 1
+            assert!((overlap(&p, &p) - 1.0).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_sara_inclusion_monotone_in_singular_value() {
+    // across many draws, direction 0 (largest sigma) must be included at
+    // least as often as the smallest-sigma direction
+    let mut rng = Pcg64::new(999);
+    let g = {
+        use sara::linalg::qr_thin;
+        let (u, _) = qr_thin(&Matrix::randn(12, 12, 1.0, &mut rng));
+        let (v, _) = qr_thin(&Matrix::randn(30, 12, 1.0, &mut rng));
+        let mut us = u.clone();
+        for r in 0..12 {
+            for c in 0..12 {
+                us.data[r * 12 + c] *= (12 - c) as f32; // descending spectrum
+            }
+        }
+        us.matmul(&v.transpose())
+    };
+    let mut sel = sara::selector::Sara::new(1);
+    let (mut top, mut bottom) = (0usize, 0usize);
+    for _ in 0..300 {
+        sel.select(&g, 4);
+        if sel.last_indices.contains(&0) {
+            top += 1;
+        }
+        if sel.last_indices.contains(&11) {
+            bottom += 1;
+        }
+    }
+    assert!(top > bottom, "top {top} vs bottom {bottom}");
+}
+
+// ------------------------------------------------------------------ optim
+
+#[test]
+fn prop_optimizer_direction_is_finite_and_bounded() {
+    // Adam-family normalized directions are bounded ~O(1/(1-beta1)) even
+    // for wild gradient scales
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg64::new(600 + seed);
+        let rows = rand_dims(&mut rng, 1, 8);
+        let cols = rand_dims(&mut rng, 1, 32);
+        let scale = 10f32.powi(rng.next_bounded(9) as i32 - 4); // 1e-4..1e4
+        let cfg = OptimConfig::default();
+        for inner in [InnerOpt::Adam, InnerOpt::AdamMini, InnerOpt::Adam8bit] {
+            let mut opt = sara::optim::make_state(inner, rows, cols, &cfg);
+            for t in 1..=5 {
+                let g = Matrix::randn(rows, cols, scale, &mut rng);
+                let d = opt.direction(&g, t);
+                for &x in &d.data {
+                    assert!(x.is_finite(), "{inner:?} seed {seed}");
+                    assert!(x.abs() < 20.0, "{inner:?} seed {seed}: {x}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lowrank_update_rank_bounded_by_r() {
+    // GaLore (non-Fira) updates have numerical rank <= r
+    for seed in 0..10 {
+        let mut rng = Pcg64::new(700 + seed);
+        let m = 12;
+        let n = 20;
+        let r = 3;
+        let mut cfg = OptimConfig::default();
+        cfg.wrapper = WrapperKind::GaLore;
+        cfg.rank = r;
+        cfg.update_period = 4;
+        let sel = make_selector(SelectorKind::Sara, seed, 0);
+        let mut opt = ParamOptimizer::low_rank(m, n, &cfg, sel);
+        let mut acc = Matrix::zeros(m, n);
+        for _ in 0..4 {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            acc.add_assign(&opt.step(&g, 0.1));
+        }
+        // within one period the accumulated update stays rank <= r
+        let s = singular_values(&acc);
+        let tail: f32 = s[r..].iter().sum();
+        let total: f32 = s.iter().sum();
+        assert!(
+            tail / total.max(1e-12) < 1e-3,
+            "seed {seed}: rank leak {tail}/{total}"
+        );
+    }
+}
+
+// ------------------------------------------------------------------ quant
+
+#[test]
+fn prop_quantizer_roundtrip_error_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(800 + seed);
+        let n = rand_dims(&mut rng, 1, 2000);
+        let scale = 10f32.powi(rng.next_bounded(7) as i32 - 3);
+        let data: Vec<f32> =
+            (0..n).map(|_| rng.next_normal() as f32 * scale).collect();
+        let q = QuantizedTensor::quantize(&data);
+        let back = q.dequantize();
+        for (i, (&a, &b)) in data.iter().zip(&back).enumerate() {
+            let bound = q.error_bound(i / sara::quant::BLOCK) * 1.0001 + 1e-12;
+            assert!((a - b).abs() <= bound, "seed {seed} i={i}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- coordinator
+
+#[test]
+fn prop_allreduce_mean_invariants() {
+    // mean is permutation-invariant and bounded by min/max of inputs
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(900 + seed);
+        let workers = 1 + rng.next_bounded(8) as usize;
+        let n = rand_dims(&mut rng, 1, 50);
+        let mut grads: Vec<Vec<Tensor>> = Vec::new();
+        for _ in 0..workers {
+            let data: Vec<f32> =
+                (0..n).map(|_| rng.next_normal() as f32).collect();
+            grads.push(vec![Tensor::from_vec(&[n], data)]);
+        }
+        let mut shuffled = grads.clone();
+        rng.shuffle(&mut shuffled);
+        let a = allreduce::average(grads.clone());
+        let b = allreduce::average(shuffled);
+        for (x, y) in a[0].data.iter().zip(&b[0].data) {
+            assert!((x - y).abs() < 1e-5, "seed {seed}");
+        }
+        for j in 0..n {
+            let lo = grads
+                .iter()
+                .map(|g| g[0].data[j])
+                .fold(f32::INFINITY, f32::min);
+            let hi = grads
+                .iter()
+                .map(|g| g[0].data[j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(a[0].data[j] >= lo - 1e-5 && a[0].data[j] <= hi + 1e-5);
+        }
+    }
+}
+
+// ------------------------------------------------------------------ util
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.next_bounded(4) } else { rng.next_bounded(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_normal() * 100.0).round()),
+            3 => {
+                let len = rng.next_bounded(8) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            char::from_u32(0x20 + rng.next_bounded(0x50) as u32)
+                                .unwrap()
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.next_bounded(4)).map(|_| gen(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut obj = sara::util::json::JsonObj::new();
+                for i in 0..rng.next_bounded(4) {
+                    obj.insert(&format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(obj)
+            }
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(1000 + seed);
+        let doc = gen(&mut rng, 3);
+        let text = doc.dump();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, doc, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_overlap_invariant_under_basis_rotation() {
+    // overlap(U, V) depends only on the subspaces: right-multiplying V by
+    // an orthogonal r x r rotation must not change it
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg64::new(1100 + seed);
+        let m = rand_dims(&mut rng, 6, 24);
+        let r = rand_dims(&mut rng, 1, m / 2);
+        let (u, _) = qr_thin(&Matrix::randn(m, r, 1.0, &mut rng));
+        let (v, _) = qr_thin(&Matrix::randn(m, r, 1.0, &mut rng));
+        let (rot, _) = qr_thin(&Matrix::randn(r, r, 1.0, &mut rng));
+        let v_rot = v.matmul(&rot);
+        let a = overlap(&u, &v);
+        let b = overlap(&u, &v_rot);
+        assert!((a - b).abs() < 1e-4, "seed {seed}: {a} vs {b}");
+    }
+}

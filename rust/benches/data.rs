@@ -56,4 +56,5 @@ fn main() {
         text.len() as f64 / stats.median.as_secs_f64() / 1e6,
         words / stats2.median.as_secs_f64() / 1e6
     );
+    b.finish("data");
 }

@@ -2,18 +2,24 @@
 //! layer shapes (512x512 attention / 512x1376 MLP, rank 128):
 //! project R = P^T G, inner Adam update, un-project alpha * P N, and the
 //! full ParamOptimizer step for each wrapper/selector/inner combination.
+//!
+//! Emits `BENCH_hotpath.json` (or `SARA_BENCH_JSON=<path>`) so the perf
+//! trajectory is machine-readable — the `*-into` / `*-par` rows measure
+//! the workspace-reuse and pooled kernels against the allocating baseline.
 
 use sara::config::{InnerOpt, OptimConfig, SelectorKind, WrapperKind};
-use sara::linalg::Matrix;
-use sara::optim::{make_state, ParamOptimizer};
+use sara::linalg::{matmul_into, matmul_into_par, t_matmul_into, Matrix};
+use sara::optim::{make_state, OptState, ParamOptimizer};
 use sara::rng::Pcg64;
 use sara::selector::make_selector;
 use sara::util::bench::{section, Bencher};
+use sara::util::pool::WorkerPool;
 
 fn main() {
     let mut b = Bencher::from_env();
     let mut rng = Pcg64::new(0);
     let (m, n, r) = (512usize, 1376usize, 128usize);
+    let pool = WorkerPool::with_default_threads();
 
     section(format!("projection pipeline pieces ({m}x{n}, rank {r})").as_str());
     let g = Matrix::randn(m, n, 1.0, &mut rng);
@@ -22,14 +28,39 @@ fn main() {
         q
     };
     let rproj = p.t_matmul(&g);
-    b.run("project      R = P^T G", || p.t_matmul(&g));
-    b.run("un-project   U = P N", || p.matmul(&rproj));
+    b.run("project      R = P^T G (alloc)", || p.t_matmul(&g));
+    let mut r_ws = Matrix::zeros(r, n);
+    b.run("project      R = P^T G (into)", || {
+        t_matmul_into(&p, &g, &mut r_ws)
+    });
+    b.run("un-project   U = P N (alloc)", || p.matmul(&rproj));
+    let mut u_ws = Matrix::zeros(m, n);
+    b.run("un-project   U = P N (into)", || {
+        matmul_into(&p, &rproj, &mut u_ws)
+    });
     let cfg = OptimConfig::default();
     let mut adam = make_state(InnerOpt::Adam, r, n, &cfg);
     let mut t = 0usize;
-    b.run("inner adam   N = adam(R)", || {
+    let mut n_ws = Matrix::zeros(r, n);
+    b.run("inner adam   N = adam(R) (into)", || {
         t += 1;
-        adam.direction(&rproj, t)
+        adam.direction_into(&rproj, t, &mut n_ws)
+    });
+
+    section("threaded GEMM (pool built once, row-partitioned)");
+    let big_a = Matrix::randn(m, m, 1.0, &mut rng);
+    let big_b = Matrix::randn(m, n, 1.0, &mut rng);
+    let mut big_c = Matrix::zeros(m, n);
+    b.run(&format!("matmul {m}x{m}x{n} serial"), || {
+        matmul_into(&big_a, &big_b, &mut big_c)
+    });
+    b.run(
+        &format!("matmul {m}x{m}x{n} pool({})", pool.threads()),
+        || matmul_into_par(&pool, &big_a, &big_b, &mut big_c),
+    );
+    b.run(&format!("gram {m}x{n} serial"), || g.gram());
+    b.run(&format!("gram {m}x{n} pool({})", pool.threads()), || {
+        g.gram_par(&pool)
     });
 
     section("full ParamOptimizer.step per method (tau=200 amortized)");
@@ -57,7 +88,8 @@ fn main() {
         let mut opt = ParamOptimizer::low_rank(m, n, &cfg, sel);
         let mut grng = Pcg64::new(3);
         let g = Matrix::randn(m, n, 1.0, &mut grng);
-        b.run(label, || opt.step(&g, 0.01));
+        let mut delta = Matrix::zeros(m, n);
+        b.run(label, || opt.step_into(&g, 0.01, &mut delta));
     }
 
     section("full-rank Adam reference (what GaLore's memory saving costs)");
@@ -65,7 +97,8 @@ fn main() {
         let cfg = OptimConfig::default();
         let mut opt = ParamOptimizer::full(m, n, &cfg);
         let g = Matrix::randn(m, n, 1.0, &mut rng);
-        b.run("fullrank-adam", || opt.step(&g, 0.01));
+        let mut delta = Matrix::zeros(m, n);
+        b.run("fullrank-adam", || opt.step_into(&g, 0.01, &mut delta));
     }
 
     section("selector refresh cost (amortized over tau=200 steps)");
@@ -78,4 +111,8 @@ fn main() {
             stats.median.as_secs_f64() * 1e6 / 200.0
         );
     }
+
+    // the hotpath trajectory is always emitted, even without the env hook
+    println!();
+    b.finish_or("hotpath", "BENCH_hotpath.json");
 }

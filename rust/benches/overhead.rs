@@ -85,4 +85,5 @@ fn main() {
             if ratio < 0.01 { "(<1%, matches paper)" } else { "" },
         );
     }
+    b.finish("overhead");
 }

@@ -59,6 +59,8 @@ fn main() {
             toks / secs,
             100.0 * res.execute_secs / res.wall_secs.max(1e-9),
         );
+        b.record(&format!("trainer 20 steps {label}"), t0.elapsed());
         engine = Some(trainer.into_engine());
     }
+    b.finish("runtime");
 }

@@ -9,6 +9,7 @@
 use sara::config::{InnerOpt, RunConfig, SelectorKind, WrapperKind};
 use sara::runtime::Engine;
 use sara::train::{Probes, Trainer};
+use sara::util::bench::Bencher;
 use std::time::Instant;
 
 fn main() {
@@ -17,6 +18,7 @@ fn main() {
         return;
     }
     let steps = 25usize;
+    let mut bench = Bencher::from_env();
     println!("Table-1 row cost on `test` model ({steps} steps each):\n");
     println!(
         "{:<28} {:>10} {:>12} {:>14} {:>12}",
@@ -50,6 +52,7 @@ fn main() {
         let t0 = Instant::now();
         let res = trainer.train(&mut Probes::default()).unwrap();
         let secs = t0.elapsed().as_secs_f64();
+        bench.record(&format!("table1 row {label}"), t0.elapsed());
         println!(
             "{label:<28} {secs:>10.2} {:>12.2} {:>14.1} {:>12.4}",
             steps as f64 / secs,
@@ -58,4 +61,5 @@ fn main() {
         );
         engine = Some(trainer.into_engine());
     }
+    bench.finish("table1");
 }

@@ -35,3 +35,10 @@ pub mod util;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
+
+/// Test builds count heap allocations so the hot-path zero-allocation
+/// regression tests (see `optim::lowrank`) can observe the steady state.
+#[cfg(test)]
+#[global_allocator]
+static TEST_ALLOCATOR: util::alloc_count::CountingAllocator =
+    util::alloc_count::CountingAllocator;

@@ -1,133 +1,288 @@
 //! GEMM kernels for the optimizer hot path.
 //!
 //! The projection pair `R = P^T G` and `U = P N` dominate L3 compute
-//! between selector refreshes, so these are written as cache-blocked,
-//! unrolled i-k-j loops over row-major storage (the j-innermost form
-//! autovectorizes well with -O3). Multi-threading happens a level up
-//! (the coordinator parallelizes over layers, which is embarrassing),
-//! keeping these kernels allocation-free and simple.
+//! between selector refreshes, so every product here has a workspace-reuse
+//! `_into` entry point that writes into a caller-owned buffer — the
+//! steady-state optimizer step ([`crate::optim::LowRankState`]) allocates
+//! nothing. The serial core is a cache-blocked microkernel: k-panel
+//! blocking (the B panel stays L1/L2-hot), a 4x-unrolled k loop feeding a
+//! j-innermost accumulation (contiguous loads of B and C that autovectorize
+//! with -O3), and a dense inner loop with no data-dependent branches.
+//!
+//! Large products (selector-refresh Gram matrices, bench-scale GEMMs) can
+//! additionally be row-partitioned across a persistent
+//! [`WorkerPool`](crate::util::pool::WorkerPool) via the `_par` variants;
+//! output rows are disjoint per task, so workers never contend. Note that
+//! inside the trainer, selector refreshes already execute *on* pool
+//! workers (parallel across parameters), where a nested `_par` call
+//! degrades to serial by design — the `_par` entry points serve main-thread
+//! callers (probes, standalone SVD sweeps, benches) and the planned
+//! double-buffered refresh pipeline (see ROADMAP "Refresh pipelining").
+//!
+//! The allocating `Matrix` methods are thin wrappers over the `_into`
+//! kernels, so both paths are bit-identical by construction.
 
 use super::Matrix;
+use crate::util::pool::{SendPtr, WorkerPool};
 
 /// Panel size for the k dimension (fits L1 alongside a C-row panel).
 const KC: usize = 256;
 
+/// Rows of C per work-queue item in the `_par` kernels: small enough to
+/// load-balance, large enough to amortize queue traffic.
+const ROW_BLOCK: usize = 16;
+
 impl Matrix {
     /// C = A @ B.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
-        assert_eq!(
-            self.cols, b.rows,
-            "matmul shape mismatch: {}x{} @ {}x{}",
-            self.rows, self.cols, b.rows, b.cols
-        );
         let mut c = Matrix::zeros(self.rows, b.cols);
         matmul_into(self, b, &mut c);
+        c
+    }
+
+    /// C = A @ B, row-partitioned across `pool`.
+    pub fn matmul_par(&self, b: &Matrix, pool: &WorkerPool) -> Matrix {
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        matmul_into_par(pool, self, b, &mut c);
         c
     }
 
     /// C = A^T @ B without materializing A^T (the `R = P^T G` hot path:
     /// A is m x r with r small, so we walk A column-wise).
     pub fn t_matmul(&self, b: &Matrix) -> Matrix {
-        assert_eq!(
-            self.rows, b.rows,
-            "t_matmul shape mismatch: ({}x{})^T @ {}x{}",
-            self.rows, self.cols, b.rows, b.cols
-        );
-        let (m, r) = (self.rows, self.cols);
-        let n = b.cols;
-        let mut c = Matrix::zeros(r, n);
-        // C[i,:] += A[k,i] * B[k,:]  — row-major streaming over both inputs
-        for k in 0..m {
-            let arow = self.row(k);
-            let brow = b.row(k);
-            for i in 0..r {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += a * bv;
-                }
-            }
-        }
+        let mut c = Matrix::zeros(self.cols, b.cols);
+        t_matmul_into(self, b, &mut c);
         c
     }
 
     /// C = A @ B^T without materializing B^T (Gram matrices `G G^T`).
     pub fn matmul_t(&self, b: &Matrix) -> Matrix {
-        assert_eq!(
-            self.cols, b.cols,
-            "matmul_t shape mismatch: {}x{} @ ({}x{})^T",
-            self.rows, self.cols, b.rows, b.cols
-        );
         let mut c = Matrix::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let crow = c.row_mut(i);
-            for j in 0..b.rows {
-                let brow = b.row(j);
-                let mut acc = 0.0f64;
-                for (&x, &y) in arow.iter().zip(brow) {
-                    acc += x as f64 * y as f64;
-                }
-                crow[j] = acc as f32;
-            }
-        }
+        matmul_t_into(self, b, &mut c);
         c
     }
 
     /// Symmetric Gram matrix `self @ self^T` exploiting symmetry (half the
     /// FLOPs of `matmul_t(self, self)`); f64 accumulation for the SVD path.
     pub fn gram(&self) -> Matrix {
-        let m = self.rows;
-        let mut g = Matrix::zeros(m, m);
-        for i in 0..m {
-            let ri = self.row(i);
-            for j in i..m {
-                let rj = self.row(j);
-                let mut acc = 0.0f64;
-                for (&x, &y) in ri.iter().zip(rj) {
-                    acc += x as f64 * y as f64;
-                }
-                let v = acc as f32;
-                g.data[i * m + j] = v;
-                g.data[j * m + i] = v;
-            }
-        }
+        let mut g = Matrix::zeros(self.rows, self.rows);
+        gram_into(self, &mut g);
+        g
+    }
+
+    /// Gram matrix with the row loop spread across `pool` (the selector
+    /// refresh cost at large m).
+    pub fn gram_par(&self, pool: &WorkerPool) -> Matrix {
+        let mut g = Matrix::zeros(self.rows, self.rows);
+        gram_into_par(pool, self, &mut g);
         g
     }
 }
 
-/// C += A @ B into a preallocated buffer (C must be zeroed by the caller if
-/// a fresh product is wanted). Blocked over k to keep the B panel hot.
-pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    debug_assert_eq!(a.cols, b.rows);
-    debug_assert_eq!((c.rows, c.cols), (m, n));
+/// Serial microkernel over a row range: `c_rows[i - lo] = A[i,:] @ B` for
+/// `i in lo..hi`, where `c_rows` holds exactly rows `lo..hi` of C.
+/// Overwrites the output rows.
+fn matmul_rows(a: &Matrix, b: &Matrix, lo: usize, hi: usize, c_rows: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    debug_assert_eq!(c_rows.len(), (hi - lo) * n);
+    c_rows.fill(0.0);
     for kb in (0..k).step_by(KC) {
         let kend = (kb + KC).min(k);
-        for i in 0..m {
+        for i in lo..hi {
             let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for kk in kb..kend {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue;
+            let crow = &mut c_rows[(i - lo) * n..(i - lo + 1) * n];
+            let mut kk = kb;
+            // 4x-unrolled over k: one pass over the C row accumulates four
+            // B rows, quartering C load/store traffic
+            while kk + 4 <= kend {
+                let a0 = arow[kk];
+                let a1 = arow[kk + 1];
+                let a2 = arow[kk + 2];
+                let a3 = arow[kk + 3];
+                let b0 = &b.data[kk * n..kk * n + n];
+                let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
                 }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                // j-innermost: contiguous loads of B and C, autovectorizes
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
+                kk += 4;
             }
+            while kk < kend {
+                let av = arow[kk];
+                let brow = &b.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// C = A @ B into a preallocated buffer (overwrites C).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul output shape");
+    matmul_rows(a, b, 0, a.rows, &mut c.data);
+}
+
+/// C = A @ B with C's rows partitioned across the pool's work queue.
+pub fn matmul_into_par(pool: &WorkerPool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul output shape");
+    let (m, n) = (a.rows, b.cols);
+    if m * n * a.cols < 64 * 64 * 64 {
+        // too small to amortize the broadcast; stay serial
+        matmul_rows(a, b, 0, m, &mut c.data);
+        return;
+    }
+    let base = SendPtr(c.data.as_mut_ptr());
+    let blocks = m.div_ceil(ROW_BLOCK);
+    pool.run_indexed(blocks, |bi| {
+        let lo = bi * ROW_BLOCK;
+        let hi = (lo + ROW_BLOCK).min(m);
+        // Safety: row ranges [lo, hi) are disjoint across queue items.
+        let rows = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * n), (hi - lo) * n)
+        };
+        matmul_rows(a, b, lo, hi, rows);
+    });
+}
+
+/// C = A^T @ B into a preallocated buffer (overwrites C). A is m x r,
+/// B is m x n, C is r x n; both inputs stream row-major.
+pub fn t_matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(
+        a.rows, b.rows,
+        "t_matmul shape mismatch: ({}x{})^T @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "t_matmul output shape");
+    let (m, r) = (a.rows, a.cols);
+    let n = b.cols;
+    c.data.fill(0.0);
+    for kb in (0..m).step_by(KC) {
+        let kend = (kb + KC).min(m);
+        for i in 0..r {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            let mut kk = kb;
+            // A is walked down column i (stride r); B and C stay contiguous
+            while kk + 4 <= kend {
+                let a0 = a.data[kk * r + i];
+                let a1 = a.data[(kk + 1) * r + i];
+                let a2 = a.data[(kk + 2) * r + i];
+                let a3 = a.data[(kk + 3) * r + i];
+                let b0 = &b.data[kk * n..kk * n + n];
+                let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = a.data[kk * r + i];
+                let brow = &b.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// C = A @ B^T into a preallocated buffer (overwrites C); f64 dot-product
+/// accumulation, matching the Gram/SVD path's precision.
+pub fn matmul_t_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(
+        a.cols, b.cols,
+        "matmul_t shape mismatch: {}x{} @ ({}x{})^T",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_t output shape");
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut acc = 0.0f64;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x as f64 * y as f64;
+            }
+            crow[j] = acc as f32;
+        }
+    }
+}
+
+/// Rows `lo..hi` of the upper triangle of `A A^T` (inclusive of the
+/// diagonal), written at their absolute positions in the full m x m output.
+fn gram_rows_upper(a: &Matrix, lo: usize, hi: usize, out: &mut [f32], m: usize) {
+    for i in lo..hi {
+        let ri = a.row(i);
+        for j in i..m {
+            let rj = a.row(j);
+            let mut acc = 0.0f64;
+            for (&x, &y) in ri.iter().zip(rj) {
+                acc += x as f64 * y as f64;
+            }
+            out[(i - lo) * m + j] = acc as f32;
+        }
+    }
+}
+
+/// G = A @ A^T into a preallocated buffer (overwrites G), exploiting
+/// symmetry for half the FLOPs; f64 accumulation.
+pub fn gram_into(a: &Matrix, g: &mut Matrix) {
+    let m = a.rows;
+    assert_eq!((g.rows, g.cols), (m, m), "gram output shape");
+    gram_rows_upper(a, 0, m, &mut g.data, m);
+    mirror_upper(g);
+}
+
+/// G = A @ A^T with rows of the upper triangle spread across the pool.
+pub fn gram_into_par(pool: &WorkerPool, a: &Matrix, g: &mut Matrix) {
+    let m = a.rows;
+    assert_eq!((g.rows, g.cols), (m, m), "gram output shape");
+    if m * m * a.cols < 64 * 64 * 64 {
+        gram_rows_upper(a, 0, m, &mut g.data, m);
+        mirror_upper(g);
+        return;
+    }
+    let base = SendPtr(g.data.as_mut_ptr());
+    let blocks = m.div_ceil(ROW_BLOCK);
+    pool.run_indexed(blocks, |bi| {
+        let lo = bi * ROW_BLOCK;
+        let hi = (lo + ROW_BLOCK).min(m);
+        // Safety: each item writes only rows [lo, hi) of G.
+        let rows = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * m), (hi - lo) * m)
+        };
+        gram_rows_upper(a, lo, hi, rows, m);
+    });
+    mirror_upper(g);
+}
+
+/// Copy the upper triangle into the lower one (serial; O(m^2) copies are
+/// noise next to the O(m^2 n) dot products).
+fn mirror_upper(g: &mut Matrix) {
+    let m = g.rows;
+    for i in 0..m {
+        for j in (i + 1)..m {
+            g.data[j * m + i] = g.data[i * m + j];
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::Matrix;
+    use super::*;
     use crate::rng::Pcg64;
 
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
@@ -180,5 +335,116 @@ mod tests {
         let g = a.gram();
         assert!(g.max_abs_diff(&g.transpose()) == 0.0);
         assert!(g.max_abs_diff(&a.matmul_t(&a)) < 1e-4);
+    }
+
+    /// Property sweep for the `_into` kernels: randomized shapes (odd,
+    /// degenerate, rank-deficient, zero) checked for **bit-level** equality
+    /// against the allocating wrappers and tolerance agreement with the
+    /// naive triple loop.
+    #[test]
+    fn into_kernels_randomized_match_allocating_and_naive() {
+        let mut rng = Pcg64::new(7);
+        for case in 0..40u64 {
+            let m = 1 + (rng.next_bounded(40) as usize);
+            let k = 1 + (rng.next_bounded(70) as usize);
+            let n = 1 + (rng.next_bounded(40) as usize);
+            let (a, b) = match case % 4 {
+                // dense random
+                0 => (
+                    Matrix::randn(m, k, 1.0, &mut rng),
+                    Matrix::randn(k, n, 1.0, &mut rng),
+                ),
+                // zero A
+                1 => (Matrix::zeros(m, k), Matrix::randn(k, n, 1.0, &mut rng)),
+                // rank-1 A (rank-deficient product)
+                2 => {
+                    let u = Matrix::randn(m, 1, 1.0, &mut rng);
+                    let v = Matrix::randn(1, k, 1.0, &mut rng);
+                    (u.matmul(&v), Matrix::randn(k, n, 1.0, &mut rng))
+                }
+                // sparse-ish A with exact zeros (the old kernel branched on
+                // these; the dense kernel must handle them identically)
+                _ => {
+                    let mut a = Matrix::randn(m, k, 1.0, &mut rng);
+                    for v in a.data.iter_mut() {
+                        if rng.next_bounded(2) == 0 {
+                            *v = 0.0;
+                        }
+                    }
+                    (a, Matrix::randn(k, n, 1.0, &mut rng))
+                }
+            };
+
+            // matmul_into: bitwise vs wrapper, tolerance vs naive. The
+            // output buffer starts poisoned to prove overwrite semantics.
+            let mut c = Matrix::from_vec(m, n, vec![f32::NAN; m * n]);
+            matmul_into(&a, &b, &mut c);
+            let via_method = a.matmul(&b);
+            assert_eq!(c.data, via_method.data, "matmul_into bitwise ({m},{k},{n})");
+            assert!(
+                c.max_abs_diff(&naive(&a, &b)) < 1e-3,
+                "matmul_into vs naive ({m},{k},{n})"
+            );
+
+            // t_matmul_into: A^T B with A reinterpreted as k x m? No — use
+            // fresh operands with the required shared leading dim.
+            let at = Matrix::randn(k, m, 1.0, &mut rng);
+            let bt = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut ct = Matrix::from_vec(m, n, vec![f32::NAN; m * n]);
+            t_matmul_into(&at, &bt, &mut ct);
+            assert_eq!(ct.data, at.t_matmul(&bt).data, "t_matmul_into bitwise");
+            assert!(
+                ct.max_abs_diff(&naive(&at.transpose(), &bt)) < 1e-3,
+                "t_matmul_into vs naive ({k},{m},{n})"
+            );
+
+            // matmul_t_into
+            let bt2 = Matrix::randn(n, k, 1.0, &mut rng);
+            let mut cmt = Matrix::from_vec(m, n, vec![f32::NAN; m * n]);
+            matmul_t_into(&a, &bt2, &mut cmt);
+            assert_eq!(cmt.data, a.matmul_t(&bt2).data, "matmul_t_into bitwise");
+            assert!(
+                cmt.max_abs_diff(&naive(&a, &bt2.transpose())) < 1e-3,
+                "matmul_t_into vs naive"
+            );
+
+            // gram_into
+            let mut gg = Matrix::from_vec(m, m, vec![f32::NAN; m * m]);
+            gram_into(&a, &mut gg);
+            assert_eq!(gg.data, a.gram().data, "gram_into bitwise");
+            assert!(gg.max_abs_diff(&gg.transpose()) == 0.0, "gram symmetry");
+        }
+    }
+
+    #[test]
+    fn par_kernels_match_serial() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Pcg64::new(11);
+        for &(m, k, n) in &[(3, 4, 5), (65, 300, 33), (128, 96, 70)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let serial = a.matmul(&b);
+            let par = a.matmul_par(&b, &pool);
+            assert_eq!(serial.data, par.data, "matmul_par ({m},{k},{n})");
+
+            let gs = a.gram();
+            let gp = a.gram_par(&pool);
+            assert_eq!(gs.data, gp.data, "gram_par ({m},{k})");
+        }
+    }
+
+    #[test]
+    fn into_kernels_overwrite_stale_contents() {
+        // workspace reuse depends on overwrite (not accumulate) semantics
+        let mut rng = Pcg64::new(13);
+        let a = Matrix::randn(9, 17, 1.0, &mut rng);
+        let b = Matrix::randn(17, 11, 1.0, &mut rng);
+        let mut c = Matrix::from_vec(9, 11, vec![1e30; 99]);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, a.matmul(&b).data);
+        // run twice into the same buffer: identical result
+        let first = c.clone();
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(first.data, c.data);
     }
 }

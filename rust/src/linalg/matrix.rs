@@ -58,18 +58,29 @@ impl Matrix {
 
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Write `self^T` into a preallocated `cols x rows` buffer (the
+    /// allocation-free hot path for tall-gradient orientation flips).
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.cols, self.rows),
+            "transpose_into output shape"
+        );
         // blocked transpose for cache friendliness on larger matrices
         const B: usize = 32;
         for rb in (0..self.rows).step_by(B) {
             for cb in (0..self.cols).step_by(B) {
                 for r in rb..(rb + B).min(self.rows) {
                     for c in cb..(cb + B).min(self.cols) {
-                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
                     }
                 }
             }
         }
-        t
     }
 
     /// Column `c` as a fresh Vec (used when building `P = U[:, I]`).
@@ -200,5 +211,14 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn from_vec_checks_shape() {
         Matrix::from_vec(2, 2, vec![1.0; 5]);
+    }
+
+    #[test]
+    fn transpose_into_matches_and_overwrites() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::randn(19, 7, 1.0, &mut rng);
+        let mut out = Matrix::from_vec(7, 19, vec![f32::NAN; 7 * 19]);
+        a.transpose_into(&mut out);
+        assert_eq!(out, a.transpose());
     }
 }

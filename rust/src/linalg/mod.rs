@@ -14,9 +14,16 @@ mod qr;
 mod svd;
 
 pub use eigh::{eigh_symmetric, eigh_symmetric_with_threshold};
+pub use matmul::{
+    gram_into, gram_into_par, matmul_into, matmul_into_par, matmul_t_into,
+    t_matmul_into,
+};
 pub use matrix::Matrix;
 pub use qr::{orthogonality_defect, qr_thin};
-pub use svd::{left_singular_vectors, singular_values, svd_thin, SvdResult};
+pub use svd::{
+    left_singular_vectors, left_singular_vectors_pooled, singular_values,
+    singular_values_pooled, svd_thin, SvdResult,
+};
 
 /// Machine-epsilon-scaled tolerance used across the module's tests.
 pub const TEST_EPS: f32 = 1e-4;

@@ -16,44 +16,62 @@ use super::Matrix;
 pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "qr_thin needs rows >= cols, got {m}x{n}");
-    // work in column-major f64 for accumulation
-    let mut q: Vec<Vec<f64>> = (0..n)
-        .map(|j| (0..m).map(|i| a.get(i, j) as f64).collect())
-        .collect();
+    // column-major f64 workspace in one flat allocation (column j lives at
+    // q[j*m .. j*m+m]); a Vec-of-Vecs here cost n+1 allocations per call
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        for i in 0..m {
+            q[j * m + i] = a.get(i, j) as f64;
+        }
+    }
     let mut r = Matrix::zeros(n, n);
 
     for j in 0..n {
-        // two MGS passes against previous columns
+        // two MGS passes against previous columns ("twice is enough")
         for _pass in 0..2 {
             for k in 0..j {
-                let dot: f64 = (0..m).map(|i| q[k][i] * q[j][i]).sum();
+                let (done, rest) = q.split_at_mut(j * m);
+                let qk = &done[k * m..k * m + m];
+                let qj = &mut rest[..m];
+                let dot: f64 = qk.iter().zip(qj.iter()).map(|(x, y)| x * y).sum();
                 r.data[k * n + j] += dot as f32;
                 for i in 0..m {
-                    q[j][i] -= dot * q[k][i];
+                    qj[i] -= dot * qk[i];
                 }
             }
         }
-        let norm: f64 = q[j].iter().map(|x| x * x).sum::<f64>().sqrt();
+        let norm: f64 = q[j * m..j * m + m]
+            .iter()
+            .map(|x| x * x)
+            .sum::<f64>()
+            .sqrt();
         if norm < 1e-10 {
             // collapsed column: substitute a coordinate vector and re-run
             // the orthogonalization against the span built so far
             let pick = j; // e_j is as good as any deterministic choice
             for i in 0..m {
-                q[j][i] = if i == pick { 1.0 } else { 0.0 };
+                q[j * m + i] = if i == pick { 1.0 } else { 0.0 };
             }
             for k in 0..j {
-                let dot: f64 = (0..m).map(|i| q[k][i] * q[j][i]).sum();
+                let (done, rest) = q.split_at_mut(j * m);
+                let qk = &done[k * m..k * m + m];
+                let qj = &mut rest[..m];
+                let dot: f64 = qk.iter().zip(qj.iter()).map(|(x, y)| x * y).sum();
                 for i in 0..m {
-                    q[j][i] -= dot * q[k][i];
+                    qj[i] -= dot * qk[i];
                 }
             }
-            let nn: f64 = q[j].iter().map(|x| x * x).sum::<f64>().sqrt();
-            for v in q[j].iter_mut() {
+            let nn: f64 = q[j * m..j * m + m]
+                .iter()
+                .map(|x| x * x)
+                .sum::<f64>()
+                .sqrt();
+            for v in q[j * m..j * m + m].iter_mut() {
                 *v /= nn.max(1e-30);
             }
             r.data[j * n + j] = 0.0;
         } else {
-            for v in q[j].iter_mut() {
+            for v in q[j * m..j * m + m].iter_mut() {
                 *v /= norm;
             }
             r.data[j * n + j] = norm as f32;
@@ -63,7 +81,7 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
     let mut qm = Matrix::zeros(m, n);
     for j in 0..n {
         for i in 0..m {
-            qm.data[i * n + j] = q[j][i] as f32;
+            qm.data[i * n + j] = q[j * m + i] as f32;
         }
     }
     (qm, r)

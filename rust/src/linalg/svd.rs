@@ -8,6 +8,7 @@
 //! it is recovered as `V = G^T U S^{-1}` per retained component.
 
 use super::{eigh_symmetric, Matrix};
+use crate::util::pool::WorkerPool;
 
 /// Thin SVD result. `u`: m x k, `s`: k (descending), `vt`: k x n (optional).
 pub struct SvdResult {
@@ -24,13 +25,25 @@ const SWEEPS: usize = 30;
 /// the trainer transposes taller-than-wide gradients before calling, which
 /// is also what GaLore does to always project the *short* side).
 pub fn left_singular_vectors(g: &Matrix) -> (Matrix, Vec<f32>) {
+    left_singular_vectors_pooled(g, None)
+}
+
+/// [`left_singular_vectors`] with the Gram matrix (the O(m^2 n) part of a
+/// selector refresh) optionally row-partitioned across a worker pool.
+pub fn left_singular_vectors_pooled(
+    g: &Matrix,
+    pool: Option<&WorkerPool>,
+) -> (Matrix, Vec<f32>) {
     assert!(
         g.rows <= g.cols,
         "left_singular_vectors expects m <= n, got {}x{}",
         g.rows,
         g.cols
     );
-    let gram = g.gram();
+    let gram = match pool {
+        Some(p) => g.gram_par(p),
+        None => g.gram(),
+    };
     let (lam, u) = eigh_symmetric(&gram, SWEEPS);
     let s = lam.iter().map(|&l| l.max(0.0).sqrt()).collect();
     (u, s)
@@ -38,26 +51,40 @@ pub fn left_singular_vectors(g: &Matrix) -> (Matrix, Vec<f32>) {
 
 /// Singular values only.
 pub fn singular_values(g: &Matrix) -> Vec<f32> {
+    singular_values_pooled(g, None)
+}
+
+/// [`singular_values`] with the Gram matrix optionally computed on a
+/// worker pool (the main-thread probe path through
+/// [`crate::metrics::normalized_spectrum_pooled`]).
+pub fn singular_values_pooled(g: &Matrix, pool: Option<&WorkerPool>) -> Vec<f32> {
     if g.rows <= g.cols {
-        left_singular_vectors(g).1
+        left_singular_vectors_pooled(g, pool).1
     } else {
         let t = g.transpose();
-        left_singular_vectors(&t).1
+        left_singular_vectors_pooled(&t, pool).1
     }
 }
 
 /// Thin SVD with the right factor, rank-truncated to `k` components.
 pub fn svd_thin(g: &Matrix, k: usize) -> SvdResult {
     let transposed = g.rows > g.cols;
-    let work = if transposed { g.transpose() } else { g.clone() };
-    let (u_full, s_full) = left_singular_vectors(&work);
+    // borrow when already wide; only the tall orientation pays a transpose
+    let t_storage;
+    let work: &Matrix = if transposed {
+        t_storage = g.transpose();
+        &t_storage
+    } else {
+        g
+    };
+    let (u_full, s_full) = left_singular_vectors(work);
     let k = k.min(work.rows);
     let idx: Vec<usize> = (0..k).collect();
     let u = u_full.select_columns(&idx);
     let s: Vec<f32> = s_full[..k].to_vec();
 
     // V^T = S^{-1} U^T G  (k x n); guard tiny sigmas
-    let ut_g = u.t_matmul(&work);
+    let ut_g = u.t_matmul(work);
     let mut vt = ut_g;
     for (i, &si) in s.iter().enumerate() {
         let inv = if si > 1e-12 { 1.0 / si } else { 0.0 };

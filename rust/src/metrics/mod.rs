@@ -5,7 +5,8 @@
 //! * [`AdjacentOverlapTracker`] / anchor overlap — Figures 1-3, App. F.2/F.3.
 //! * [`normalized_spectrum`] / [`effective_rank`] — Figure 4, App. F.1.
 
-use crate::linalg::{singular_values, Matrix};
+use crate::linalg::{singular_values, singular_values_pooled, Matrix};
+use crate::util::pool::WorkerPool;
 
 /// GARD18 overlap between the column spans of two orthonormal matrices
 /// (`m x r` each). 1.0 = identical subspace, ~r/m for random subspaces.
@@ -37,7 +38,14 @@ pub fn matched_cosine(u: &Matrix, v: &Matrix) -> f64 {
 /// Normalized singular-value profile of a matrix (Figure 4): singular
 /// values divided by the largest one, descending.
 pub fn normalized_spectrum(m: &Matrix) -> Vec<f32> {
-    let s = singular_values(m);
+    normalized_spectrum_pooled(m, None)
+}
+
+/// [`normalized_spectrum`] with the SVD's Gram matrix computed on a worker
+/// pool — the trainer's delta-spectrum probe runs on the main thread while
+/// its step pool is idle, so the probe's large ΔW SVDs scale with cores.
+pub fn normalized_spectrum_pooled(m: &Matrix, pool: Option<&WorkerPool>) -> Vec<f32> {
+    let s = singular_values_pooled(m, pool);
     let top = s.first().copied().unwrap_or(0.0).max(1e-30);
     s.iter().map(|&x| x / top).collect()
 }

@@ -38,8 +38,9 @@ impl OptState for Adafactor {
         "adafactor"
     }
 
-    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+    fn direction_into(&mut self, r: &Matrix, _t: usize, out: &mut Matrix) {
         let (rows, cols) = (r.rows, r.cols);
+        debug_assert_eq!((rows, cols), (out.rows, out.cols));
         self.t += 1;
         let beta2t = 1.0 - (self.t as f32).powf(-0.8);
 
@@ -63,7 +64,6 @@ impl OptState for Adafactor {
             self.vr.iter().sum::<f32>() / rows as f32 + self.eps;
 
         // first moment + normalized direction
-        let mut out = Matrix::zeros(rows, cols);
         let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
         for i in 0..rows {
             let vi = self.vr[i];
@@ -77,7 +77,6 @@ impl OptState for Adafactor {
                 out.data[idx] = (m * c1) / (v.sqrt() + self.eps.sqrt());
             }
         }
-        out
     }
 
     fn reproject(&mut self, c: &Matrix) {

@@ -35,12 +35,12 @@ impl OptState for Adam {
         "adam"
     }
 
-    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+    fn direction_into(&mut self, r: &Matrix, _t: usize, out: &mut Matrix) {
         debug_assert_eq!((r.rows, r.cols), (self.m.rows, self.m.cols));
+        debug_assert_eq!((r.rows, r.cols), (out.rows, out.cols));
         self.t += 1;
         let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
         let c2 = 1.0 / (1.0 - self.beta2.powi(self.t as i32));
-        let mut out = Matrix::zeros(r.rows, r.cols);
         // single fused pass over M, V, R (the layout the L1 Pallas
         // adam_update kernel mirrors on the compiled path)
         for i in 0..r.data.len() {
@@ -51,7 +51,6 @@ impl OptState for Adam {
             self.v.data[i] = v;
             out.data[i] = (m * c1) / ((v * c2).sqrt() + self.eps);
         }
-        out
     }
 
     fn reproject(&mut self, c: &Matrix) {

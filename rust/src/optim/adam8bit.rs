@@ -47,14 +47,14 @@ impl OptState for Adam8bit {
         "adam-8bit"
     }
 
-    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+    fn direction_into(&mut self, r: &Matrix, _t: usize, out: &mut Matrix) {
         debug_assert_eq!((r.rows, r.cols), (self.rows, self.cols));
+        debug_assert_eq!((r.rows, r.cols), (out.rows, out.cols));
         self.t += 1;
         let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
         let c2 = 1.0 / (1.0 - self.beta2.powi(self.t as i32));
         self.m.dequantize_into(&mut self.m_buf);
         self.v.dequantize_into(&mut self.v_buf);
-        let mut out = Matrix::zeros(self.rows, self.cols);
         for i in 0..r.data.len() {
             let g = r.data[i];
             let m = self.beta1 * self.m_buf[i] + (1.0 - self.beta1) * g;
@@ -65,9 +65,9 @@ impl OptState for Adam8bit {
             self.v_buf[i] = v;
             out.data[i] = (m * c1) / ((v * c2).sqrt() + self.eps);
         }
-        self.m = QuantizedTensor::quantize(&self.m_buf);
-        self.v = LogQuantizedTensor::quantize(&self.v_buf);
-        out
+        // requantize in place — no per-step allocation
+        self.m.requantize(&self.m_buf);
+        self.v.requantize(&self.v_buf);
     }
 
     fn reproject(&mut self, c: &Matrix) {

@@ -37,12 +37,12 @@ impl OptState for AdamMini {
         "adam-mini"
     }
 
-    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+    fn direction_into(&mut self, r: &Matrix, _t: usize, out: &mut Matrix) {
         let (rows, cols) = (r.rows, r.cols);
+        debug_assert_eq!((rows, cols), (out.rows, out.cols));
         self.t += 1;
         let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
         let c2 = 1.0 / (1.0 - self.beta2.powi(self.t as i32));
-        let mut out = Matrix::zeros(rows, cols);
         for i in 0..rows {
             let grow = r.row(i);
             let mean_sq =
@@ -58,7 +58,6 @@ impl OptState for AdamMini {
                 orow[j] = (m * c1) / denom;
             }
         }
-        out
     }
 
     fn reproject(&mut self, c: &Matrix) {

@@ -42,6 +42,31 @@ impl FiraResidual {
     pub fn current_ema(&self) -> f32 {
         self.ema
     }
+
+    /// Fused, allocation-free residual add for the workspace hot path:
+    /// `upd += alpha * phi * (work - pr)` in a single pass, where
+    /// `pr = P (P^T G)` is the low-rank reconstruction and `phi` is this
+    /// limiter's scale for the step. Returns `phi`.
+    pub fn accumulate_residual(
+        &mut self,
+        upd: &mut [f32],
+        work: &[f32],
+        pr: &[f32],
+        n_norm: f32,
+        r_norm: f32,
+        alpha: f32,
+    ) -> f32 {
+        debug_assert_eq!(upd.len(), work.len());
+        debug_assert_eq!(upd.len(), pr.len());
+        let phi = self.scale(n_norm, r_norm);
+        let c = alpha * phi;
+        if c != 0.0 {
+            for ((u, &w), &p) in upd.iter_mut().zip(work).zip(pr) {
+                *u += c * (w - p);
+            }
+        }
+        phi
+    }
 }
 
 #[cfg(test)]
@@ -77,5 +102,18 @@ mod tests {
     fn zero_gradient_returns_zero() {
         let mut f = FiraResidual::new(1.01);
         assert_eq!(f.scale(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn accumulate_residual_matches_manual() {
+        let mut f = FiraResidual::new(1.01);
+        let mut upd = vec![1.0f32, 2.0];
+        let work = [3.0f32, 5.0];
+        let pr = [1.0f32, 1.0];
+        // first call: phi = n/r = 0.5, coeff = alpha * phi = 0.25
+        let phi = f.accumulate_residual(&mut upd, &work, &pr, 2.0, 4.0, 0.5);
+        assert!((phi - 0.5).abs() < 1e-6);
+        assert!((upd[0] - 1.5).abs() < 1e-6, "{}", upd[0]);
+        assert!((upd[1] - 3.0).abs() < 1e-6, "{}", upd[1]);
     }
 }

@@ -13,11 +13,49 @@
 //!
 //! Gradients taller than wide are handled by transposing (GaLore projects
 //! the short side, so optimizer state is `r x max(m, n)`).
+//!
+//! ## Workspace discipline
+//!
+//! Every intermediate above (`G^T`, `R`, `N`, `P N`, `P R`) lives in a
+//! [`Workspace`] allocated **once** at construction; [`LowRankState::step_into`]
+//! writes through the `_into` kernels of [`crate::linalg`] and performs
+//! **zero heap allocations** on non-refresh steps (enforced by the
+//! counting-allocator regression test below). Refresh steps (every `tau`)
+//! may allocate inside the selector/SVD — that cost is amortized and
+//! measured separately in `benches/hotpath.rs`.
 
 use super::{make_state, FiraResidual, OptState};
 use crate::config::{OptimConfig, WrapperKind};
-use crate::linalg::Matrix;
+use crate::linalg::{matmul_into, t_matmul_into, Matrix};
 use crate::selector::Selector;
+
+/// Preallocated per-matrix scratch for the steady-state step. All buffers
+/// are sized at construction and reused for the lifetime of the state.
+struct Workspace {
+    /// `G^T` staging for tall gradients (empty when the gradient is wide).
+    tg: Matrix,
+    /// Projected gradient `R = P^T G` (rank x long).
+    r: Matrix,
+    /// Inner-optimizer direction `N` (rank x long).
+    n: Matrix,
+    /// Un-projected update `P N` staged for the final transpose (tall
+    /// orientation only; wide gradients assemble directly in the output).
+    upd: Matrix,
+    /// Fira's low-rank reconstruction `P R` (short x long; empty otherwise).
+    pr: Matrix,
+}
+
+impl Workspace {
+    fn new(short: usize, long: usize, rank: usize, fira: bool, tall: bool) -> Self {
+        Self {
+            tg: if tall { Matrix::zeros(short, long) } else { Matrix::zeros(0, 0) },
+            r: Matrix::zeros(rank, long),
+            n: Matrix::zeros(rank, long),
+            upd: if tall { Matrix::zeros(short, long) } else { Matrix::zeros(0, 0) },
+            pr: if fira { Matrix::zeros(short, long) } else { Matrix::zeros(0, 0) },
+        }
+    }
+}
 
 /// Low-rank optimizer state for one weight matrix.
 pub struct LowRankState {
@@ -26,6 +64,10 @@ pub struct LowRankState {
     selector: Box<dyn Selector>,
     p: Option<Matrix>,
     fira: Option<FiraResidual>,
+    ws: Workspace,
+    /// gradient shape this state was built for (as passed by the trainer)
+    rows: usize,
+    cols: usize,
     t: usize,
     /// number of projector refreshes so far (probe/diagnostic)
     pub refresh_count: usize,
@@ -46,7 +88,19 @@ impl LowRankState {
             WrapperKind::Fira => Some(FiraResidual::new(cfg.fira_limiter)),
             _ => None,
         };
-        Self { cfg: cfg.clone(), state, selector, p: None, fira, t: 0, refresh_count: 0 }
+        let ws = Workspace::new(short, long, rank, fira.is_some(), rows > cols);
+        Self {
+            cfg: cfg.clone(),
+            state,
+            selector,
+            p: None,
+            fira,
+            ws,
+            rows,
+            cols,
+            t: 0,
+            refresh_count: 0,
+        }
     }
 
     /// Current projector (in the *worked* orientation, short-side x rank).
@@ -59,16 +113,26 @@ impl LowRankState {
         self.state.state_bytes() + p_bytes
     }
 
-    /// One optimizer step; returns the weight delta (caller does `W -= dW`).
-    pub fn step(&mut self, g: &Matrix, lr: f32) -> Matrix {
+    /// One optimizer step writing the weight delta into `out` (the caller
+    /// does `W -= out`). Allocation-free on non-refresh steps.
+    pub fn step_into(&mut self, g: &Matrix, lr: f32, out: &mut Matrix) {
+        assert_eq!(
+            (g.rows, g.cols),
+            (self.rows, self.cols),
+            "gradient shape changed under LowRankState"
+        );
+        assert_eq!((out.rows, out.cols), (g.rows, g.cols), "delta shape");
         let transposed = g.rows > g.cols;
-        let work = if transposed { g.transpose() } else { g.clone() };
+        if transposed {
+            g.transpose_into(&mut self.ws.tg);
+        }
+        let work: &Matrix = if transposed { &self.ws.tg } else { g };
         self.t += 1;
 
         // projector refresh every tau steps (Algorithm 2, line 2)
         if (self.t - 1) % self.cfg.update_period == 0 {
             let rank = self.cfg.rank.min(work.rows);
-            let p_new = self.selector.select(&work, rank);
+            let p_new = self.selector.select(work, rank);
             if self.cfg.momentum_reproject {
                 if let Some(p_old) = &self.p {
                     // C = P_new^T P_old maps old-subspace coords to new
@@ -81,26 +145,42 @@ impl LowRankState {
         }
 
         let p = self.p.as_ref().expect("projector set on first step");
-        let r = p.t_matmul(&work); // rank x n
-        let n = self.state.direction(&r, self.t);
-        let mut upd = p.matmul(&n); // m x n
-        upd.scale(self.cfg.alpha);
+        t_matmul_into(p, work, &mut self.ws.r); // R = P^T G  (rank x n)
+        self.state.direction_into(&self.ws.r, self.t, &mut self.ws.n);
+        // wide gradients assemble the update directly in `out`; only the
+        // tall orientation stages it in the workspace for the final
+        // transpose (saves a full m x n copy per step on the common path)
+        let target: &mut Matrix =
+            if transposed { &mut self.ws.upd } else { &mut *out };
+        matmul_into(p, &self.ws.n, target); // U = P N  (m x n)
+        target.scale(self.cfg.alpha);
 
-        if let Some(fira) = &mut self.fira {
-            // residual S = G - P R, scaled by phi = ||N||/||R|| (limited)
-            let mut s = work.clone();
-            let pr = p.matmul(&r);
-            s.add_scaled(&pr, -1.0);
-            let phi = fira.scale(n.frobenius_norm(), r.frobenius_norm());
-            upd.add_scaled(&s, self.cfg.alpha * phi);
+        if let Some(fira) = self.fira.as_mut() {
+            // residual S = G - P R, scaled by phi = ||N||/||R|| (limited),
+            // fused into the update without materializing S
+            matmul_into(p, &self.ws.r, &mut self.ws.pr);
+            fira.accumulate_residual(
+                &mut target.data,
+                &work.data,
+                &self.ws.pr.data,
+                self.ws.n.frobenius_norm(),
+                self.ws.r.frobenius_norm(),
+                self.cfg.alpha,
+            );
         }
 
-        upd.scale(lr);
+        target.scale(lr);
         if transposed {
-            upd.transpose()
-        } else {
-            upd
+            self.ws.upd.transpose_into(out);
         }
+    }
+
+    /// Allocating wrapper over [`LowRankState::step_into`]; returns the
+    /// weight delta (caller does `W -= dW`).
+    pub fn step(&mut self, g: &Matrix, lr: f32) -> Matrix {
+        let mut out = Matrix::zeros(g.rows, g.cols);
+        self.step_into(g, lr, &mut out);
+        out
     }
 }
 
@@ -125,17 +205,24 @@ impl ParamOptimizer {
         ParamOptimizer::LowRank(LowRankState::new(rows, cols, cfg, selector))
     }
 
-    /// One step; returns the delta to subtract from the weights.
-    pub fn step(&mut self, g: &Matrix, lr: f32) -> Matrix {
+    /// One step writing the delta (to subtract from the weights) into
+    /// `out`. Allocation-free in steady state for both variants.
+    pub fn step_into(&mut self, g: &Matrix, lr: f32, out: &mut Matrix) {
         match self {
             ParamOptimizer::Full { state, t } => {
                 *t += 1;
-                let mut d = state.direction(g, *t);
-                d.scale(lr);
-                d
+                state.direction_into(g, *t, out);
+                out.scale(lr);
             }
-            ParamOptimizer::LowRank(lr_state) => lr_state.step(g, lr),
+            ParamOptimizer::LowRank(lr_state) => lr_state.step_into(g, lr, out),
         }
+    }
+
+    /// Allocating wrapper over [`ParamOptimizer::step_into`].
+    pub fn step(&mut self, g: &Matrix, lr: f32) -> Matrix {
+        let mut out = Matrix::zeros(g.rows, g.cols);
+        self.step_into(g, lr, &mut out);
+        out
     }
 
     pub fn state_bytes(&self) -> usize {
@@ -159,6 +246,7 @@ mod tests {
     use crate::config::{InnerOpt, SelectorKind};
     use crate::rng::Pcg64;
     use crate::selector::make_selector;
+    use crate::util::alloc_count::thread_alloc_count;
 
     fn lr_cfg(wrapper: WrapperKind, selector: SelectorKind, rank: usize) -> OptimConfig {
         OptimConfig {
@@ -281,5 +369,79 @@ mod tests {
         assert!(opt.state_bytes() <= 2 * 8 * 512 * 4);
         let full = ParamOptimizer::full(512, 512, &big);
         assert!(full.state_bytes() == 2 * 512 * 512 * 4);
+    }
+
+    #[test]
+    fn step_into_matches_step_exactly() {
+        // the workspace path and the allocating wrapper must be bit-equal
+        for wrapper in [WrapperKind::GaLore, WrapperKind::Fira] {
+            let cfg = lr_cfg(wrapper, SelectorKind::Dominant, 4);
+            let sel_a = make_selector(cfg.selector, 1, 0);
+            let sel_b = make_selector(cfg.selector, 1, 0);
+            let mut a = LowRankState::new(12, 20, &cfg, sel_a);
+            let mut b = LowRankState::new(12, 20, &cfg, sel_b);
+            let mut rng = Pcg64::new(4);
+            let mut out = Matrix::zeros(12, 20);
+            for _ in 0..12 {
+                let g = Matrix::randn(12, 20, 1.0, &mut rng);
+                let d = a.step(&g, 0.05);
+                b.step_into(&g, 0.05, &mut out);
+                assert_eq!(d.data, out.data, "{wrapper:?}");
+            }
+        }
+    }
+
+    /// The ISSUE's acceptance criterion: after warmup, a non-refresh step
+    /// performs **zero** heap allocations, for both the GaLore and Fira
+    /// paths and in both gradient orientations. Relies on the test-only
+    /// counting global allocator (see `util::alloc_count`).
+    #[test]
+    fn steady_state_step_is_allocation_free() {
+        for wrapper in [WrapperKind::GaLore, WrapperKind::Fira] {
+            for (rows, cols) in [(16, 24), (24, 16)] {
+                let mut cfg = lr_cfg(wrapper, SelectorKind::Dominant, 4);
+                cfg.update_period = 10_000; // no refresh during measurement
+                let sel = make_selector(cfg.selector, 1, 0);
+                let mut opt = LowRankState::new(rows, cols, &cfg, sel);
+                let mut rng = Pcg64::new(5);
+                let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+                let mut out = Matrix::zeros(rows, cols);
+                // warmup: first step selects the projector (allocates)
+                for _ in 0..3 {
+                    opt.step_into(&g, 0.01, &mut out);
+                }
+                let before = thread_alloc_count();
+                for _ in 0..50 {
+                    opt.step_into(&g, 0.01, &mut out);
+                }
+                let allocs = thread_alloc_count() - before;
+                assert_eq!(
+                    allocs, 0,
+                    "{wrapper:?} {rows}x{cols}: {allocs} allocations in steady state"
+                );
+            }
+        }
+    }
+
+    /// 8-bit Adam inner state requantizes in place — the full low-rank
+    /// step stays allocation-free even with quantized moments.
+    #[test]
+    fn steady_state_adam8bit_is_allocation_free() {
+        let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Dominant, 4);
+        cfg.inner = InnerOpt::Adam8bit;
+        cfg.update_period = 10_000;
+        let sel = make_selector(cfg.selector, 1, 0);
+        let mut opt = LowRankState::new(16, 24, &cfg, sel);
+        let mut rng = Pcg64::new(6);
+        let g = Matrix::randn(16, 24, 1.0, &mut rng);
+        let mut out = Matrix::zeros(16, 24);
+        for _ in 0..3 {
+            opt.step_into(&g, 0.01, &mut out);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..20 {
+            opt.step_into(&g, 0.01, &mut out);
+        }
+        assert_eq!(thread_alloc_count() - before, 0);
     }
 }

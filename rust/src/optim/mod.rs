@@ -10,6 +10,17 @@
 //!   full-rank (`N` from `G` directly) or low-rank (project `R = P^T G`,
 //!   inner update, un-project `alpha * P N`, optionally + Fira residual),
 //!   including the periodic projector refresh and momentum re-projection.
+//!
+//! ## Hot-path contract
+//!
+//! The per-step entry points are the `_into` forms
+//! ([`OptState::direction_into`], [`ParamOptimizer::step_into`]): they
+//! write into caller-owned buffers and are **allocation-free in steady
+//! state**. [`LowRankState`] owns a preallocated workspace for every
+//! intermediate (`G^T`, `R`, `N`, `P N`, Fira's `P R`), sized once at
+//! construction; only projector-refresh steps (every `tau`) may allocate.
+//! The trainer fans these steps out over a persistent
+//! [`crate::util::pool::WorkerPool`] — see `train`'s module docs.
 
 mod adafactor;
 mod adam;
@@ -35,10 +46,19 @@ use crate::linalg::Matrix;
 pub trait OptState: Send {
     fn name(&self) -> &'static str;
 
-    /// Consume gradient `r` at 1-based step `t`, return the normalized
-    /// update direction (same shape). The caller applies `lr` (and `alpha`
-    /// for low-rank).
-    fn direction(&mut self, r: &Matrix, t: usize) -> Matrix;
+    /// Consume gradient `r` at 1-based step `t`, writing the normalized
+    /// update direction into `out` (same shape). The caller applies `lr`
+    /// (and `alpha` for low-rank). This is the hot-path entry point and
+    /// must be allocation-free in steady state — the per-step workspace
+    /// discipline of [`LowRankState`] depends on it.
+    fn direction_into(&mut self, r: &Matrix, t: usize, out: &mut Matrix);
+
+    /// Allocating convenience wrapper over [`OptState::direction_into`].
+    fn direction(&mut self, r: &Matrix, t: usize) -> Matrix {
+        let mut out = Matrix::zeros(r.rows, r.cols);
+        self.direction_into(r, t, &mut out);
+        out
+    }
 
     /// Momentum re-projection on subspace change: first-moment state `M`
     /// (in old-subspace coordinates) is mapped into the new subspace by

@@ -33,13 +33,14 @@ impl OptState for Msgd {
         "msgd"
     }
 
-    fn direction(&mut self, r: &Matrix, _t: usize) -> Matrix {
+    fn direction_into(&mut self, r: &Matrix, _t: usize, out: &mut Matrix) {
         debug_assert_eq!((r.rows, r.cols), (self.m.rows, self.m.cols));
+        debug_assert_eq!((r.rows, r.cols), (out.rows, out.cols));
         for i in 0..r.data.len() {
             self.m.data[i] =
                 (1.0 - self.beta1) * self.m.data[i] + self.beta1 * r.data[i];
         }
-        self.m.clone()
+        out.data.copy_from_slice(&self.m.data);
     }
 
     fn reproject(&mut self, c: &Matrix) {

@@ -23,25 +23,39 @@ impl QuantizedTensor {
     /// round-to-nearest to the i8 grid.
     pub fn quantize(data: &[f32]) -> Self {
         let len = data.len();
-        let nblocks = len.div_ceil(BLOCK);
-        let mut codes = vec![0i8; len];
-        let mut scales = vec![0f32; nblocks];
+        let mut q = Self {
+            len,
+            codes: vec![0i8; len],
+            scales: vec![0f32; len.div_ceil(BLOCK)],
+        };
+        q.requantize(data);
+        q
+    }
+
+    /// Re-quantize in place, reusing the codes/scales buffers — the
+    /// allocation-free per-step path of the 8-bit Adam state.
+    pub fn requantize(&mut self, data: &[f32]) {
+        assert_eq!(data.len(), self.len, "requantize length mismatch");
+        let nblocks = self.scales.len();
         for b in 0..nblocks {
             let lo = b * BLOCK;
-            let hi = (lo + BLOCK).min(len);
+            let hi = (lo + BLOCK).min(self.len);
             let absmax = data[lo..hi]
                 .iter()
                 .fold(0.0f32, |acc, &x| acc.max(x.abs()));
             let scale = if absmax > 0.0 { absmax / 127.0 } else { 0.0 };
-            scales[b] = scale;
+            self.scales[b] = scale;
             if scale > 0.0 {
                 let inv = 1.0 / scale;
                 for i in lo..hi {
-                    codes[i] = (data[i] * inv).round().clamp(-127.0, 127.0) as i8;
+                    self.codes[i] =
+                        (data[i] * inv).round().clamp(-127.0, 127.0) as i8;
                 }
+            } else {
+                // buffer is reused: stale codes must not survive a zero block
+                self.codes[lo..hi].fill(0);
             }
         }
-        Self { len, codes, scales }
     }
 
     /// Dequantize into a fresh buffer.
@@ -98,24 +112,35 @@ const LOG_RANGE: f32 = 16.0;
 impl LogQuantizedTensor {
     pub fn quantize(data: &[f32]) -> Self {
         let len = data.len();
-        let nblocks = len.div_ceil(BLOCK);
-        let mut codes = vec![0u8; len];
-        let mut scales = vec![0f32; nblocks];
+        let mut q = Self {
+            len,
+            codes: vec![0u8; len],
+            scales: vec![0f32; len.div_ceil(BLOCK)],
+        };
+        q.requantize(data);
+        q
+    }
+
+    /// Re-quantize in place, reusing the codes/scales buffers.
+    pub fn requantize(&mut self, data: &[f32]) {
+        assert_eq!(data.len(), self.len, "requantize length mismatch");
         let step = LOG_RANGE / 254.0; // octaves per code step
-        for b in 0..nblocks {
+        for b in 0..self.scales.len() {
             let lo = b * BLOCK;
-            let hi = (lo + BLOCK).min(len);
+            let hi = (lo + BLOCK).min(self.len);
             let max = data[lo..hi].iter().fold(0.0f32, |a, &x| {
                 debug_assert!(x >= 0.0, "LogQuantizedTensor needs x >= 0");
                 a.max(x)
             });
-            scales[b] = max;
+            self.scales[b] = max;
             if max <= 0.0 {
+                // buffer is reused: stale codes must not survive a zero block
+                self.codes[lo..hi].fill(0);
                 continue;
             }
             for i in lo..hi {
                 let x = data[i];
-                codes[i] = if x <= 0.0 {
+                self.codes[i] = if x <= 0.0 {
                     0
                 } else {
                     // code c in 1..=255 for log2(x/max) in [-RANGE, 0]
@@ -124,7 +149,6 @@ impl LogQuantizedTensor {
                 };
             }
         }
-        Self { len, codes, scales }
     }
 
     pub fn dequantize_into(&self, out: &mut [f32]) {

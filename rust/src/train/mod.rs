@@ -3,10 +3,24 @@
 //! Per step: fetch batches from the streaming loaders (one stream per
 //! simulated data-parallel worker), run the compiled fwd+bwd executable per
 //! worker, all-reduce (average) gradients, global-norm clip, then apply one
-//! [`crate::optim::ParamOptimizer`] step per parameter (parallelized across
-//! parameters — the per-layer optimizer work is embarrassingly parallel),
-//! under a warmup+cosine LR schedule. Periodic validation (PPL), subspace
-//! probes, and checkpoints hang off the loop.
+//! [`crate::optim::ParamOptimizer`] step per parameter under a warmup+cosine
+//! LR schedule. Periodic validation (PPL), subspace probes, and checkpoints
+//! hang off the loop.
+//!
+//! ## Hot-path architecture
+//!
+//! The per-parameter optimizer work is embarrassingly parallel and runs on
+//! a persistent [`WorkerPool`] built **once** in [`Trainer::new`] — no
+//! thread is spawned inside [`Trainer::step_once`]. Parameters are claimed
+//! one at a time off the pool's atomic work queue, so a worker that drew
+//! the embedding-sized gradient never strands the remaining parameters
+//! behind it (the old static chunking did exactly that). Per-parameter
+//! deltas are written into `Matrix` workspaces owned by the trainer and
+//! reused every step; gradients are *borrowed* into the optimizer by
+//! temporarily taking their buffers (1-D and N-D tensors are viewed as
+//! `1 x numel` matrices without copying). Together with the workspace
+//! discipline inside [`crate::optim::LowRankState`], a steady-state
+//! optimizer pass performs no heap allocation.
 
 pub mod checkpoint;
 pub mod probe;
@@ -23,7 +37,9 @@ use crate::linalg::Matrix;
 use crate::optim::ParamOptimizer;
 use crate::runtime::{Engine, ParamKind, Tensor};
 use crate::selector::make_selector;
+use crate::util::pool::{SendPtr, WorkerPool};
 use anyhow::Result;
+use std::sync::OnceLock;
 
 /// Final result of a training run.
 #[derive(Debug, Clone)]
@@ -55,6 +71,12 @@ pub struct Trainer {
     schedule: CosineSchedule,
     loaders: Vec<StreamingLoader>,
     val_loader: StreamingLoader,
+    /// Persistent worker pool — constructed once, reused every step.
+    pool: WorkerPool,
+    /// Per-parameter delta workspaces, reused every step.
+    deltas: Vec<Matrix>,
+    /// Pre-clip global gradient norm of the most recent step.
+    last_grad_norm: f64,
     step: usize,
 }
 
@@ -63,12 +85,9 @@ impl Trainer {
         let params = engine.init_params(cfg.seed);
         let man = &engine.manifest;
         let mut opts = Vec::with_capacity(man.params.len());
+        let mut deltas = Vec::with_capacity(man.params.len());
         for (i, info) in man.params.iter().enumerate() {
-            let (rows, cols) = match info.shape.len() {
-                2 => (info.shape[0], info.shape[1]),
-                1 => (1, info.shape[0]),
-                _ => (1, info.shape.iter().product()),
-            };
+            let (rows, cols) = matrix_dims(&info.shape);
             let use_lowrank = cfg.optim.wrapper != WrapperKind::FullRank
                 && info.kind == ParamKind::Matrix;
             let opt = if use_lowrank {
@@ -80,6 +99,7 @@ impl Trainer {
                 ParamOptimizer::full(rows, cols, &cfg.optim)
             };
             opts.push(opt);
+            deltas.push(Matrix::zeros(rows, cols));
         }
         let schedule = CosineSchedule::new(
             cfg.lr,
@@ -101,7 +121,20 @@ impl Trainer {
         let val_loader = StreamingLoader::new(
             profile, man.vocab, cfg.seed, 1_000_000, batch, seqp1, 2,
         );
-        Ok(Self { engine, cfg, params, opts, schedule, loaders, val_loader, step: 0 })
+        let pool = WorkerPool::with_default_threads();
+        Ok(Self {
+            engine,
+            cfg,
+            params,
+            opts,
+            schedule,
+            loaders,
+            val_loader,
+            pool,
+            deltas,
+            last_grad_norm: 0.0,
+            step: 0,
+        })
     }
 
     /// Gradient step over all simulated workers: execute the compiled model
@@ -142,16 +175,31 @@ impl Trainer {
     /// One full optimizer step; returns the train loss.
     pub fn step_once(&mut self) -> Result<f32> {
         let (loss, mut grads) = self.compute_gradients()?;
-        self.clip_gradients(&mut grads);
+        self.last_grad_norm = self.clip_gradients(&mut grads);
         let lr = self.schedule.lr(self.step) as f32;
 
-        // per-parameter optimizer updates, parallel over parameters
-        let deltas = parallel_optimizer_step(&mut self.opts, &grads, lr);
-        for (p, d) in self.params.iter_mut().zip(&deltas) {
-            p.sub_assign(d);
+        // per-parameter optimizer updates on the persistent pool
+        parallel_optimizer_step_into(
+            &self.pool,
+            &mut self.opts,
+            &mut grads,
+            lr,
+            &mut self.deltas,
+        );
+        for (p, d) in self.params.iter_mut().zip(&self.deltas) {
+            debug_assert_eq!(p.data.len(), d.data.len());
+            for (w, &u) in p.data.iter_mut().zip(&d.data) {
+                *w -= u;
+            }
         }
         self.step += 1;
         Ok(loss)
+    }
+
+    /// Pre-clip global gradient norm of the most recent step (observability
+    /// for clipping activity in long runs).
+    pub fn last_grad_norm(&self) -> f64 {
+        self.last_grad_norm
     }
 
     /// Validation loss over `eval_batches` held-out batches.
@@ -203,19 +251,21 @@ impl Trainer {
                 val_history.push((t + 1, vl));
                 crate::info!(
                     "train",
-                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  lr {:.2e}",
+                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  gnorm {:.3}  lr {:.2e}",
                     t + 1,
                     loss,
                     vl,
                     vl.exp(),
+                    self.last_grad_norm,
                     self.schedule.lr(t)
                 );
             } else if (t + 1) % 50 == 0 {
                 crate::info!(
                     "train",
-                    "step {:>6}  loss {:.4}  lr {:.2e}",
+                    "step {:>6}  loss {:.4}  gnorm {:.3}  lr {:.2e}",
                     t + 1,
                     loss,
+                    self.last_grad_norm,
                     self.schedule.lr(t)
                 );
             }
@@ -231,7 +281,9 @@ impl Trainer {
                 }
             }
             if let Some(dp) = probes.delta_spectrum.as_mut() {
-                if let Some(spectra) = dp.observe(t, &self.params, &names) {
+                if let Some(spectra) =
+                    dp.observe(t, &self.params, &names, Some(&self.pool))
+                {
                     probes.delta_spectra_out = spectra;
                 }
             }
@@ -251,47 +303,94 @@ impl Trainer {
     }
 }
 
-/// Run every parameter's optimizer step, fanning out across threads.
-/// Gradients of 1-D params are viewed as 1 x n matrices.
+/// Matrix view dims for a tensor shape: 2-D as-is, anything else flattened
+/// to `1 x numel` (norm vectors, scalars).
+fn matrix_dims(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        2 => (shape[0], shape[1]),
+        _ => (1, shape.iter().product::<usize>().max(1)),
+    }
+}
+
+/// Run every parameter's optimizer step on `pool`'s work queue, writing
+/// deltas into the caller's reusable `deltas` workspaces (same matrix dims
+/// as the optimizers were constructed with).
+///
+/// Gradients are *borrowed*, not copied: each worker temporarily takes the
+/// tensor's buffer, views it as a matrix (1-D params as `1 x n`), and hands
+/// it back after the step — `grads` is unchanged on return, and the whole
+/// pass is allocation-free.
+pub fn parallel_optimizer_step_into(
+    pool: &WorkerPool,
+    opts: &mut [ParamOptimizer],
+    grads: &mut [Tensor],
+    lr: f32,
+    deltas: &mut [Matrix],
+) {
+    let n = opts.len();
+    assert_eq!(grads.len(), n, "one gradient per optimizer");
+    assert_eq!(deltas.len(), n, "one delta workspace per optimizer");
+
+    // Base pointers shared across the pool (SendPtr carries the safety
+    // contract); each queue index touches only its own element, so access
+    // is disjoint by construction.
+    let opts_ptr = SendPtr(opts.as_mut_ptr());
+    let grads_ptr = SendPtr(grads.as_mut_ptr());
+    let deltas_ptr = SendPtr(deltas.as_mut_ptr());
+    pool.run_indexed(n, |i| {
+        // Safety: index i is claimed by exactly one executor (pool work
+        // queue), and i < n == length of all three slices.
+        let (opt, grad, out) = unsafe {
+            (
+                &mut *opts_ptr.add(i),
+                &mut *grads_ptr.add(i),
+                &mut *deltas_ptr.add(i),
+            )
+        };
+        let (rows, cols) = matrix_dims(&grad.shape);
+        // borrow the gradient buffer as a matrix (no copy)
+        let data = std::mem::take(&mut grad.data);
+        let g = Matrix::from_vec(rows, cols, data);
+        opt.step_into(&g, lr, out);
+        grad.data = g.data;
+    });
+}
+
+/// Pool shared by callers that don't own a [`Trainer`] (examples, benches):
+/// built on first use, reused for the process lifetime.
+fn fallback_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::with_default_threads)
+}
+
+/// Allocating convenience wrapper over [`parallel_optimizer_step_into`]:
+/// runs on a process-wide pool and returns the deltas as tensors shaped
+/// like the gradients. Prefer the `_into` form in loops.
 pub fn parallel_optimizer_step(
     opts: &mut [ParamOptimizer],
     grads: &[Tensor],
     lr: f32,
 ) -> Vec<Tensor> {
-    let n = opts.len();
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n.max(1));
-    let mut out: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
-
-    // chunk (opt, grad, slot) triples across scoped threads
-    let mut work: Vec<(&mut ParamOptimizer, &Tensor, &mut Option<Tensor>)> =
-        opts.iter_mut()
-            .zip(grads.iter())
-            .zip(out.iter_mut())
-            .map(|((o, g), s)| (o, g, s))
-            .collect();
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for batch in work.chunks_mut(chunk.max(1)) {
-            scope.spawn(move || {
-                for (opt, grad, slot) in batch.iter_mut() {
-                    let shape = grad.shape.clone();
-                    let g2 = if shape.len() == 2 {
-                        grad.to_matrix().expect("2-D grad")
-                    } else {
-                        Matrix::from_vec(1, grad.numel(), grad.data.clone())
-                    };
-                    let d = opt.step(&g2, lr);
-                    let mut t = Tensor::from_matrix(&d);
-                    t.shape = shape;
-                    **slot = Some(t);
-                }
-            });
-        }
-    });
-    out.into_iter().map(|t| t.expect("delta computed")).collect()
+    let mut grads_owned: Vec<Tensor> = grads.to_vec();
+    let mut deltas: Vec<Matrix> = grads
+        .iter()
+        .map(|g| {
+            let (r, c) = matrix_dims(&g.shape);
+            Matrix::zeros(r, c)
+        })
+        .collect();
+    parallel_optimizer_step_into(
+        fallback_pool(),
+        opts,
+        &mut grads_owned,
+        lr,
+        &mut deltas,
+    );
+    deltas
+        .into_iter()
+        .zip(grads)
+        .map(|(d, g)| Tensor { shape: g.shape.clone(), data: d.data })
+        .collect()
 }
 
 #[cfg(test)]
@@ -316,5 +415,92 @@ mod tests {
         // Adam first step = sign(g) * lr
         assert!((deltas[0].data[0] - 0.1).abs() < 1e-3);
         assert!((deltas[1].data[0] + 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pool_step_matches_serial_and_preserves_grads() {
+        let cfg = OptimConfig::default();
+        let pool = WorkerPool::new(4);
+        let make = || -> Vec<ParamOptimizer> {
+            vec![
+                ParamOptimizer::full(4, 6, &cfg),
+                ParamOptimizer::full(1, 10, &cfg),
+                ParamOptimizer::full(8, 3, &cfg),
+            ]
+        };
+        let mut pooled = make();
+        let mut serial = make();
+        let grads_src = vec![
+            Tensor::from_vec(&[4, 6], (0..24).map(|i| i as f32 * 0.1).collect()),
+            Tensor::from_vec(&[10], (0..10).map(|i| -(i as f32)).collect()),
+            Tensor::from_vec(&[8, 3], vec![0.5; 24]),
+        ];
+        let mut grads = grads_src.clone();
+        let mut deltas: Vec<Matrix> = grads
+            .iter()
+            .map(|g| {
+                let (r, c) = matrix_dims(&g.shape);
+                Matrix::zeros(r, c)
+            })
+            .collect();
+        for step in 0..5 {
+            parallel_optimizer_step_into(
+                &pool, &mut pooled, &mut grads, 0.1, &mut deltas,
+            );
+            // grads must come back untouched (buffers are only borrowed)
+            for (g, src) in grads.iter().zip(&grads_src) {
+                assert_eq!(g.data, src.data, "step {step}: gradient mutated");
+            }
+            for (i, (opt, g)) in serial.iter_mut().zip(&grads_src).enumerate() {
+                let (r, c) = matrix_dims(&g.shape);
+                let gm = Matrix::from_vec(r, c, g.data.clone());
+                let want = opt.step(&gm, 0.1);
+                assert_eq!(
+                    want.data, deltas[i].data,
+                    "step {step} param {i}: pool != serial"
+                );
+            }
+        }
+    }
+
+    /// Regression for the ISSUE acceptance criterion: the pool is built
+    /// once and every optimizer pass reuses its fixed thread set — work
+    /// must never run on a thread spawned after pool construction.
+    #[test]
+    fn optimizer_pool_is_reused_across_steps() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+
+        let pool = WorkerPool::new(3);
+        let allowed: HashSet<_> = pool
+            .worker_thread_ids()
+            .iter()
+            .copied()
+            .chain([std::thread::current().id()])
+            .collect();
+        let cfg = OptimConfig::default();
+        let mut opts: Vec<ParamOptimizer> =
+            (0..12).map(|_| ParamOptimizer::full(6, 6, &cfg)).collect();
+        let mut grads: Vec<Tensor> = (0..12)
+            .map(|_| Tensor::from_vec(&[6, 6], vec![1.0; 36]))
+            .collect();
+        let mut deltas: Vec<Matrix> =
+            (0..12).map(|_| Matrix::zeros(6, 6)).collect();
+
+        let seen = Mutex::new(HashSet::new());
+        let jobs_before = pool.jobs_completed();
+        for _ in 0..25 {
+            // record which threads touch the work via a probe pass first
+            pool.run_indexed(12, |_| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+            parallel_optimizer_step_into(
+                &pool, &mut opts, &mut grads, 0.01, &mut deltas,
+            );
+        }
+        assert_eq!(pool.jobs_completed() - jobs_before, 50);
+        for id in seen.into_inner().unwrap() {
+            assert!(allowed.contains(&id), "work ran on a freshly spawned thread");
+        }
     }
 }

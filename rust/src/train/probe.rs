@@ -3,8 +3,9 @@
 //! weight snapshots for the ΔW spectrum analysis (Figure 4, App. F.1).
 
 use crate::linalg::Matrix;
-use crate::metrics::{normalized_spectrum, AdjacentOverlapTracker};
+use crate::metrics::{normalized_spectrum_pooled, AdjacentOverlapTracker};
 use crate::runtime::Tensor;
+use crate::util::pool::WorkerPool;
 use std::collections::HashMap;
 
 /// Per-layer subspace-overlap probe.
@@ -96,12 +97,14 @@ impl DeltaSpectrumProbe {
     }
 
     /// Call every step with the live params; returns spectra when the
-    /// second snapshot fires.
+    /// second snapshot fires. The ΔW SVDs run on `pool` when provided
+    /// (the trainer's step pool is idle between steps).
     pub fn observe(
         &mut self,
         step: usize,
         params: &[Tensor],
         names: &[String],
+        pool: Option<&WorkerPool>,
     ) -> Option<Vec<(String, Vec<f32>)>> {
         if step == self.first_step {
             self.first = Some(params.to_vec());
@@ -116,7 +119,7 @@ impl DeltaSpectrumProbe {
                 let mut d = b.clone();
                 d.add_scaled(a, -1.0);
                 if let Ok(m) = d.to_matrix() {
-                    out.push((name.clone(), normalized_spectrum(&m)));
+                    out.push((name.clone(), normalized_spectrum_pooled(&m, pool)));
                 }
             }
             return Some(out);
@@ -172,9 +175,9 @@ mod tests {
         let p1 = vec![Tensor::from_vec(&[2, 2], vec![0.0; 4])];
         let mut p2 = p1.clone();
         p2[0].data = vec![1.0, 0.0, 0.0, 0.5];
-        assert!(probe.observe(1, &p1, &names).is_none());
-        assert!(probe.observe(2, &p1, &names).is_none());
-        let spectra = probe.observe(3, &p2, &names).unwrap();
+        assert!(probe.observe(1, &p1, &names, None).is_none());
+        assert!(probe.observe(2, &p1, &names, None).is_none());
+        let spectra = probe.observe(3, &p2, &names, None).unwrap();
         assert_eq!(spectra.len(), 1);
         assert!((spectra[0].1[0] - 1.0).abs() < 1e-5);
     }

@@ -1,0 +1,51 @@
+//! Per-thread heap-allocation counter backing the zero-allocation
+//! regression tests on the optimizer hot path.
+//!
+//! [`CountingAllocator`] wraps the system allocator and bumps a
+//! thread-local counter on every `alloc`/`alloc_zeroed`/`realloc`. It is
+//! registered as the global allocator **only in test builds** (see
+//! `lib.rs`), so release binaries pay nothing. Counting is per-thread so
+//! the default multi-threaded test runner cannot pollute a test's reading.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations performed by the calling thread since it started
+/// (meaningful only when [`CountingAllocator`] is the global allocator).
+pub fn thread_alloc_count() -> u64 {
+    ALLOC_COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    // try_with: never panic inside the allocator (e.g. during TLS teardown)
+    let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+/// System allocator with per-thread allocation counting.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

@@ -130,6 +130,86 @@ impl Bencher {
         &self.results
     }
 
+    /// Record an externally-timed single measurement (for cases the caller
+    /// times itself, e.g. whole training runs in `benches/table1.rs`).
+    pub fn record(&mut self, name: &str, d: Duration) -> BenchStats {
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: 1,
+            mean: d,
+            median: d,
+            p10: d,
+            p90: d,
+            min: d,
+        };
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Serialize all recorded results as machine-readable JSON
+    /// (`BENCH_*.json` perf-trajectory format: durations in nanoseconds).
+    pub fn to_json(&self, bench_name: &str) -> String {
+        use crate::util::json::{Json, JsonObj};
+        let ns = |d: Duration| Json::Num(d.as_nanos() as f64);
+        let mut root = JsonObj::new();
+        root.insert("bench", Json::Str(bench_name.to_string()));
+        let results = self
+            .results
+            .iter()
+            .map(|s| {
+                let mut o = JsonObj::new();
+                o.insert("name", Json::Str(s.name.clone()));
+                o.insert("iters", Json::Num(s.iters as f64));
+                o.insert("mean_ns", ns(s.mean));
+                o.insert("median_ns", ns(s.median));
+                o.insert("p10_ns", ns(s.p10));
+                o.insert("p90_ns", ns(s.p90));
+                o.insert("min_ns", ns(s.min));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("results", Json::Arr(results));
+        Json::Obj(root).dump()
+    }
+
+    /// Write the JSON results to `path`.
+    pub fn write_json(&self, bench_name: &str, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(bench_name))
+    }
+
+    /// Bench-target epilogue: honor `SARA_BENCH_JSON=<path>` by dumping the
+    /// run's results there (the perf-trajectory hook used by
+    /// `scripts/tier1.sh`). A `{bench}` placeholder in the path expands to
+    /// this target's name, so one env setting covers a full `cargo bench`
+    /// sweep without the five targets overwriting each other. A write
+    /// failure is reported, not fatal.
+    pub fn finish(&self, bench_name: &str) {
+        if let Ok(path) = std::env::var("SARA_BENCH_JSON") {
+            if !path.is_empty() {
+                self.emit_json(bench_name, &path);
+            }
+        }
+    }
+
+    /// Like [`Bencher::finish`], but always emits — to `SARA_BENCH_JSON` if
+    /// set, else to `default_path` (benches whose trajectory must never be
+    /// empty, e.g. hotpath -> `BENCH_hotpath.json`).
+    pub fn finish_or(&self, bench_name: &str, default_path: &str) {
+        let path = std::env::var("SARA_BENCH_JSON")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .unwrap_or_else(|| default_path.to_string());
+        self.emit_json(bench_name, &path);
+    }
+
+    fn emit_json(&self, bench_name: &str, path: &str) {
+        let path = path.replace("{bench}", bench_name);
+        match self.write_json(bench_name, &path) {
+            Ok(()) => println!("bench results written to {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+
     /// Single-shot measurement for expensive cases (no warmup, one sample).
     pub fn once<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
         let t0 = Instant::now();
@@ -176,6 +256,23 @@ mod tests {
         assert!(stats.iters >= 5);
         assert!(stats.min <= stats.median && stats.median <= stats.p90);
         assert!(stats.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn json_output_roundtrips_and_keeps_order() {
+        use crate::util::json::Json;
+        let mut b = Bencher::quick();
+        b.record("alpha", Duration::from_micros(10));
+        b.record("beta", Duration::from_millis(2));
+        let j = Json::parse(&b.to_json("unit")).unwrap();
+        assert_eq!(j.field("bench").unwrap().as_str().unwrap(), "unit");
+        let rs = j.field("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].field("name").unwrap().as_str().unwrap(), "alpha");
+        assert_eq!(
+            rs[1].field("median_ns").unwrap().as_f64().unwrap(),
+            2_000_000.0
+        );
     }
 
     #[test]

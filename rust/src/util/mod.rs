@@ -1,8 +1,12 @@
-//! Self-contained utility substrate: JSON, CLI parsing, logging, and the
-//! micro-benchmark harness (the build is offline — no serde/clap/criterion).
+//! Self-contained utility substrate: JSON, CLI parsing, logging, the
+//! micro-benchmark harness (the build is offline — no serde/clap/criterion),
+//! the persistent [`pool::WorkerPool`] behind the threaded optimizer hot
+//! path, and the test-only allocation counter.
 
+pub mod alloc_count;
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod pool;
 pub mod table;

@@ -1,0 +1,412 @@
+//! Persistent worker pool for the optimizer hot path.
+//!
+//! The trainer previously spawned a fresh `std::thread::scope` per step and
+//! static-chunked the parameter list, so (a) thread spawn/join cost was paid
+//! every step and (b) whichever chunk held the embedding-sized gradients
+//! dominated the step while the other threads idled. [`WorkerPool`] fixes
+//! both: threads are spawned **once** (in `Trainer::new`) and each step is a
+//! *broadcast job* whose items are pulled off an atomic work queue
+//! ([`WorkerPool::run_indexed`]), so a worker that finishes its small
+//! parameters immediately steals the next large one.
+//!
+//! Design notes:
+//!
+//! * A job is a `&(dyn Fn(usize) + Sync)` borrowed for the duration of
+//!   [`WorkerPool::run`]. The call does not return until every worker has
+//!   finished, which is what makes the lifetime-erasing pointer handoff to
+//!   the (long-lived) workers sound — see `RawTask`.
+//! * The calling thread participates as executor 0, so `WorkerPool::new(n)`
+//!   spawns only `n - 1` OS threads and a pool of size 1 degenerates to
+//!   plain serial execution with zero synchronization.
+//! * Nested calls (a worker body that itself reaches for the pool, e.g. a
+//!   selector refresh inside an optimizer step calling a parallel GEMM) are
+//!   detected via a thread-local flag and run inline serially instead of
+//!   deadlocking on the single job slot.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{JoinHandle, ThreadId};
+
+thread_local! {
+    /// True while this thread is executing inside a pool job (workers:
+    /// always; the submitting thread: for the duration of `run`).
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Lifetime-erased pointer to the current job's closure. Sound because
+/// `run` blocks until every worker has dropped its reference to the
+/// pointee (remaining == 0) before the borrow it was created from ends.
+#[derive(Clone, Copy)]
+struct RawTask(*const (dyn Fn(usize) + Sync + 'static));
+
+unsafe impl Send for RawTask {}
+
+struct State {
+    /// Current broadcast job, if any.
+    job: Option<RawTask>,
+    /// Job sequence number (guards against a worker re-running a job it
+    /// already finished after a spurious wakeup).
+    seq: u64,
+    /// Spawned workers still executing the current job.
+    remaining: usize,
+    /// A worker's closure panicked during the current job (re-raised on
+    /// the submitting thread once the job drains).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new job (or shutdown).
+    work_cv: Condvar,
+    /// The submitting thread waits here for job completion.
+    done_cv: Condvar,
+}
+
+/// Raw mutable base pointer that may cross the pool boundary — the one
+/// place the pool's unsafe sharing contract lives. Safety contract for
+/// constructing one: every queue item derived from it (via [`SendPtr::add`])
+/// must touch a disjoint region, and the pointee must outlive the job
+/// (guaranteed when it borrows from the frame that calls
+/// [`WorkerPool::run_indexed`], which blocks until the job drains).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Offset by `i` elements.
+    ///
+    /// # Safety
+    /// Same as [`pointer::add`]; additionally the caller must uphold the
+    /// disjointness contract described on [`SendPtr`].
+    pub unsafe fn add(self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+/// A fixed set of worker threads, built once and reused for every job.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    worker_ids: Vec<ThreadId>,
+    threads: usize,
+    /// Serializes broadcasts: there is one job slot, so a second submitter
+    /// must wait for the in-flight job to drain (not clobber it).
+    submit: Mutex<()>,
+    jobs_completed: AtomicU64,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` executors total (the submitting thread counts as
+    /// one, so this spawns `threads - 1` OS threads).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                seq: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 1..threads {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sara-pool-{w}"))
+                    .spawn(move || worker_loop(sh, w))
+                    .expect("spawn pool worker"),
+            );
+        }
+        let worker_ids = handles.iter().map(|h| h.thread().id()).collect();
+        Self {
+            shared,
+            handles,
+            worker_ids,
+            threads,
+            submit: Mutex::new(()),
+            jobs_completed: AtomicU64::new(0),
+        }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn with_default_threads() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Total executors (submitting thread + spawned workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// ThreadIds of the spawned workers (regression tests: these must stay
+    /// constant for the pool's lifetime — a fresh id would mean a respawn).
+    pub fn worker_thread_ids(&self) -> &[ThreadId] {
+        &self.worker_ids
+    }
+
+    /// Number of broadcast jobs this pool has completed.
+    pub fn jobs_completed(&self) -> u64 {
+        self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(executor_index)` once on every executor (the caller runs
+    /// `f(0)`), returning when all executors are done. Nested calls from
+    /// inside a pool job run `f(0)` inline.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.handles.is_empty() || IN_POOL_JOB.with(|c| c.get()) {
+            f(0);
+            self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // One submitter at a time: a concurrent `run` from another thread
+        // must not clobber the single job slot while workers still hold
+        // the previous closure. (ignore poisoning — a panicked job is
+        // already re-raised on its submitter and the slot is clean)
+        let _submission = self
+            .submit
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        // Erase the closure's lifetime for the handoff; `run` does not
+        // return until remaining == 0, so workers never outlive the borrow.
+        let short: *const (dyn Fn(usize) + Sync + '_) = f;
+        let task = RawTask(unsafe {
+            std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync + '_),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(short)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "pool job slot busy");
+            st.job = Some(task);
+            st.seq += 1;
+            st.remaining = self.handles.len();
+            self.shared.work_cv.notify_all();
+        }
+        // Participate as executor 0. A panic here must not unwind past the
+        // wait below — workers still hold the borrowed closure — so it is
+        // caught and re-raised once the job has fully drained.
+        IN_POOL_JOB.with(|c| c.set(true));
+        let main_result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        IN_POOL_JOB.with(|c| c.set(false));
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            std::mem::replace(&mut st.panicked, false)
+        };
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        if let Err(p) = main_result {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("a worker panicked during a pool job");
+        }
+    }
+
+    /// Process items `0..n` on the pool via an atomic work queue: each
+    /// executor repeatedly claims the next unclaimed index and calls
+    /// `f(index)`. Claiming is per-item, so one executor chewing a huge
+    /// item (an embedding-sized gradient) never strands work behind it.
+    pub fn run_indexed(&self, n: usize, f: impl Fn(usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let worker = move |_executor: usize| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        };
+        self.run(&worker);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, index: usize) {
+    IN_POOL_JOB.with(|c| c.set(true));
+    let mut last_seq = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(t) = st.job {
+                    if st.seq != last_seq {
+                        last_seq = st.seq;
+                        break t;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Safety: the submitting thread blocks in `run` until we decrement
+        // `remaining`, so the closure behind the pointer is still alive.
+        // A panicking closure is caught so `remaining` always reaches 0
+        // (otherwise `run` would deadlock); the panic is re-raised there.
+        let f = unsafe { &*task.0 };
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(index)));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn run_indexed_visits_every_item_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_indexed(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn pool_threads_are_reused_across_jobs() {
+        // The regression the ISSUE pins: jobs must run on the same fixed
+        // set of threads, never fresh spawns.
+        let pool = WorkerPool::new(3);
+        let construction_ids: HashSet<_> =
+            pool.worker_thread_ids().iter().copied().collect();
+        let seen = Mutex::new(HashSet::new());
+        for _ in 0..50 {
+            pool.run_indexed(16, |_| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        let seen = seen.into_inner().unwrap();
+        let main_id = std::thread::current().id();
+        for id in &seen {
+            assert!(
+                *id == main_id || construction_ids.contains(id),
+                "work ran on a thread spawned after pool construction"
+            );
+        }
+        assert_eq!(pool.jobs_completed(), 50);
+        assert_eq!(pool.worker_thread_ids().len(), 2);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let sum = AtomicUsize::new(0);
+        pool.run_indexed(10, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+        assert!(pool.worker_thread_ids().is_empty());
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.run_indexed(8, |_| {
+            // a nested job from inside a worker must not deadlock
+            pool.run_indexed(4, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn concurrent_submitters_are_serialized() {
+        // two user threads sharing one pool must not clobber each other's
+        // job slot (the submission lock regression)
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..10 {
+                        pool.run_indexed(8, |_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 10 * 8);
+    }
+
+    #[test]
+    fn panicking_item_fails_the_job_but_not_the_pool() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_indexed(16, |i| {
+                assert!(i != 7, "deliberate test panic");
+            });
+        }));
+        assert!(result.is_err(), "panic inside a job must propagate");
+        // the pool stays fully usable afterwards
+        let sum = AtomicUsize::new(0);
+        pool.run_indexed(4, |i| {
+            sum.fetch_add(i + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn results_are_correct_under_imbalanced_items() {
+        // one huge item plus many tiny ones: queue-based claiming must
+        // still complete everything (this is the embedding-grad shape)
+        let pool = WorkerPool::new(4);
+        let acc: Vec<AtomicUsize> = (0..33).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_indexed(acc.len(), |i| {
+            let work = if i == 0 { 200_000 } else { 100 };
+            let mut x = 0usize;
+            for k in 0..work {
+                x = x.wrapping_add(k);
+            }
+            acc[i].store(x.max(1), Ordering::SeqCst);
+        });
+        assert!(acc.iter().all(|a| a.load(Ordering::SeqCst) > 0));
+    }
+}

@@ -1,0 +1,231 @@
+//! Offline stand-in for the `anyhow` crate, covering exactly the API
+//! surface this repository uses: [`Result`], [`Error`], the [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Errors are stored as a flattened message chain
+//! (outermost context first); `{:#}` prints the full chain, `{}` the
+//! outermost message, `{:?}` an anyhow-style "Caused by" listing.
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error. Deliberately does **not** implement
+/// `std::error::Error` (same as real anyhow) so the blanket
+/// `From<E: std::error::Error>` below is coherent.
+pub struct Error {
+    /// message chain, outermost context first, root cause last
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Error from a printable message.
+    pub fn msg<M: Display>(m: M) -> Self {
+        Self { chain: vec![m.to_string()] }
+    }
+
+    fn push_context<C: Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// Message chain, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+
+    /// Root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn StdError + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-separated (anyhow convention)
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Sealed adapter so [`Context`](super::Context) applies both to
+    /// `Result<T, E: std::error::Error>` and `Result<T, Error>` without
+    /// overlapping impls (the real anyhow uses the same trick).
+    pub trait IntoChain {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoChain for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoChain for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoChain> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().push_context(c)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().push_context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: Result<()> = Err(io_err()).with_context(|| "loading x".to_string());
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "loading x");
+        assert_eq!(format!("{e:#}"), "loading x: missing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        let o: Result<i32> = None.context("absent");
+        assert_eq!(format!("{}", o.unwrap_err()), "absent");
+    }
+
+    #[test]
+    fn macros_construct_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(200).unwrap_err()), "too big");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(g().is_err());
+    }
+}

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf smoke in one command (see ROADMAP.md).
+#
+#   scripts/tier1.sh
+#
+# 1. release build + full test suite (the tier-1 verify)
+# 2. fast hotpath bench smoke (SARA_BENCH_FAST=1) emitting the
+#    machine-readable perf trajectory to BENCH_hotpath.json at repo root.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+REPO_ROOT="$(pwd)"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+(cd rust && cargo build --release && cargo test -q)
+
+echo
+echo "== perf smoke: hotpath bench (fast mode) =="
+(
+  cd rust
+  SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_hotpath.json" \
+    cargo bench --bench hotpath
+)
+
+echo
+echo "tier-1 OK; perf trajectory at $REPO_ROOT/BENCH_hotpath.json"

@@ -101,6 +101,57 @@ fn main() {
         b.run("fullrank-adam", || opt.step_into(&g, 0.01, &mut delta));
     }
 
+    section("refresh cycle: critical-path cost of the install step (tau=16)");
+    {
+        // Drive full refresh cycles through ParamOptimizer and time only
+        // the step that installs the projector. Inline (L=0) pays the
+        // SVD/sampling there; pipelined (L=1) scheduled it one step early
+        // onto the pool's background lane — here we let the job finish
+        // before the install step, emulating the engine.train_step gap the
+        // trainer overlaps it with — so the install step only joins the
+        // handle and swaps the double-buffered projector in.
+        let tau = 16usize;
+        let cycles: usize =
+            if std::env::var("SARA_BENCH_FAST").as_deref() == Ok("1") { 4 } else { 12 };
+        for (label, lookahead) in [
+            ("refresh install step, inline (L=0)", 0usize),
+            ("refresh install step, pipelined (L=1)", 1usize),
+        ] {
+            let mut cfg = OptimConfig::default();
+            cfg.wrapper = WrapperKind::GaLore;
+            cfg.selector = SelectorKind::Sara;
+            cfg.inner = InnerOpt::Adam;
+            cfg.rank = r;
+            cfg.update_period = tau;
+            cfg.refresh_lookahead = lookahead;
+            let sel = make_selector(cfg.selector, 0, 0);
+            let mut opt = ParamOptimizer::low_rank(m, n, &cfg, sel);
+            let mut grng = Pcg64::new(7);
+            let g = Matrix::randn(m, n, 1.0, &mut grng);
+            let mut delta = Matrix::zeros(m, n);
+            let mut samples = Vec::new();
+            let mut t = 0usize;
+            for _ in 0..cycles * tau {
+                t += 1;
+                let t0 = std::time::Instant::now();
+                opt.step_into(&g, 0.01, &mut delta);
+                let dt = t0.elapsed();
+                if t > 1 && (t - 1) % tau == 0 {
+                    samples.push(dt);
+                }
+                if let Some(job) = opt.take_scheduled_refresh() {
+                    let handle = pool.spawn_background(move || job.run());
+                    while !handle.is_finished() {
+                        std::thread::yield_now();
+                    }
+                    opt.set_in_flight(handle);
+                }
+            }
+            samples.sort_unstable();
+            b.record(label, samples[samples.len() / 2]).print();
+        }
+    }
+
     section("selector refresh cost (amortized over tau=200 steps)");
     for kind in [SelectorKind::Dominant, SelectorKind::Sara, SelectorKind::GoLore] {
         let mut sel = make_selector(kind, 0, 0);

@@ -54,6 +54,14 @@ pub struct OptimConfig {
     pub rank: usize,
     /// Subspace refresh period tau (iterations).
     pub update_period: usize,
+    /// Refresh pipeline depth: schedule each projector refresh from the
+    /// gradient `refresh_lookahead` steps before it is installed, so the
+    /// SVD/Gram work overlaps with the forward/backward of the intervening
+    /// steps on a background pool worker. `0` (default) reproduces the
+    /// classic inline refresh of Algorithm 2 bit-for-bit; values are
+    /// clamped to `update_period - 1`. Lookahead >= 1 selects the subspace
+    /// from a slightly stale gradient — the trade the pipelining makes.
+    pub refresh_lookahead: usize,
     /// GaLore scale factor alpha.
     pub alpha: f32,
     pub beta1: f32,
@@ -75,6 +83,7 @@ impl Default for OptimConfig {
             selector: SelectorKind::Sara,
             rank: 32,
             update_period: 200,
+            refresh_lookahead: 0,
             alpha: 0.25,
             beta1: 0.9,
             beta2: 0.999,
@@ -186,8 +195,8 @@ impl RunConfig {
     }
 
     /// Apply CLI overrides (`--model`, `--lr`, `--steps`, `--rank`,
-    /// `--selector`, `--wrapper`, `--inner`, `--tau`, `--seed`,
-    /// `--dataset`, `--workers`, ...).
+    /// `--selector`, `--wrapper`, `--inner`, `--tau`,
+    /// `--refresh-lookahead`, `--seed`, `--dataset`, `--workers`, ...).
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
         if let Some(m) = args.get("model") {
             self.model = m.to_string();
@@ -204,6 +213,8 @@ impl RunConfig {
         }
         self.optim.rank = args.get_usize("rank", self.optim.rank)?;
         self.optim.update_period = args.get_usize("tau", self.optim.update_period)?;
+        self.optim.refresh_lookahead =
+            args.get_usize("refresh-lookahead", self.optim.refresh_lookahead)?;
         self.optim.alpha = args.get_f64("alpha", self.optim.alpha as f64)? as f32;
         if let Some(s) = args.get("selector") {
             self.optim.selector = parse_selector(s)?;
@@ -249,6 +260,9 @@ impl RunConfig {
         cfg.optim.rank = doc.get_usize("optim", "rank").unwrap_or(cfg.optim.rank);
         cfg.optim.update_period =
             doc.get_usize("optim", "tau").unwrap_or(cfg.optim.update_period);
+        cfg.optim.refresh_lookahead = doc
+            .get_usize("optim", "refresh_lookahead")
+            .unwrap_or(cfg.optim.refresh_lookahead);
         cfg.optim.alpha =
             doc.get_f64("optim", "alpha").unwrap_or(cfg.optim.alpha as f64) as f32;
         cfg.optim.beta1 =
@@ -289,7 +303,7 @@ mod tests {
     fn cli_overrides_apply() {
         let args = Args::parse(
             "train --model small --lr 0.005 --rank 64 --selector dominant \
-             --wrapper fira --tau 50 --steps 10"
+             --wrapper fira --tau 50 --refresh-lookahead 2 --steps 10"
                 .split_whitespace()
                 .map(|s| s.to_string()),
         );
@@ -301,6 +315,7 @@ mod tests {
         assert_eq!(c.optim.selector, SelectorKind::Dominant);
         assert_eq!(c.optim.wrapper, WrapperKind::Fira);
         assert_eq!(c.optim.update_period, 50);
+        assert_eq!(c.optim.refresh_lookahead, 2);
         assert_eq!(c.total_steps, 10);
     }
 
@@ -331,6 +346,7 @@ wrapper = "fira"
 selector = "sara"
 rank = 16
 tau = 40
+refresh_lookahead = 1
 momentum_reproject = false
 "#,
         )
@@ -341,6 +357,7 @@ momentum_reproject = false
         assert_eq!(c.dataset, "slimpajama");
         assert_eq!(c.optim.wrapper, WrapperKind::Fira);
         assert_eq!(c.optim.rank, 16);
+        assert_eq!(c.optim.refresh_lookahead, 1);
         assert!(!c.optim.momentum_reproject);
     }
 }

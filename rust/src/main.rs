@@ -31,8 +31,8 @@ fn usage() -> &'static str {
      \n\
      sara train --model <name> [--selector sara|dominant|golore|online-pca]\n\
      \u{20}          [--wrapper galore|fira|full] [--inner adam|adafactor|adam-mini|adam8bit|msgd]\n\
-     \u{20}          [--steps N] [--lr F] [--rank R] [--tau T] [--workers W]\n\
-     \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
+     \u{20}          [--steps N] [--lr F] [--rank R] [--tau T] [--refresh-lookahead L]\n\
+     \u{20}          [--workers W] [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
      \u{20}          [--save ckpt.bin]\n\
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
      \u{20}          [--steps N] [--rank R] [--tau T] [--anchor N] [--per-layer]\n\

@@ -23,11 +23,31 @@
 //! counting-allocator regression test below). Refresh steps (every `tau`)
 //! may allocate inside the selector/SVD — that cost is amortized and
 //! measured separately in `benches/hotpath.rs`.
+//!
+//! ## Pipelined refresh (double-buffered projector)
+//!
+//! With `refresh_lookahead = L >= 1`, the refresh due at step `T`
+//! (`(T-1) % tau == 0`) is *scheduled* at step `T - L`: the gradient is
+//! copied into a reusable snapshot buffer and handed to
+//! [`crate::selector::Selector::begin_refresh`], producing a self-contained
+//! [`RefreshJob`]. The trainer moves that job onto a background pool worker
+//! ([`LowRankState::take_scheduled_refresh`] /
+//! [`LowRankState::set_in_flight`]) where the SVD overlaps with the next
+//! forward/backward passes; step `T` then merely joins the handle and swaps
+//! the finished projector in (with momentum re-projection) — the front
+//! buffer is the active `P`, the pending job's output is the back buffer.
+//! The refresh *schedule* of Algorithm 1 is unchanged; only the gradient
+//! the selector sees is `L` steps stale. `L = 0` (default) runs
+//! begin + run + install back-to-back at step `T`, which is bit-for-bit
+//! the classic inline refresh (pinned by the equivalence tests below). A
+//! scheduled job the caller never moves off-thread is simply run inline at
+//! install time, so pool-less callers stay correct.
 
 use super::{make_state, FiraResidual, OptState};
 use crate::config::{OptimConfig, WrapperKind};
 use crate::linalg::{matmul_into, t_matmul_into, Matrix};
-use crate::selector::Selector;
+use crate::selector::{RefreshJob, RefreshOutput, Selector};
+use crate::util::pool::JobHandle;
 
 /// Preallocated per-matrix scratch for the steady-state step. All buffers
 /// are sized at construction and reused for the lifetime of the state.
@@ -57,12 +77,29 @@ impl Workspace {
     }
 }
 
+/// A refresh that has been scheduled but not yet installed.
+enum PendingRefresh {
+    /// Created by the schedule step; not yet started. The trainer normally
+    /// moves it to a background worker; left here, it runs inline at
+    /// install time (the pool-less fallback).
+    Scheduled(RefreshJob),
+    /// Running (or finished) on a background pool worker.
+    InFlight(JobHandle<RefreshOutput>),
+}
+
 /// Low-rank optimizer state for one weight matrix.
 pub struct LowRankState {
     cfg: OptimConfig,
     state: Box<dyn OptState>,
     selector: Box<dyn Selector>,
+    /// Front projector buffer: the active `P`. The back buffer is the
+    /// pending refresh's output, swapped in at the install step.
     p: Option<Matrix>,
+    /// Scheduled / in-flight refresh for the next install step, if any.
+    pending: Option<PendingRefresh>,
+    /// Reusable gradient-snapshot buffer (work orientation). Round-trips
+    /// through refresh jobs so steady-state refresh cycles reuse it.
+    grad_snap: Matrix,
     fira: Option<FiraResidual>,
     ws: Workspace,
     /// gradient shape this state was built for (as passed by the trainer)
@@ -71,6 +108,9 @@ pub struct LowRankState {
     t: usize,
     /// number of projector refreshes so far (probe/diagnostic)
     pub refresh_count: usize,
+    /// cumulative wall time spent in refresh compute (inline or on a
+    /// background worker), for the trainer's periodic log line
+    refresh_nanos: u64,
 }
 
 impl LowRankState {
@@ -94,13 +134,24 @@ impl LowRankState {
             state,
             selector,
             p: None,
+            pending: None,
+            grad_snap: Matrix::zeros(0, 0),
             fira,
             ws,
             rows,
             cols,
             t: 0,
             refresh_count: 0,
+            refresh_nanos: 0,
         }
+    }
+
+    /// Pipeline depth, clamped so a job is always installed before the
+    /// next one is scheduled (at most one in flight per layer).
+    fn effective_lookahead(&self) -> usize {
+        self.cfg
+            .refresh_lookahead
+            .min(self.cfg.update_period.saturating_sub(1))
     }
 
     /// Current projector (in the *worked* orientation, short-side x rank).
@@ -129,10 +180,31 @@ impl LowRankState {
         let work: &Matrix = if transposed { &self.ws.tg } else { g };
         self.t += 1;
 
-        // projector refresh every tau steps (Algorithm 2, line 2)
+        // projector install every tau steps (Algorithm 2, line 2): join the
+        // pipelined job if one is pending, else refresh inline from the
+        // current gradient (lookahead 0 and the very first refresh)
         if (self.t - 1) % self.cfg.update_period == 0 {
-            let rank = self.cfg.rank.min(work.rows);
-            let p_new = self.selector.select(work, rank);
+            let mut refreshed = match self.pending.take() {
+                Some(PendingRefresh::InFlight(handle)) => handle.join(),
+                Some(PendingRefresh::Scheduled(job)) => job.run(),
+                None => {
+                    let rank = self.cfg.rank.min(work.rows);
+                    let snap = if self.selector.wants_gradient() {
+                        copy_snapshot(&mut self.grad_snap, work);
+                        std::mem::replace(&mut self.grad_snap, Matrix::zeros(0, 0))
+                    } else {
+                        // gradient-independent selector: shape-only stub
+                        Matrix::zeros(work.rows, 0)
+                    };
+                    self.selector.begin_refresh(snap, rank).run()
+                }
+            };
+            self.refresh_nanos += refreshed.compute_nanos();
+            if let Some(snap) = refreshed.take_gradient() {
+                // recycle the snapshot buffer for the next schedule step
+                self.grad_snap = snap;
+            }
+            let p_new = self.selector.install(refreshed);
             if self.cfg.momentum_reproject {
                 if let Some(p_old) = &self.p {
                     // C = P_new^T P_old maps old-subspace coords to new
@@ -173,6 +245,61 @@ impl LowRankState {
         if transposed {
             self.ws.upd.transpose_into(out);
         }
+
+        // pipelined schedule: the refresh installing at step t + L is
+        // begun here, from this step's gradient, so its SVD can run on a
+        // background worker while the next L forward/backward passes
+        // proceed. Creating the job is cheap (snapshot copy + RNG/state
+        // clone) — no selector math happens on this thread.
+        let lookahead = self.effective_lookahead();
+        if lookahead > 0
+            && (self.t + lookahead - 1) % self.cfg.update_period == 0
+            && self.pending.is_none()
+        {
+            let rank = self.cfg.rank.min(work.rows);
+            let snap = if self.selector.wants_gradient() {
+                copy_snapshot(&mut self.grad_snap, work);
+                std::mem::replace(&mut self.grad_snap, Matrix::zeros(0, 0))
+            } else {
+                // gradient-independent selector: shape-only stub, no copy
+                Matrix::zeros(work.rows, 0)
+            };
+            let job = self.selector.begin_refresh(snap, rank);
+            self.pending = Some(PendingRefresh::Scheduled(job));
+        }
+    }
+
+    /// A refresh scheduled by the step that just ran, if any. The trainer
+    /// moves it onto the worker pool's background lane and parks the
+    /// completion handle via [`LowRankState::set_in_flight`]; a job never
+    /// taken simply runs inline at its install step, so callers without a
+    /// pool stay correct.
+    pub fn take_scheduled_refresh(&mut self) -> Option<RefreshJob> {
+        match self.pending.take() {
+            Some(PendingRefresh::Scheduled(job)) => Some(job),
+            other => {
+                // an InFlight handle (or nothing) stays where it is
+                self.pending = other;
+                None
+            }
+        }
+    }
+
+    /// Park the completion handle of a refresh job obtained from
+    /// [`LowRankState::take_scheduled_refresh`] and launched off-thread.
+    /// The install step joins it.
+    pub fn set_in_flight(&mut self, handle: JobHandle<RefreshOutput>) {
+        debug_assert!(
+            self.pending.is_none(),
+            "a refresh is already pending for this layer"
+        );
+        self.pending = Some(PendingRefresh::InFlight(handle));
+    }
+
+    /// `(refresh_count, cumulative refresh-compute nanos)` — surfaced in
+    /// the trainer's periodic log line so overlap wins are visible.
+    pub fn refresh_stats(&self) -> (usize, u64) {
+        (self.refresh_count, self.refresh_nanos)
     }
 
     /// Allocating wrapper over [`LowRankState::step_into`]; returns the
@@ -182,6 +309,15 @@ impl LowRankState {
         self.step_into(g, lr, &mut out);
         out
     }
+}
+
+/// Copy `work` into the reusable snapshot buffer, (re)sizing it only when
+/// the shape changes (first refresh, or never again in steady state).
+fn copy_snapshot(snap: &mut Matrix, work: &Matrix) {
+    if snap.rows != work.rows || snap.cols != work.cols {
+        *snap = Matrix::zeros(work.rows, work.cols);
+    }
+    snap.data.copy_from_slice(&work.data);
 }
 
 /// Update pipeline for one parameter tensor: full-rank for norms/embeddings
@@ -236,6 +372,33 @@ impl ParamOptimizer {
         match self {
             ParamOptimizer::Full { .. } => None,
             ParamOptimizer::LowRank(s) => s.projector(),
+        }
+    }
+
+    /// See [`LowRankState::take_scheduled_refresh`] (full-rank params never
+    /// schedule refreshes).
+    pub fn take_scheduled_refresh(&mut self) -> Option<RefreshJob> {
+        match self {
+            ParamOptimizer::Full { .. } => None,
+            ParamOptimizer::LowRank(s) => s.take_scheduled_refresh(),
+        }
+    }
+
+    /// See [`LowRankState::set_in_flight`].
+    pub fn set_in_flight(&mut self, handle: JobHandle<RefreshOutput>) {
+        match self {
+            ParamOptimizer::Full { .. } => {
+                panic!("set_in_flight on a full-rank optimizer")
+            }
+            ParamOptimizer::LowRank(s) => s.set_in_flight(handle),
+        }
+    }
+
+    /// `(refresh_count, cumulative refresh-compute nanos)`.
+    pub fn refresh_stats(&self) -> (usize, u64) {
+        match self {
+            ParamOptimizer::Full { .. } => (0, 0),
+            ParamOptimizer::LowRank(s) => s.refresh_stats(),
         }
     }
 }
@@ -421,6 +584,233 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The pre-refactor inline step, replicated verbatim against the
+    /// public primitives (allocating kernel variants are bit-equal to the
+    /// `_into` forms — pinned by `step_into_matches_step_exactly`). This is
+    /// the oracle for the ISSUE's acceptance criterion: with
+    /// `refresh_lookahead = 0` the pipelined state machine must produce
+    /// bit-identical weight deltas to the classic synchronous refresh.
+    struct InlineReference {
+        cfg: OptimConfig,
+        state: Box<dyn OptState>,
+        selector: Box<dyn crate::selector::Selector>,
+        p: Option<Matrix>,
+        fira: Option<FiraResidual>,
+        t: usize,
+    }
+
+    impl InlineReference {
+        fn new(
+            rows: usize,
+            cols: usize,
+            cfg: &OptimConfig,
+            selector: Box<dyn crate::selector::Selector>,
+        ) -> Self {
+            let long = rows.max(cols);
+            let rank = cfg.rank.min(rows.min(cols));
+            Self {
+                cfg: cfg.clone(),
+                state: make_state(cfg.inner, rank, long, cfg),
+                selector,
+                p: None,
+                fira: match cfg.wrapper {
+                    WrapperKind::Fira => Some(FiraResidual::new(cfg.fira_limiter)),
+                    _ => None,
+                },
+                t: 0,
+            }
+        }
+
+        fn step(&mut self, g: &Matrix, lr: f32) -> Matrix {
+            let transposed = g.rows > g.cols;
+            let tg;
+            let work: &Matrix = if transposed {
+                tg = g.transpose();
+                &tg
+            } else {
+                g
+            };
+            self.t += 1;
+            if (self.t - 1) % self.cfg.update_period == 0 {
+                let rank = self.cfg.rank.min(work.rows);
+                let p_new = self.selector.select(work, rank);
+                if self.cfg.momentum_reproject {
+                    if let Some(p_old) = &self.p {
+                        let c = p_new.t_matmul(p_old);
+                        self.state.reproject(&c);
+                    }
+                }
+                self.p = Some(p_new);
+            }
+            let p = self.p.as_ref().unwrap();
+            let r = p.t_matmul(work);
+            let n = self.state.direction(&r, self.t);
+            let mut upd = p.matmul(&n);
+            upd.scale(self.cfg.alpha);
+            if let Some(fira) = self.fira.as_mut() {
+                let pr = p.matmul(&r);
+                fira.accumulate_residual(
+                    &mut upd.data,
+                    &work.data,
+                    &pr.data,
+                    n.frobenius_norm(),
+                    r.frobenius_norm(),
+                    self.cfg.alpha,
+                );
+            }
+            upd.scale(lr);
+            if transposed {
+                upd.transpose()
+            } else {
+                upd
+            }
+        }
+    }
+
+    #[test]
+    fn lookahead_zero_matches_pre_refactor_inline_reference() {
+        for (wrapper, selector) in [
+            (WrapperKind::GaLore, SelectorKind::Sara),
+            (WrapperKind::GaLore, SelectorKind::Dominant),
+            (WrapperKind::GaLore, SelectorKind::GoLore),
+            (WrapperKind::Fira, SelectorKind::Sara),
+        ] {
+            for (rows, cols) in [(12, 20), (20, 12)] {
+                let mut cfg = lr_cfg(wrapper, selector, 4);
+                cfg.update_period = 3;
+                assert_eq!(cfg.refresh_lookahead, 0, "default must stay inline");
+                let mut refactored = LowRankState::new(
+                    rows,
+                    cols,
+                    &cfg,
+                    make_selector(selector, 7, 0),
+                );
+                let mut reference =
+                    InlineReference::new(rows, cols, &cfg, make_selector(selector, 7, 0));
+                let mut rng = Pcg64::new(9);
+                let mut out = Matrix::zeros(rows, cols);
+                for step in 0..10 {
+                    let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+                    refactored.step_into(&g, 0.05, &mut out);
+                    let want = reference.step(&g, 0.05);
+                    assert_eq!(
+                        want.data, out.data,
+                        "{wrapper:?}/{selector:?} {rows}x{cols} step {step}"
+                    );
+                    assert!(
+                        refactored.take_scheduled_refresh().is_none(),
+                        "lookahead 0 must never schedule ahead"
+                    );
+                }
+                assert_eq!(refactored.refresh_count, 4); // t = 1, 4, 7, 10
+            }
+        }
+    }
+
+    /// On a constant gradient stream the lookahead-L job sees the same
+    /// gradient the inline path would, so pipelined trajectories (driven
+    /// through real background pool jobs, like the trainer does) must be
+    /// bit-identical to inline ones — including the per-layer RNG stream
+    /// consumption across refreshes.
+    #[test]
+    fn pipelined_refresh_matches_inline_on_constant_stream() {
+        use crate::util::pool::WorkerPool;
+        let pool = WorkerPool::new(2);
+        for (selector, lookahead, tau) in [
+            (SelectorKind::Sara, 1, 4),
+            (SelectorKind::GoLore, 2, 4),
+            (SelectorKind::OnlinePca, 1, 3),
+            (SelectorKind::Sara, 9, 2), // lookahead clamps to tau - 1
+        ] {
+            let mut cfg = lr_cfg(WrapperKind::GaLore, selector, 4);
+            cfg.update_period = tau;
+            let mut pipe_cfg = cfg.clone();
+            pipe_cfg.refresh_lookahead = lookahead;
+            let mut inline_opt =
+                LowRankState::new(12, 18, &cfg, make_selector(selector, 3, 0));
+            let mut pipe =
+                LowRankState::new(12, 18, &pipe_cfg, make_selector(selector, 3, 0));
+            let g = Matrix::randn(12, 18, 1.0, &mut Pcg64::new(8));
+            let mut a = Matrix::zeros(12, 18);
+            let mut b = Matrix::zeros(12, 18);
+            for step in 0..3 * tau + 1 {
+                inline_opt.step_into(&g, 0.05, &mut a);
+                pipe.step_into(&g, 0.05, &mut b);
+                assert_eq!(a.data, b.data, "{selector:?} L={lookahead} step {step}");
+                assert!(inline_opt.take_scheduled_refresh().is_none());
+                if let Some(job) = pipe.take_scheduled_refresh() {
+                    pipe.set_in_flight(pool.spawn_background(move || job.run()));
+                }
+            }
+            assert_eq!(inline_opt.refresh_count, pipe.refresh_count);
+            assert!(pipe.refresh_count >= 3);
+        }
+    }
+
+    /// The acceptance criterion's worker-thread-id check: with
+    /// `refresh_lookahead >= 1`, refresh compute runs on a dedicated
+    /// background pool thread — never on the thread driving the steps.
+    #[test]
+    fn pipelined_refresh_runs_on_background_worker() {
+        use crate::util::pool::WorkerPool;
+        let pool = WorkerPool::new(2);
+        let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Dominant, 4);
+        cfg.update_period = 3;
+        cfg.refresh_lookahead = 1;
+        let mut opt =
+            LowRankState::new(10, 16, &cfg, make_selector(cfg.selector, 1, 0));
+        let mut rng = Pcg64::new(2);
+        let mut out = Matrix::zeros(10, 16);
+        let mut ran_on = Vec::new();
+        for _ in 0..7 {
+            // refreshes install at t = 1 (inline bootstrap), 4, 7 (pipelined)
+            let g = Matrix::randn(10, 16, 1.0, &mut rng);
+            opt.step_into(&g, 0.05, &mut out);
+            if let Some(job) = opt.take_scheduled_refresh() {
+                let handle = pool.spawn_background(move || job.run());
+                while !handle.is_finished() {
+                    std::thread::yield_now();
+                }
+                ran_on.push(handle.executed_on().unwrap());
+                opt.set_in_flight(handle);
+            }
+        }
+        assert_eq!(opt.refresh_count, 3);
+        assert_eq!(ran_on.len(), 2, "both steady-state refreshes pipelined");
+        let bg: std::collections::HashSet<_> =
+            pool.background_thread_ids().into_iter().collect();
+        let main_id = std::thread::current().id();
+        for id in ran_on {
+            assert_ne!(id, main_id, "refresh ran on the hot path");
+            assert!(bg.contains(&id), "refresh ran off the background lane");
+        }
+    }
+
+    /// Satellite of the ISSUE: under the double-buffered state, steps that
+    /// neither schedule nor install a refresh stay allocation-free even
+    /// with pipelining enabled (the pending Option checks are free).
+    #[test]
+    fn non_refresh_steps_allocation_free_with_pipelining() {
+        let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Dominant, 4);
+        cfg.update_period = 64;
+        cfg.refresh_lookahead = 2;
+        let sel = make_selector(cfg.selector, 1, 0);
+        let mut opt = LowRankState::new(16, 24, &cfg, sel);
+        let mut rng = Pcg64::new(5);
+        let g = Matrix::randn(16, 24, 1.0, &mut rng);
+        let mut out = Matrix::zeros(16, 24);
+        // warmup: t = 1 installs the bootstrap projector (allocates);
+        // the next schedule step is t = 62, far beyond the measurement
+        for _ in 0..3 {
+            opt.step_into(&g, 0.01, &mut out);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..40 {
+            opt.step_into(&g, 0.01, &mut out);
+        }
+        assert_eq!(thread_alloc_count() - before, 0);
     }
 
     /// 8-bit Adam inner state requantizes in place — the full low-rank

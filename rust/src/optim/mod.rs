@@ -18,8 +18,12 @@
 //! write into caller-owned buffers and are **allocation-free in steady
 //! state**. [`LowRankState`] owns a preallocated workspace for every
 //! intermediate (`G^T`, `R`, `N`, `P N`, Fira's `P R`), sized once at
-//! construction; only projector-refresh steps (every `tau`) may allocate.
-//! The trainer fans these steps out over a persistent
+//! construction; only refresh schedule/install steps (every `tau`) may
+//! allocate. With `refresh_lookahead >= 1` even the refresh's SVD leaves
+//! the hot path: it is scheduled ahead as a [`crate::selector::RefreshJob`]
+//! and runs on the pool's background lane, double-buffered behind the
+//! active projector (see `lowrank`'s module docs). The trainer fans the
+//! per-parameter steps out over a persistent
 //! [`crate::util::pool::WorkerPool`] — see `train`'s module docs.
 
 mod adafactor;

@@ -3,7 +3,7 @@
 //! baseline whose "frozen subspace" failure mode (paper section 3.1) SARA
 //! addresses.
 
-use super::Selector;
+use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{left_singular_vectors, Matrix};
 
 /// Deterministic top-r left-singular-vector selector.
@@ -16,15 +16,28 @@ impl Dominant {
     }
 }
 
+/// Expensive phase: SVD + take the top-r left singular vectors. Stateless,
+/// so the job carries nothing beyond the shared gradient snapshot.
+pub(super) fn compute(g: &Matrix, rank: usize) -> Matrix {
+    let (u, _s) = left_singular_vectors(g);
+    let idx: Vec<usize> = (0..rank.min(u.cols)).collect();
+    u.select_columns(&idx)
+}
+
 impl Selector for Dominant {
     fn name(&self) -> &'static str {
         "dominant"
     }
 
-    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
-        let (u, _s) = left_singular_vectors(g);
-        let idx: Vec<usize> = (0..rank.min(u.cols)).collect();
-        u.select_columns(&idx)
+    fn begin_refresh(&mut self, g: Matrix, rank: usize) -> RefreshJob {
+        RefreshJob::new(g, rank, JobKind::Dominant)
+    }
+
+    fn install(&mut self, out: RefreshOutput) -> Matrix {
+        match out.update {
+            UpdateKind::Dominant => out.p,
+            _ => panic!("install: refresh output from a different selector"),
+        }
     }
 }
 

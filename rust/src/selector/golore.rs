@@ -6,7 +6,7 @@
 //! ignores gradient information entirely — the baseline SARA beats
 //! empirically (Table 3) while matching its convergence rate.
 
-use super::Selector;
+use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{qr_thin, Matrix};
 use crate::rng::Pcg64;
 
@@ -21,16 +21,49 @@ impl GoLore {
     }
 }
 
+/// Captured state for one scheduled GoLore refresh: the RNG clone. The
+/// gradient snapshot rides along only for shape (the sketch is
+/// gradient-independent by construction).
+pub(super) struct GoLoreJob {
+    rng: Pcg64,
+}
+
+pub(super) struct GoLoreUpdate {
+    rng: Pcg64,
+}
+
+impl GoLoreJob {
+    pub(super) fn run(mut self, g: &Matrix, rank: usize) -> (Matrix, GoLoreUpdate) {
+        let m = g.rows;
+        let r = rank.min(m);
+        let omega = Matrix::randn(m, r, 1.0, &mut self.rng);
+        (qr_thin(&omega).0, GoLoreUpdate { rng: self.rng })
+    }
+}
+
 impl Selector for GoLore {
     fn name(&self) -> &'static str {
         "golore"
     }
 
-    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
-        let m = g.rows;
-        let r = rank.min(m);
-        let omega = Matrix::randn(m, r, 1.0, &mut self.rng);
-        qr_thin(&omega).0
+    /// The sketch never reads gradient values — the scheduler may pass a
+    /// shape-only stub and skip the snapshot copy.
+    fn wants_gradient(&self) -> bool {
+        false
+    }
+
+    fn begin_refresh(&mut self, g: Matrix, rank: usize) -> RefreshJob {
+        RefreshJob::new(g, rank, JobKind::GoLore(GoLoreJob { rng: self.rng.clone() }))
+    }
+
+    fn install(&mut self, out: RefreshOutput) -> Matrix {
+        match out.update {
+            UpdateKind::GoLore(up) => {
+                self.rng = up.rng;
+                out.p
+            }
+            _ => panic!("install: refresh output from a different selector"),
+        }
     }
 }
 

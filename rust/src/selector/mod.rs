@@ -9,6 +9,31 @@
 //!
 //! One selector instance is owned per weight matrix (selectors may carry
 //! per-layer state, e.g. online PCA's running basis or SARA's RNG stream).
+//!
+//! ## Two-phase refresh API
+//!
+//! A refresh is split so the expensive part can run off the hot path:
+//!
+//! 1. [`Selector::begin_refresh`] — *cheap*, called at schedule time with
+//!    an owned gradient snapshot. It captures everything the computation
+//!    needs (the snapshot, a clone of the per-layer RNG stream, a copy of
+//!    any evolving state such as online PCA's basis) into a self-contained,
+//!    `Send` [`RefreshJob`].
+//! 2. [`RefreshJob::run`] — *expensive* (SVD / Gram / eigh / QR), runnable
+//!    on any thread, typically a [`crate::util::pool::WorkerPool`]
+//!    background worker. Produces a [`RefreshOutput`].
+//! 3. [`Selector::install`] — *cheap*, called back on the owning thread.
+//!    Writes the advanced RNG (and any state the job evolved) back into
+//!    the selector and yields the new projector `P`.
+//!
+//! Determinism: all randomness is drawn from the RNG clone captured at
+//! `begin_refresh` and the advanced clone is written back at `install`.
+//! Because at most one job per layer is ever in flight and installs happen
+//! in schedule order, the per-layer stream consumption is *identical* to
+//! running each refresh inline — `begin + run + install` back-to-back (the
+//! provided [`Selector::select`]) is bit-for-bit the classic synchronous
+//! refresh, which is what the `refresh_lookahead = 0` equivalence tests in
+//! `optim::lowrank` pin.
 
 mod dominant;
 mod golore;
@@ -23,16 +48,137 @@ pub use sara::Sara;
 use crate::config::SelectorKind;
 use crate::linalg::Matrix;
 use crate::rng::fold_seed;
+use std::time::Instant;
+
+/// A scheduled-but-not-yet-computed projector refresh: self-contained and
+/// `Send`, it owns the gradient snapshot plus whatever per-refresh state
+/// the selector captured (RNG clone, online-PCA basis). Created by
+/// [`Selector::begin_refresh`]; consumed by [`RefreshJob::run`].
+pub struct RefreshJob {
+    grad: Matrix,
+    rank: usize,
+    kind: JobKind,
+}
+
+/// Per-selector captured state (the closed set of strategies keeps this an
+/// enum rather than a boxed closure: no allocation at schedule time beyond
+/// what the selector itself must copy, and `install` dispatch stays
+/// compile-checked). Module-private: child selector modules construct it,
+/// the rest of the crate sees [`RefreshJob`] opaquely.
+enum JobKind {
+    Dominant,
+    Sara(sara::SaraJob),
+    GoLore(golore::GoLoreJob),
+    OnlinePca(online_pca::OnlinePcaJob),
+}
+
+impl RefreshJob {
+    fn new(grad: Matrix, rank: usize, kind: JobKind) -> Self {
+        Self { grad, rank, kind }
+    }
+
+    /// Target rank of the scheduled refresh.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Execute the expensive phase (SVD / Gram / QR). Runnable on any
+    /// thread; the output must be handed back to the *same* selector via
+    /// [`Selector::install`].
+    pub fn run(self) -> RefreshOutput {
+        let t0 = Instant::now();
+        let (p, update) = match self.kind {
+            JobKind::Dominant => (dominant::compute(&self.grad, self.rank), UpdateKind::Dominant),
+            JobKind::Sara(job) => {
+                let (p, up) = job.run(&self.grad, self.rank);
+                (p, UpdateKind::Sara(up))
+            }
+            JobKind::GoLore(job) => {
+                let (p, up) = job.run(&self.grad, self.rank);
+                (p, UpdateKind::GoLore(up))
+            }
+            JobKind::OnlinePca(job) => {
+                let (p, up) = job.run(&self.grad, self.rank);
+                (p, UpdateKind::OnlinePca(up))
+            }
+        };
+        RefreshOutput {
+            p,
+            grad: Some(self.grad),
+            compute_nanos: t0.elapsed().as_nanos() as u64,
+            update,
+        }
+    }
+}
+
+/// Result of a completed [`RefreshJob`]: the new projector plus the state
+/// the owning selector absorbs at [`Selector::install`] time.
+pub struct RefreshOutput {
+    p: Matrix,
+    /// The gradient snapshot, handed back so the caller can recycle its
+    /// buffer (the optimizer's snapshot buffer round-trips through jobs).
+    grad: Option<Matrix>,
+    compute_nanos: u64,
+    update: UpdateKind,
+}
+
+enum UpdateKind {
+    Dominant,
+    Sara(sara::SaraUpdate),
+    GoLore(golore::GoLoreUpdate),
+    OnlinePca(online_pca::OnlinePcaUpdate),
+}
+
+impl RefreshOutput {
+    /// Wall time the expensive phase took (observability: cumulative
+    /// refresh time is surfaced in the trainer's periodic log line).
+    pub fn compute_nanos(&self) -> u64 {
+        self.compute_nanos
+    }
+
+    /// Reclaim the gradient-snapshot buffer for reuse.
+    pub fn take_gradient(&mut self) -> Option<Matrix> {
+        self.grad.take()
+    }
+}
 
 /// A subspace-selection strategy for one weight matrix.
 pub trait Selector: Send {
     /// Strategy name for logs/tables.
     fn name(&self) -> &'static str;
 
-    /// Produce a fresh orthonormal projector `P in R^{m x r}` from the
-    /// current mini-batch gradient `g` (`m x n`, caller guarantees
-    /// `m <= n`). Called every `tau` steps (Algorithm 2, line 2).
-    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix;
+    /// Does this strategy read the gradient's *values*? Gradient-
+    /// independent selectors (GoLore's random sketch) return `false`, and
+    /// the optimizer then hands `begin_refresh` a shape-only stub
+    /// (`m x 0`) instead of paying a full snapshot copy at schedule time.
+    fn wants_gradient(&self) -> bool {
+        true
+    }
+
+    /// Begin a refresh from an owned snapshot of the mini-batch gradient
+    /// `g` (`m x n`, caller guarantees `m <= n`). Cheap: snapshots RNG and
+    /// evolving state in schedule order; the heavy work happens in
+    /// [`RefreshJob::run`]. When [`Selector::wants_gradient`] is `false`,
+    /// `g` may be a shape-only stub with zero columns.
+    fn begin_refresh(&mut self, g: Matrix, rank: usize) -> RefreshJob;
+
+    /// Install a completed refresh, absorbing the job's state updates
+    /// (advanced RNG, new basis, sampled indices) and returning the new
+    /// projector `P`. Panics if `out` came from a different selector kind.
+    fn install(&mut self, out: RefreshOutput) -> Matrix;
+
+    /// Synchronous refresh: `begin + run + install` back-to-back. This is
+    /// the classic inline path (Algorithm 2, line 2) and the behaviour
+    /// `refresh_lookahead = 0` reproduces bit-for-bit.
+    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
+        let snap = if self.wants_gradient() {
+            g.clone()
+        } else {
+            Matrix::zeros(g.rows, 0)
+        };
+        let out = self.begin_refresh(snap, rank).run();
+        self.install(out)
+    }
 }
 
 /// Instantiate a selector for layer `layer_idx` with a per-layer RNG stream
@@ -138,6 +284,70 @@ mod tests {
         let (md, ms) = (mean(&dom_overlaps), mean(&sara_overlaps));
         assert!(md > 0.95, "dominant should freeze, got {md}");
         assert!(ms < md - 0.1, "sara should explore: sara={ms} dom={md}");
+    }
+
+    /// The two-phase API's core contract: manually driving
+    /// begin → run → install (with the job detached from the selector
+    /// between phases) produces the same projectors and the same stream
+    /// continuation as the synchronous `select`, across multiple
+    /// successive refreshes, and the gradient-snapshot buffer round-trips
+    /// through the job intact. (That refreshes *advance* per-layer state —
+    /// RNG, Oja basis — is pinned by the per-selector behaviour tests:
+    /// adjacent-overlap and convergence tests fail if install drops the
+    /// write-back.)
+    #[test]
+    fn two_phase_refresh_matches_select_across_refreshes() {
+        for kind in [
+            crate::config::SelectorKind::Dominant,
+            crate::config::SelectorKind::Sara,
+            crate::config::SelectorKind::GoLore,
+            crate::config::SelectorKind::OnlinePca,
+        ] {
+            let mut sync = make_selector(kind, 11, 2);
+            let mut phased = make_selector(kind, 11, 2);
+            for t in 0..4u64 {
+                let g = planted_gradient(
+                    16,
+                    40,
+                    &[6.0, 5.0, 4.0, 3.0, 2.0, 1.0],
+                    0.05,
+                    9 | (t << 32),
+                );
+                let pa = sync.select(&g, 5);
+                let job = phased.begin_refresh(g.clone(), 5);
+                assert_eq!(job.rank(), 5);
+                let mut out = job.run();
+                assert!(out.compute_nanos() > 0);
+                let snap = out.take_gradient().expect("snapshot handed back");
+                assert_eq!(snap.data, g.data, "gradient buffer round-trips");
+                let pb = phased.install(out);
+                assert_eq!(pa.data, pb.data, "{kind:?} refresh {t}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different selector")]
+    fn installing_a_foreign_refresh_panics() {
+        let g = planted_gradient(12, 24, &[3.0, 2.0, 1.0], 0.1, 4);
+        let mut sara = Sara::new(1);
+        let mut golore = GoLore::new(1);
+        let out = sara.begin_refresh(g, 4).run();
+        golore.install(out);
+    }
+
+    #[test]
+    fn refresh_job_is_send() {
+        fn assert_send<T: Send>(_: &T) {}
+        let g = planted_gradient(8, 16, &[2.0, 1.0], 0.1, 6);
+        let mut sel = Sara::new(2);
+        let job = sel.begin_refresh(g, 3);
+        assert_send(&job);
+        // and actually run it on another thread, install back here
+        let out = std::thread::spawn(move || job.run()).join().unwrap();
+        let p = sel.install(out);
+        assert_eq!((p.rows, p.cols), (8, 3));
+        assert_orthonormal(&p);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! — as the paper observes — the drifting basis makes training less
 //! stable, which our Table 3 reproduction shows as higher PPL.
 
-use super::Selector;
+use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{qr_thin, Matrix};
 use crate::rng::Pcg64;
 
@@ -25,15 +25,25 @@ impl OnlinePca {
     }
 }
 
-impl Selector for OnlinePca {
-    fn name(&self) -> &'static str {
-        "online-pca"
-    }
+/// Captured state for one scheduled online-PCA refresh: the RNG clone (for
+/// basis (re)initialization) and a copy of the running basis. Sound to
+/// defer because at most one job per layer is in flight — the basis the
+/// job evolves is installed before the next one is captured.
+pub(super) struct OnlinePcaJob {
+    rng: Pcg64,
+    basis: Option<Matrix>,
+    eta: f32,
+}
 
-    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
+pub(super) struct OnlinePcaUpdate {
+    rng: Pcg64,
+}
+
+impl OnlinePcaJob {
+    pub(super) fn run(mut self, g: &Matrix, rank: usize) -> (Matrix, OnlinePcaUpdate) {
         let m = g.rows;
         let r = rank.min(m);
-        // (re)initialize on first call or shape/rank change
+        // (re)initialize on first refresh or shape/rank change
         let needs_init = match &self.basis {
             Some(b) => b.rows != m || b.cols != r,
             None => true,
@@ -59,8 +69,38 @@ impl Selector for OnlinePca {
         let mut stepped = b.clone();
         stepped.add_scaled(&ggtb, scale);
         let q = qr_thin(&stepped).0;
-        self.basis = Some(q.clone());
-        q
+        (q, OnlinePcaUpdate { rng: self.rng })
+    }
+}
+
+impl Selector for OnlinePca {
+    fn name(&self) -> &'static str {
+        "online-pca"
+    }
+
+    fn begin_refresh(&mut self, g: Matrix, rank: usize) -> RefreshJob {
+        RefreshJob::new(
+            g,
+            rank,
+            JobKind::OnlinePca(OnlinePcaJob {
+                rng: self.rng.clone(),
+                basis: self.basis.clone(),
+                eta: self.eta,
+            }),
+        )
+    }
+
+    fn install(&mut self, out: RefreshOutput) -> Matrix {
+        match out.update {
+            UpdateKind::OnlinePca(up) => {
+                self.rng = up.rng;
+                // the projector IS the evolved basis; keep a copy as the
+                // starting point of the next Oja step
+                self.basis = Some(out.p.clone());
+                out.p
+            }
+            _ => panic!("install: refresh output from a different selector"),
+        }
     }
 }
 

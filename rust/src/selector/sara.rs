@@ -14,7 +14,7 @@
 //! (only mathematically-degenerate gradients produce them), which keeps
 //! `delta = min_i p_i` positive over the sampled support.
 
-use super::Selector;
+use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{left_singular_vectors, Matrix};
 use crate::rng::{sample_weighted_without_replacement, Pcg64};
 
@@ -31,12 +31,24 @@ impl Sara {
     }
 }
 
-impl Selector for Sara {
-    fn name(&self) -> &'static str {
-        "sara"
-    }
+/// Captured state for one scheduled SARA refresh: a clone of the per-layer
+/// RNG stream, taken in schedule order. The job draws from the clone and
+/// hands the advanced stream back via [`SaraUpdate`], so deferred execution
+/// consumes the stream exactly as the classic inline refresh did.
+pub(super) struct SaraJob {
+    rng: Pcg64,
+}
 
-    fn select(&mut self, g: &Matrix, rank: usize) -> Matrix {
+/// State the owning [`Sara`] absorbs at install time.
+pub(super) struct SaraUpdate {
+    rng: Pcg64,
+    indices: Vec<usize>,
+}
+
+impl SaraJob {
+    /// Algorithm 2 lines 3-6: SVD, importance weights, sample-without-
+    /// replacement, column-select.
+    pub(super) fn run(mut self, g: &Matrix, rank: usize) -> (Matrix, SaraUpdate) {
         let (u, s) = left_singular_vectors(g);
         let m = u.cols;
         let r = rank.min(m);
@@ -48,18 +60,50 @@ impl Selector for Sara {
             vec![1.0 / m as f64; m]
         };
         // guard: if fewer than r strictly-positive weights (rank-deficient
-        // gradient), pad the support with uniform mass on the zero tail so
-        // the sampler stays well-defined.
+        // gradient), pad the support with uniform mass on the zero tail and
+        // renormalize so the vector stays a probability distribution
+        // (Lemma 3.3's delta = min_i p_i is then well-defined over the
+        // padded support too).
         let positive = weights.iter().filter(|&&w| w > 0.0).count();
         let weights = if positive < r {
             let eps = 1e-12;
-            weights.iter().map(|&w| w.max(eps)).collect()
+            let mut padded: Vec<f64> = weights.iter().map(|&w| w.max(eps)).collect();
+            let total: f64 = padded.iter().sum();
+            for w in padded.iter_mut() {
+                *w /= total;
+            }
+            padded
         } else {
             weights
         };
         let idx = sample_weighted_without_replacement(&mut self.rng, &weights, r);
-        self.last_indices = idx.clone();
-        u.select_columns(&idx)
+        debug_assert!(
+            idx.len() == r && idx.windows(2).all(|w| w[0] < w[1]),
+            "sampled support must be exactly {r} distinct sorted indices, got {idx:?}"
+        );
+        let p = u.select_columns(&idx);
+        (p, SaraUpdate { rng: self.rng, indices: idx })
+    }
+}
+
+impl Selector for Sara {
+    fn name(&self) -> &'static str {
+        "sara"
+    }
+
+    fn begin_refresh(&mut self, g: Matrix, rank: usize) -> RefreshJob {
+        RefreshJob::new(g, rank, JobKind::Sara(SaraJob { rng: self.rng.clone() }))
+    }
+
+    fn install(&mut self, out: RefreshOutput) -> Matrix {
+        match out.update {
+            UpdateKind::Sara(up) => {
+                self.rng = up.rng;
+                self.last_indices = up.indices;
+                out.p
+            }
+            _ => panic!("install: refresh output from a different selector"),
+        }
     }
 }
 

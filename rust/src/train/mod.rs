@@ -21,6 +21,23 @@
 //! `1 x numel` matrices without copying). Together with the workspace
 //! discipline inside [`crate::optim::LowRankState`], a steady-state
 //! optimizer pass performs no heap allocation.
+//!
+//! ## Pipelined subspace refresh
+//!
+//! With `refresh_lookahead = L >= 1`, the last per-step stall — the
+//! selector's SVD/Gram/eigh at every `tau`-th step — leaves the critical
+//! path too. A step whose refresh is due `L` steps later *schedules* a
+//! [`crate::selector::RefreshJob`] from its (post-all-reduce, post-clip)
+//! gradient inside the optimizer pass; right after the pass,
+//! [`launch_scheduled_refreshes`] moves those jobs onto the pool's
+//! dedicated background lane ([`WorkerPool::spawn_background`]), where
+//! they overlap with the next step's `engine.train_step` — the dominant
+//! PJRT cost. The install step (`t mod tau == 0`'s successor in 1-based
+//! terms) only joins the completed handle and swaps the double-buffered
+//! projector in, with momentum re-projection, so the refresh *schedule*
+//! of Algorithm 1 is unchanged and `L = 0` reproduces the classic inline
+//! refresh bit-for-bit. Per-layer refresh counts and cumulative refresh
+//! compute time are surfaced in the periodic log line.
 
 pub mod checkpoint;
 pub mod probe;
@@ -186,6 +203,10 @@ impl Trainer {
             lr,
             &mut self.deltas,
         );
+        // refreshes due `refresh_lookahead` steps from now were scheduled
+        // during the pass; launch them on the pool's background lane so
+        // their SVDs overlap with the next step's engine.train_step
+        launch_scheduled_refreshes(&self.pool, &mut self.opts);
         for (p, d) in self.params.iter_mut().zip(&self.deltas) {
             debug_assert_eq!(p.data.len(), d.data.len());
             for (w, &u) in p.data.iter_mut().zip(&d.data) {
@@ -194,6 +215,21 @@ impl Trainer {
         }
         self.step += 1;
         Ok(loss)
+    }
+
+    /// Aggregate refresh observability: `(max per-layer refresh_count,
+    /// cumulative refresh-compute millis across layers)`. Counts are equal
+    /// across low-rank layers (one shared `tau`), so the max reads as
+    /// "refreshes per layer so far".
+    pub fn refresh_totals(&self) -> (usize, f64) {
+        let mut per_layer_max = 0usize;
+        let mut nanos = 0u64;
+        for o in &self.opts {
+            let (c, ns) = o.refresh_stats();
+            per_layer_max = per_layer_max.max(c);
+            nanos += ns;
+        }
+        (per_layer_max, nanos as f64 / 1e6)
     }
 
     /// Pre-clip global gradient norm of the most recent step (observability
@@ -249,24 +285,30 @@ impl Trainer {
             if self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0 {
                 let vl = self.validate()?;
                 val_history.push((t + 1, vl));
+                let (refreshes, refresh_ms) = self.refresh_totals();
                 crate::info!(
                     "train",
-                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  gnorm {:.3}  lr {:.2e}",
+                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  gnorm {:.3}  lr {:.2e}  refr {}/layer {:.1}ms",
                     t + 1,
                     loss,
                     vl,
                     vl.exp(),
                     self.last_grad_norm,
-                    self.schedule.lr(t)
+                    self.schedule.lr(t),
+                    refreshes,
+                    refresh_ms
                 );
             } else if (t + 1) % 50 == 0 {
+                let (refreshes, refresh_ms) = self.refresh_totals();
                 crate::info!(
                     "train",
-                    "step {:>6}  loss {:.4}  gnorm {:.3}  lr {:.2e}",
+                    "step {:>6}  loss {:.4}  gnorm {:.3}  lr {:.2e}  refr {}/layer {:.1}ms",
                     t + 1,
                     loss,
                     self.last_grad_norm,
-                    self.schedule.lr(t)
+                    self.schedule.lr(t),
+                    refreshes,
+                    refresh_ms
                 );
             }
 
@@ -356,6 +398,20 @@ pub fn parallel_optimizer_step_into(
     });
 }
 
+/// Move every refresh job scheduled by the optimizer pass that just ran
+/// onto `pool`'s background lane, parking the completion handles back in
+/// the owning optimizers. Cheap when nothing is due (one `Option` check
+/// per parameter); the jobs overlap with whatever the caller does next —
+/// in [`Trainer::step_once`], the next `engine.train_step`.
+pub fn launch_scheduled_refreshes(pool: &WorkerPool, opts: &mut [ParamOptimizer]) {
+    for opt in opts.iter_mut() {
+        if let Some(job) = opt.take_scheduled_refresh() {
+            let handle = pool.spawn_background(move || job.run());
+            opt.set_in_flight(handle);
+        }
+    }
+}
+
 /// Pool shared by callers that don't own a [`Trainer`] (examples, benches):
 /// built on first use, reused for the process lifetime.
 fn fallback_pool() -> &'static WorkerPool {
@@ -386,6 +442,7 @@ pub fn parallel_optimizer_step(
         lr,
         &mut deltas,
     );
+    launch_scheduled_refreshes(fallback_pool(), opts);
     deltas
         .into_iter()
         .zip(grads)
@@ -461,6 +518,94 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// End-to-end pipelined refresh through the trainer's own machinery:
+    /// pooled optimizer pass + [`launch_scheduled_refreshes`] after it,
+    /// exactly as `step_once` drives it. With a constant gradient stream
+    /// the trajectories must be bit-identical to serial inline stepping,
+    /// refresh compute must land on the pool's background threads, and
+    /// refresh stats must aggregate.
+    #[test]
+    fn pipelined_pass_matches_serial_and_runs_refreshes_in_background() {
+        use crate::config::{SelectorKind, WrapperKind};
+
+        let pool = WorkerPool::new(3);
+        let mut cfg = OptimConfig::default();
+        cfg.wrapper = WrapperKind::GaLore;
+        cfg.selector = SelectorKind::Sara;
+        cfg.rank = 4;
+        cfg.update_period = 4;
+        let mut inline_cfg = cfg.clone();
+        inline_cfg.refresh_lookahead = 0;
+        cfg.refresh_lookahead = 1;
+
+        let make = |c: &OptimConfig| -> Vec<ParamOptimizer> {
+            vec![
+                ParamOptimizer::low_rank(
+                    12,
+                    20,
+                    c,
+                    crate::selector::make_selector(c.selector, 5, 0),
+                ),
+                ParamOptimizer::full(1, 10, c),
+                ParamOptimizer::low_rank(
+                    16,
+                    8,
+                    c,
+                    crate::selector::make_selector(c.selector, 5, 2),
+                ),
+            ]
+        };
+        let mut pipelined = make(&cfg);
+        let mut serial = make(&inline_cfg);
+        let mut grads = vec![
+            Tensor::from_vec(&[12, 20], (0..240).map(|i| (i as f32).sin()).collect()),
+            Tensor::from_vec(&[10], (0..10).map(|i| i as f32 * 0.1 - 0.4).collect()),
+            Tensor::from_vec(&[16, 8], (0..128).map(|i| (i as f32).cos()).collect()),
+        ];
+        let mut deltas: Vec<Matrix> = grads
+            .iter()
+            .map(|g| {
+                let (r, c) = matrix_dims(&g.shape);
+                Matrix::zeros(r, c)
+            })
+            .collect();
+
+        for step in 0..13 {
+            parallel_optimizer_step_into(
+                &pool, &mut pipelined, &mut grads, 0.05, &mut deltas,
+            );
+            launch_scheduled_refreshes(&pool, &mut pipelined);
+            for (i, (opt, g)) in serial.iter_mut().zip(&grads).enumerate() {
+                let (r, c) = matrix_dims(&g.shape);
+                let gm = Matrix::from_vec(r, c, g.data.clone());
+                let want = opt.step(&gm, 0.05);
+                assert_eq!(
+                    want.data, deltas[i].data,
+                    "step {step} param {i}: pipelined != inline serial"
+                );
+            }
+        }
+        // 13 steps at tau=4 -> installs at t = 1, 5, 9, 13; the bootstrap
+        // refresh is inline, the remaining 3 per layer ran in background
+        for opt in &pipelined {
+            let (count, nanos) = opt.refresh_stats();
+            match opt {
+                ParamOptimizer::LowRank(_) => {
+                    assert_eq!(count, 4);
+                    assert!(nanos > 0);
+                }
+                ParamOptimizer::Full { .. } => assert_eq!((count, nanos), (0, 0)),
+            }
+        }
+        // the counter is bumped before a job's handle resolves, and every
+        // spawned job has been joined by its install step by now
+        assert_eq!(
+            pool.background_jobs_completed(),
+            2 * 3,
+            "two low-rank layers x three pipelined refreshes"
+        );
     }
 
     /// Regression for the ISSUE acceptance criterion: the pool is built

@@ -22,8 +22,26 @@
 //!   selector refresh inside an optimizer step calling a parallel GEMM) are
 //!   detected via a thread-local flag and run inline serially instead of
 //!   deadlocking on the single job slot.
+//!
+//! ## Background jobs
+//!
+//! Broadcast jobs are synchronous by design: `run` blocks the submitter
+//! until every executor is done, which is what lets item closures borrow
+//! the submitting frame. Subspace-refresh pipelining needs the opposite —
+//! fire-and-forget work (an SVD for a projector due `lookahead` steps from
+//! now) that overlaps with subsequent broadcasts. [`WorkerPool::spawn_background`]
+//! provides it: jobs go to a queue drained by **dedicated** background
+//! threads (lazily spawned on first use, named `sara-bg-*`), so a
+//! long-running refresh never stalls the per-step broadcast's
+//! all-executors-done barrier and the serialized submit path stays
+//! deadlock-free. Each job returns a [`JobHandle`] that records which
+//! thread executed it (regression tests pin refreshes off the hot path)
+//! and re-raises the job's panic, if any, at [`JobHandle::join`].
+//! Dropping the pool completes all queued background jobs first, so a
+//! `join` racing a pool teardown never hangs.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{JoinHandle, ThreadId};
@@ -87,6 +105,73 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Queue + shutdown flag shared with the dedicated background workers.
+struct BgQueue {
+    jobs: VecDeque<Box<dyn FnOnce() + Send>>,
+    shutdown: bool,
+}
+
+struct Background {
+    queue: Mutex<BgQueue>,
+    cv: Condvar,
+    jobs_completed: AtomicU64,
+}
+
+/// Completion state of one background job.
+enum JobState<T> {
+    Pending,
+    Done {
+        result: std::thread::Result<T>,
+        executed_on: ThreadId,
+    },
+}
+
+struct JobSlot<T> {
+    state: Mutex<JobState<T>>,
+    cv: Condvar,
+}
+
+/// Completion handle for a detached background job (see
+/// [`WorkerPool::spawn_background`]). Dropping the handle does not cancel
+/// the job; it just discards the result.
+pub struct JobHandle<T> {
+    slot: Arc<JobSlot<T>>,
+}
+
+impl<T> JobHandle<T> {
+    /// Has the job finished (successfully or by panicking)?
+    pub fn is_finished(&self) -> bool {
+        matches!(&*self.slot.state.lock().unwrap(), JobState::Done { .. })
+    }
+
+    /// The thread the job ran on, once finished (regression tests pin that
+    /// refreshes execute on a background worker, not the hot path).
+    pub fn executed_on(&self) -> Option<ThreadId> {
+        match &*self.slot.state.lock().unwrap() {
+            JobState::Done { executed_on, .. } => Some(*executed_on),
+            JobState::Pending => None,
+        }
+    }
+
+    /// Block until the job completes and return its result, re-raising the
+    /// job's panic if it had one.
+    pub fn join(self) -> T {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, JobState::Pending) {
+                JobState::Done { result, .. } => {
+                    drop(st);
+                    match result {
+                        Ok(v) => return v,
+                        Err(p) => std::panic::resume_unwind(p),
+                    }
+                }
+                JobState::Pending => st = self.slot.cv.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
 /// A fixed set of worker threads, built once and reused for every job.
 pub struct WorkerPool {
     shared: Arc<Shared>,
@@ -97,6 +182,9 @@ pub struct WorkerPool {
     /// must wait for the in-flight job to drain (not clobber it).
     submit: Mutex<()>,
     jobs_completed: AtomicU64,
+    /// Background-job subsystem (queue + dedicated threads, lazily spawned).
+    background: Arc<Background>,
+    bg_handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl WorkerPool {
@@ -133,6 +221,12 @@ impl WorkerPool {
             threads,
             submit: Mutex::new(()),
             jobs_completed: AtomicU64::new(0),
+            background: Arc::new(Background {
+                queue: Mutex::new(BgQueue { jobs: VecDeque::new(), shutdown: false }),
+                cv: Condvar::new(),
+                jobs_completed: AtomicU64::new(0),
+            }),
+            bg_handles: Mutex::new(Vec::new()),
         }
     }
 
@@ -158,6 +252,86 @@ impl WorkerPool {
     /// Number of broadcast jobs this pool has completed.
     pub fn jobs_completed(&self) -> u64 {
         self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// Number of background jobs this pool has completed.
+    pub fn background_jobs_completed(&self) -> u64 {
+        self.background.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// ThreadIds of the dedicated background workers (empty until the
+    /// first `spawn_background` call lazily spawns them).
+    pub fn background_thread_ids(&self) -> Vec<ThreadId> {
+        self.bg_handles
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|h| h.thread().id())
+            .collect()
+    }
+
+    /// Run `f` as a detached background job on a dedicated background
+    /// worker, returning a completion handle. Background jobs never occupy
+    /// the broadcast executors, so a long-running job (a subspace-refresh
+    /// SVD) coexists with per-step `run`/`run_indexed` broadcasts without
+    /// delaying their all-executors barrier.
+    pub fn spawn_background<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        self.ensure_background_workers();
+        let slot = Arc::new(JobSlot {
+            state: Mutex::new(JobState::Pending),
+            cv: Condvar::new(),
+        });
+        let done = Arc::clone(&slot);
+        let bg = Arc::clone(&self.background);
+        let task: Box<dyn FnOnce() + Send> = Box::new(move || {
+            // a panicking job must still complete its handle (otherwise a
+            // join would hang); the panic is re-raised at join time
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            // count *before* signalling completion so the counter is exact
+            // by the time any `join` on this job returns
+            bg.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            let mut st = done.state.lock().unwrap();
+            *st = JobState::Done {
+                result,
+                executed_on: std::thread::current().id(),
+            };
+            done.cv.notify_all();
+        });
+        {
+            let mut q = self.background.queue.lock().unwrap();
+            assert!(!q.shutdown, "spawn_background on a shut-down pool");
+            q.jobs.push_back(task);
+            self.background.cv.notify_one();
+        }
+        JobHandle { slot }
+    }
+
+    /// Lazily spawn the dedicated background threads on first use, so
+    /// pools that never pipeline refreshes pay nothing.
+    fn ensure_background_workers(&self) {
+        let mut handles = self.bg_handles.lock().unwrap();
+        if !handles.is_empty() {
+            return;
+        }
+        // a couple of dedicated threads: refreshes are rare (every tau
+        // steps) but arrive in bursts (all layers share one tau), so two
+        // workers drain a burst twice as fast while staying near-idle
+        // otherwise; capped so transient oversubscription stays small
+        let n = (self.threads / 2).clamp(1, 4);
+        for w in 0..n {
+            let bg = Arc::clone(&self.background);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sara-bg-{w}"))
+                    .spawn(move || background_loop(bg))
+                    .expect("spawn background worker"),
+            );
+        }
     }
 
     /// Run `f(executor_index)` once on every executor (the caller runs
@@ -248,6 +422,38 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        {
+            let mut q = self.background.queue.lock().unwrap();
+            q.shutdown = true;
+            self.background.cv.notify_all();
+        }
+        for h in self.bg_handles.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dedicated background worker: drain the job queue, exit on shutdown.
+/// Queued jobs are completed (not discarded) before honoring shutdown, so
+/// every issued [`JobHandle`] eventually resolves and `join` cannot hang
+/// across a pool teardown.
+fn background_loop(bg: Arc<Background>) {
+    // nested pool use from inside a background job runs inline
+    IN_POOL_JOB.with(|c| c.set(true));
+    loop {
+        let job = {
+            let mut q = bg.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = bg.cv.wait(q).unwrap();
+            }
+        };
+        job(); // panics are caught (and counted) inside the task wrapper
     }
 }
 
@@ -391,6 +597,92 @@ mod tests {
             sum.fetch_add(i + 1, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn background_job_returns_value_and_runs_off_thread() {
+        let pool = WorkerPool::new(2);
+        assert!(pool.background_thread_ids().is_empty(), "bg threads are lazy");
+        let handle = pool.spawn_background(|| 6 * 7);
+        let bg_ids: HashSet<_> =
+            pool.background_thread_ids().into_iter().collect();
+        assert!(!bg_ids.is_empty());
+        let main_id = std::thread::current().id();
+        assert_eq!(handle.join(), 42);
+        // the job must complete on a dedicated background thread
+        let h2 = pool.spawn_background(|| std::thread::current().id());
+        let ran_on = h2.join();
+        assert_ne!(ran_on, main_id);
+        assert!(bg_ids.contains(&ran_on), "ran on a non-pool thread");
+        assert_eq!(pool.background_jobs_completed(), 2);
+    }
+
+    #[test]
+    fn background_handle_reports_finish_and_thread() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let handle = pool.spawn_background(move || {
+            rx.recv().unwrap();
+            "done"
+        });
+        assert!(!handle.is_finished());
+        assert!(handle.executed_on().is_none());
+        tx.send(()).unwrap();
+        let v = handle.join();
+        assert_eq!(v, "done");
+    }
+
+    #[test]
+    fn background_jobs_overlap_with_broadcasts() {
+        // a slow background job must not delay broadcast completion (the
+        // refresh-pipelining contract: SVDs off the critical path)
+        let pool = WorkerPool::new(3);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let slow = pool.spawn_background(move || {
+            rx.recv().unwrap();
+        });
+        // with the background job still blocked, broadcasts must complete
+        let sum = AtomicUsize::new(0);
+        for _ in 0..10 {
+            pool.run_indexed(8, |i| {
+                sum.fetch_add(i, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), 10 * 28);
+        assert!(!slow.is_finished());
+        tx.send(()).unwrap();
+        slow.join();
+    }
+
+    #[test]
+    fn background_job_panic_is_deferred_to_join() {
+        let pool = WorkerPool::new(2);
+        let handle = pool.spawn_background(|| panic!("deliberate bg panic"));
+        let joined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle.join()
+        }));
+        assert!(joined.is_err());
+        // the background worker survives a panicking job
+        assert_eq!(pool.spawn_background(|| 5).join(), 5);
+    }
+
+    #[test]
+    fn dropped_handle_does_not_cancel_the_job() {
+        let pool = WorkerPool::new(2);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&flag);
+        drop(pool.spawn_background(move || {
+            f2.store(1, Ordering::SeqCst);
+        }));
+        // synchronize on a second job: the queue is FIFO per worker, but
+        // with 2 bg workers order isn't guaranteed — poll instead
+        for _ in 0..500 {
+            if flag.load(Ordering::SeqCst) == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json perf-trajectory files by median_ns.
+
+Usage:
+    scripts/bench_diff.py CURRENT.json BASELINE.json [--threshold 0.25] [--strict]
+
+Cases are matched by result name. A case whose median regressed by more
+than the threshold (fraction, default 0.25 = +25%) is flagged with WARN.
+Exit status is 0 unless --strict is given, in which case any WARN makes
+the script exit 1 (opt-in CI gate; the default is advisory because bench
+medians on shared runners are noisy).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for r in doc.get("results", []):
+        name = r.get("name")
+        median = r.get("median_ns")
+        if name is not None and isinstance(median, (int, float)) and median > 0:
+            out[name] = float(median)
+    return out
+
+
+def fmt_ns(ns):
+    if ns < 1e3:
+        return f"{ns:.0f} ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.2f} us"
+    if ns < 1e9:
+        return f"{ns / 1e6:.2f} ms"
+    return f"{ns / 1e9:.3f} s"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="warn when median regresses by more than this fraction")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any case regressed past the threshold")
+    args = ap.parse_args()
+
+    current = load_results(args.current)
+    baseline = load_results(args.baseline)
+
+    shared = [n for n in baseline if n in current]
+    missing = [n for n in baseline if n not in current]
+    new = [n for n in current if n not in baseline]
+
+    warns = 0
+    width = max((len(n) for n in set(baseline) | set(current)), default=4)
+    print(f"perf diff vs {args.baseline} (warn at >{args.threshold:.0%} median regression)")
+    for name in shared:
+        base, cur = baseline[name], current[name]
+        delta = cur / base - 1.0
+        flag = ""
+        if delta > args.threshold:
+            flag = "  <-- WARN: regression"
+            warns += 1
+        elif delta < -args.threshold:
+            flag = "  (improved)"
+        print(f"  {name:<{width}}  base {fmt_ns(base):>10}  now {fmt_ns(cur):>10}  "
+              f"{delta:+7.1%}{flag}")
+    for name in missing:
+        print(f"  {name:<{width}}  present in baseline only (case removed/renamed?)")
+    for name in new:
+        print(f"  {name:<{width}}  new case (no baseline)")
+
+    if warns:
+        print(f"{warns} case(s) regressed past the threshold")
+        if args.strict:
+            return 1
+    else:
+        print("no regressions past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

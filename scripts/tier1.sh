@@ -6,6 +6,9 @@
 # 1. release build + full test suite (the tier-1 verify)
 # 2. fast hotpath bench smoke (SARA_BENCH_FAST=1) emitting the
 #    machine-readable perf trajectory to BENCH_hotpath.json at repo root.
+# 3. if a committed BENCH_baseline.json exists, diff medians against it
+#    and warn on >25% regressions (advisory; set TIER1_STRICT_PERF=1 to
+#    make regressions fail the gate).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -21,6 +24,25 @@ echo "== perf smoke: hotpath bench (fast mode) =="
   SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_hotpath.json" \
     cargo bench --bench hotpath
 )
+
+echo
+if [ -f "$REPO_ROOT/BENCH_baseline.json" ]; then
+  if ! command -v python3 >/dev/null 2>&1; then
+    echo "perf diff skipped: python3 not available on this host"
+  else
+    echo "== perf trajectory: diff vs committed baseline =="
+    strict_flag=""
+    if [ "${TIER1_STRICT_PERF:-0}" = "1" ]; then
+      strict_flag="--strict"
+    fi
+    python3 "$REPO_ROOT/scripts/bench_diff.py" \
+      "$REPO_ROOT/BENCH_hotpath.json" "$REPO_ROOT/BENCH_baseline.json" \
+      --threshold 0.25 $strict_flag
+  fi
+else
+  echo "no BENCH_baseline.json committed yet — record one on a quiet host with:"
+  echo "  cp BENCH_hotpath.json BENCH_baseline.json && git add BENCH_baseline.json"
+fi
 
 echo
 echo "tier-1 OK; perf trajectory at $REPO_ROOT/BENCH_hotpath.json"

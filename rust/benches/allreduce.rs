@@ -1,0 +1,77 @@
+//! Bench: the dist substrate's gradient reduction at the paper's 60M-config
+//! parameter family — single-threaded oracle (`coordinator::allreduce::
+//! average`) vs the bucketed pool reduce (`dist::BucketedAllReduce`) at
+//! 1 / 2 / 4 / 8 ranks.
+//!
+//! Emits the machine-readable perf trajectory via the existing `Bencher`
+//! JSON hook (`SARA_BENCH_JSON`, `{bench}` placeholder supported), default
+//! `BENCH_allreduce.json` — diffed by `scripts/bench_diff.py` alongside
+//! `BENCH_hotpath.json`. Note: the oracle consumes its input, so its row
+//! includes one clone of the worker gradient set per iteration; the
+//! `clone only` row measures that overhead for subtraction.
+
+use sara::coordinator::allreduce;
+use sara::dist::BucketedAllReduce;
+use sara::rng::Pcg64;
+use sara::runtime::Tensor;
+use sara::util::bench::{section, Bencher};
+use sara::util::pool::WorkerPool;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let pool = WorkerPool::with_default_threads();
+
+    // 60M-config layer family: attention + MLP blocks and an
+    // embedding-sized gradient (the imbalance that serial reduction chokes
+    // on), plus norm vectors
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![4096, 512],
+        vec![512, 512],
+        vec![512, 512],
+        vec![512, 1376],
+        vec![1376, 512],
+        vec![512],
+        vec![512],
+    ];
+    let sizes: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+    let total: usize = sizes.iter().sum();
+    section(&format!(
+        "gradient all-reduce ({} tensors, {:.1} MiB/rank)",
+        sizes.len(),
+        total as f64 * 4.0 / (1024.0 * 1024.0)
+    ));
+
+    let mut rng = Pcg64::new(0);
+    for world in [1usize, 2, 4, 8] {
+        let workers: Vec<Vec<Tensor>> = (0..world)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let n: usize = s.iter().product();
+                        let data: Vec<f32> =
+                            (0..n).map(|_| rng.next_normal() as f32).collect();
+                        Tensor::from_vec(s, data)
+                    })
+                    .collect()
+            })
+            .collect();
+        b.run(&format!("clone only          W={world}"), || {
+            black_box(workers.clone())
+        });
+        b.run(&format!("oracle average      W={world} (incl clone)"), || {
+            allreduce::average(workers.clone())
+        });
+        let mut red = BucketedAllReduce::new(world, &sizes, 512);
+        let mut out: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        b.run(
+            &format!("bucketed pool reduce W={world} ({}T)", pool.threads()),
+            || red.average_into(&pool, &workers, &mut out),
+        );
+    }
+
+    println!();
+    b.finish_or("allreduce", "BENCH_allreduce.json");
+}

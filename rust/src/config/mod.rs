@@ -95,6 +95,39 @@ impl Default for OptimConfig {
     }
 }
 
+/// Data-parallel sharding substrate configuration (`rust/src/dist/`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DistConfig {
+    /// Data-parallel world size W for the dist engine: gradient streams,
+    /// bucketed all-reduce ranks, and optimizer-state shards. `1`
+    /// (default) is bit-identical to the single-rank trajectory.
+    pub workers: usize,
+    /// Flat all-reduce bucket size in KiB (the granularity gradients are
+    /// packed into before the recursive-halving reduction).
+    pub bucket_kib: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self { workers: 1, bucket_kib: 512 }
+    }
+}
+
+impl DistConfig {
+    /// Reject values that would be silently pathological downstream
+    /// (0 workers is meaningless; 0-KiB buckets would degenerate to
+    /// one-element buckets — millions of work items per reduce).
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("dist.workers must be >= 1");
+        }
+        if self.bucket_kib == 0 {
+            bail!("dist.bucket_kib must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// Training-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -110,8 +143,13 @@ pub struct RunConfig {
     pub seed: u64,
     /// Dataset generator profile ("c4" | "slimpajama").
     pub dataset: String,
-    /// Number of simulated data-parallel workers.
+    /// Number of simulated data-parallel workers (legacy knob; the dist
+    /// substrate's world size is `max(workers, dist.workers)` — see
+    /// [`RunConfig::world`]).
     pub workers: usize,
+    /// Data-parallel sharding substrate (bucketed all-reduce + ZeRO-1
+    /// optimizer-state shards).
+    pub dist: DistConfig,
     /// Evaluate validation loss every N steps (0 = only at the end).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -132,6 +170,7 @@ impl Default for RunConfig {
             seed: 42,
             dataset: "c4".into(),
             workers: 1,
+            dist: DistConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             probe_every: 0,
@@ -170,6 +209,15 @@ pub fn parse_selector(s: &str) -> Result<SelectorKind> {
 }
 
 impl RunConfig {
+    /// Effective data-parallel world size: the dist substrate's rank count
+    /// and the number of per-step gradient streams. The legacy `workers`
+    /// knob and the new `dist.workers` knob both raise it; `1` (default)
+    /// keeps the single-rank trajectory bit-identical to before the dist
+    /// subsystem existed.
+    pub fn world(&self) -> usize {
+        self.workers.max(self.dist.workers).max(1)
+    }
+
     /// Human-readable method label matching the paper's table rows,
     /// e.g. "GaLore-SARA-Adam" or "Full-Rank Adam".
     pub fn method_label(&self) -> String {
@@ -206,6 +254,10 @@ impl RunConfig {
         self.warmup_steps = args.get_usize("warmup", self.warmup_steps)?;
         self.seed = args.get_u64("seed", self.seed)?;
         self.workers = args.get_usize("workers", self.workers)?;
+        self.dist.workers = args.get_usize("dist-workers", self.dist.workers)?;
+        self.dist.bucket_kib =
+            args.get_usize("bucket-kib", self.dist.bucket_kib)?;
+        self.dist.validate()?;
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.probe_every = args.get_usize("probe-every", self.probe_every)?;
         if let Some(d) = args.get("dataset") {
@@ -244,6 +296,11 @@ impl RunConfig {
         cfg.warmup_steps = doc.get_usize("run", "warmup").unwrap_or(cfg.warmup_steps);
         cfg.seed = doc.get_usize("run", "seed").unwrap_or(cfg.seed as usize) as u64;
         cfg.workers = doc.get_usize("run", "workers").unwrap_or(cfg.workers);
+        cfg.dist.workers =
+            doc.get_usize("dist", "workers").unwrap_or(cfg.dist.workers);
+        cfg.dist.bucket_kib =
+            doc.get_usize("dist", "bucket_kib").unwrap_or(cfg.dist.bucket_kib);
+        cfg.dist.validate()?;
         cfg.eval_every = doc.get_usize("run", "eval_every").unwrap_or(cfg.eval_every);
         cfg.probe_every =
             doc.get_usize("run", "probe_every").unwrap_or(cfg.probe_every);
@@ -320,6 +377,38 @@ mod tests {
     }
 
     #[test]
+    fn dist_knobs_parse_from_cli_and_default_to_single_rank() {
+        let c = RunConfig::default();
+        assert_eq!(c.dist, DistConfig { workers: 1, bucket_kib: 512 });
+        assert_eq!(c.world(), 1);
+
+        let args = Args::parse(
+            "train --dist-workers 4 --bucket-kib 128"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dist.workers, 4);
+        assert_eq!(c.dist.bucket_kib, 128);
+        assert_eq!(c.world(), 4);
+        // the legacy workers knob also raises the world size
+        c.dist.workers = 1;
+        c.workers = 3;
+        assert_eq!(c.world(), 3);
+
+        // degenerate values are rejected, not silently clamped
+        let bad = Args::parse(
+            "train --bucket-kib 0".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+        let bad = Args::parse(
+            "train --dist-workers 0".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
     fn bad_selector_is_an_error() {
         assert!(parse_selector("frobnicate").is_err());
         assert!(parse_inner("adamw9000").is_err());
@@ -348,6 +437,10 @@ rank = 16
 tau = 40
 refresh_lookahead = 1
 momentum_reproject = false
+
+[dist]
+workers = 2
+bucket_kib = 64
 "#,
         )
         .unwrap();
@@ -359,5 +452,8 @@ momentum_reproject = false
         assert_eq!(c.optim.rank, 16);
         assert_eq!(c.optim.refresh_lookahead, 1);
         assert!(!c.optim.momentum_reproject);
+        assert_eq!(c.dist.workers, 2);
+        assert_eq!(c.dist.bucket_kib, 64);
+        assert_eq!(c.world(), 2);
     }
 }

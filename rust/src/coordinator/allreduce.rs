@@ -5,6 +5,13 @@
 //! gradients here. The reduction is a recursive-halving tree (the same
 //! communication pattern a real ring/tree all-reduce schedules), so worker
 //! count and reduction order are explicit and testable.
+//!
+//! **Status: test oracle.** The trainer's step path now reduces through
+//! [`crate::dist::BucketedAllReduce`] (bucketed, pooled, workspace-reused);
+//! [`average`] is retained as the reference the bucketed reduce is pinned
+//! against — same pairwise halving order, same final `1/n` scale, so the
+//! two are bit-identical on identical inputs (see the property test in
+//! `tests/proptest_invariants.rs`).
 
 use crate::runtime::Tensor;
 

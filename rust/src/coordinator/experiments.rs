@@ -38,6 +38,9 @@ fn run_one(
         result.wall_secs,
         result.optimizer_state_bytes as f64 / (1024.0 * 1024.0)
     );
+    if result.dist.world > 1 {
+        crate::info!("exp", "{}", result.dist.row());
+    }
     Ok((result, trainer.into_engine()))
 }
 

@@ -1,6 +1,6 @@
-//! L3 coordinator: simulated data-parallel gradient reduction, the
-//! experiment sweep runner behind every paper table/figure, and result
-//! recording.
+//! L3 coordinator: the experiment sweep runner behind every paper
+//! table/figure, result recording, and the legacy single-threaded
+//! all-reduce (retained as the oracle for `crate::dist::allreduce`).
 
 pub mod allreduce;
 pub mod experiments;

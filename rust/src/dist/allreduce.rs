@@ -1,0 +1,274 @@
+//! Bucketed recursive-halving all-reduce executed as pool broadcast work.
+//!
+//! Replaces the toy `coordinator::allreduce::average` (which materializes
+//! and reduces the whole gradient set single-threaded) on the trainer's
+//! step path. The old `average` is **retained as the test oracle**: the
+//! bucketed reduce performs the *same per-element arithmetic* — pairwise
+//! recursive-halving sums in the same (i, i + stride) order followed by one
+//! multiply by `1/W` — so its output is bit-identical to the oracle; the
+//! property test in `tests/proptest_invariants.rs` pins `<= 1e-6` and the
+//! unit tests here pin exact equality.
+//!
+//! ## Execution model
+//!
+//! Per call: (1) *pack* — every (rank, bucket) pair copies its segments
+//! from the per-worker gradient tensors into a flat staging area (the
+//! contiguous buffers a real NCCL-style reduction would ship); (2)
+//! *reduce + scatter* — each bucket is claimed by one pool executor, which
+//! runs the halving tree across the worker blocks, scales by `1/W`, and
+//! scatters the result back into the output tensors. Buckets are
+//! independent, so the reduction parallelizes to `min(#buckets, pool
+//! threads)` regardless of how skewed the parameter sizes are — the same
+//! imbalance-proofing the optimizer pass got from work-queue claiming.
+//!
+//! ## Workspace discipline
+//!
+//! The flat staging area (`W x total` f32) and the scatter pointer table
+//! are allocated once in [`BucketedAllReduce::new`] and reused every call:
+//! a steady-state reduce performs **zero** heap allocations (enforced by
+//! the full-step counting-allocator test in `dist::mod`).
+
+use super::topology::BucketPlan;
+use crate::runtime::Tensor;
+use crate::util::pool::{SendPtr, WorkerPool};
+
+/// Reusable bucketed all-reduce engine for a fixed (world, shapes) pair.
+pub struct BucketedAllReduce {
+    plan: BucketPlan,
+    world: usize,
+    /// Flat staging: worker `w`'s copy of the concatenated gradient space
+    /// lives at `flat[w * plan.total ..][.. plan.total]`.
+    flat: Vec<f32>,
+    /// Per-parameter output base pointers, rebuilt (without reallocating)
+    /// each call.
+    out_ptrs: Vec<SendPtr<f32>>,
+    /// Element count per parameter (shape check).
+    sizes: Vec<usize>,
+}
+
+impl BucketedAllReduce {
+    /// `sizes[p]` = element count of parameter `p`.
+    pub fn new(world: usize, sizes: &[usize], bucket_kib: usize) -> Self {
+        let world = world.max(1);
+        let plan = BucketPlan::new(sizes, bucket_kib);
+        let flat_len = if world > 1 { world * plan.total } else { 0 };
+        Self {
+            plan,
+            world,
+            flat: vec![0.0; flat_len],
+            out_ptrs: Vec::with_capacity(sizes.len()),
+            sizes: sizes.to_vec(),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    /// Element count per parameter this engine was constructed over.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Average `workers[w][p]` across `w` into `out[p]`, bit-identical to
+    /// `coordinator::allreduce::average` on the same inputs. `out` must be
+    /// pre-shaped (same tensor shapes as each worker's gradient set); its
+    /// prior contents are fully overwritten.
+    pub fn average_into(
+        &mut self,
+        pool: &WorkerPool,
+        workers: &[Vec<Tensor>],
+        out: &mut [Tensor],
+    ) {
+        let w = workers.len();
+        assert_eq!(w, self.world, "worker count != constructed world");
+        assert_eq!(out.len(), self.sizes.len(), "output tensor count");
+        for (wi, ws) in workers.iter().enumerate() {
+            assert_eq!(ws.len(), self.sizes.len(), "worker {wi} gradient set size");
+            for (p, (g, &n)) in ws.iter().zip(&self.sizes).enumerate() {
+                assert_eq!(
+                    g.data.len(),
+                    n,
+                    "worker {wi} grad[{p}] element count"
+                );
+            }
+        }
+        for (p, (o, &n)) in out.iter().zip(&self.sizes).enumerate() {
+            assert_eq!(o.data.len(), n, "out[{p}] element count");
+        }
+        if w == 1 {
+            // single rank: the oracle's halving loop is empty and its
+            // 1/1 scale is the f32 identity, so a plain copy is
+            // bit-identical (and skips the staging round-trip)
+            for (o, g) in out.iter_mut().zip(&workers[0]) {
+                o.data.copy_from_slice(&g.data);
+            }
+            return;
+        }
+
+        let total = self.plan.total;
+        let nb = self.plan.buckets.len();
+        let plan = &self.plan;
+        let flat_ptr = SendPtr(self.flat.as_mut_ptr());
+
+        // pack: one work item per (worker, bucket); writes are disjoint by
+        // construction (each item owns its bucket range in its worker
+        // block), reads are shared borrows of the gradient tensors
+        pool.run_indexed(w * nb, |item| {
+            let wi = item / nb;
+            let b = item % nb;
+            let bucket = &plan.buckets[b];
+            let grads = &workers[wi];
+            // Safety: disjoint destination range per item (see above);
+            // `flat` outlives the call because run_indexed blocks.
+            unsafe {
+                let dst = flat_ptr.add(wi * total + bucket.start);
+                for s in &bucket.segs {
+                    let src = &grads[s.param].data[s.param_off..s.param_off + s.len];
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr(),
+                        dst.add(s.bucket_off),
+                        s.len,
+                    );
+                }
+            }
+        });
+
+        // reduce + scale + scatter: one work item per bucket
+        self.out_ptrs.clear();
+        for t in out.iter_mut() {
+            self.out_ptrs.push(SendPtr(t.data.as_mut_ptr()));
+        }
+        let out_ptrs = &self.out_ptrs;
+        let inv = 1.0 / w as f32;
+        pool.run_indexed(nb, |b| {
+            let bucket = &plan.buckets[b];
+            // Safety: each item touches only its bucket's range in every
+            // worker block and only its bucket's segments of the output
+            // tensors — disjoint across items; all pointees outlive the
+            // blocking run_indexed call.
+            unsafe {
+                // recursive halving across worker blocks — the oracle's
+                // exact pairing and order, so sums are bit-identical
+                let mut stride = 1usize;
+                while stride < w {
+                    let mut i = 0usize;
+                    while i + stride < w {
+                        let dst = flat_ptr.add(i * total + bucket.start);
+                        let src =
+                            flat_ptr.add((i + stride) * total + bucket.start);
+                        for k in 0..bucket.len {
+                            *dst.add(k) += *src.add(k);
+                        }
+                        i += stride * 2;
+                    }
+                    stride *= 2;
+                }
+                // block 0 now holds the sum: scale by 1/W and scatter
+                let red = flat_ptr.add(bucket.start);
+                for s in &bucket.segs {
+                    let op = out_ptrs[s.param];
+                    for k in 0..s.len {
+                        *op.add(s.param_off + k) = *red.add(s.bucket_off + k) * inv;
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allreduce;
+    use crate::rng::Pcg64;
+
+    fn worker_grads(seed: u64, shapes: &[Vec<usize>]) -> Vec<Tensor> {
+        let mut rng = Pcg64::new(seed);
+        shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                let data: Vec<f32> =
+                    (0..n).map(|_| rng.next_normal() as f32).collect();
+                Tensor::from_vec(s, data)
+            })
+            .collect()
+    }
+
+    fn zeros_like(shapes: &[Vec<usize>]) -> Vec<Tensor> {
+        shapes.iter().map(|s| Tensor::zeros(s)).collect()
+    }
+
+    #[test]
+    fn bucketed_reduce_is_bit_identical_to_oracle() {
+        let shapes: Vec<Vec<usize>> =
+            vec![vec![7, 13], vec![300], vec![2, 2], vec![33, 5]];
+        let sizes: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product()).collect();
+        let pool = WorkerPool::new(4);
+        for world in [1usize, 2, 3, 4, 5, 8] {
+            let workers: Vec<Vec<Tensor>> =
+                (0..world).map(|w| worker_grads(w as u64, &shapes)).collect();
+            let mut red = BucketedAllReduce::new(world, &sizes, 1);
+            let mut out = zeros_like(&shapes);
+            red.average_into(&pool, &workers, &mut out);
+            let oracle = allreduce::average(workers.clone());
+            for (p, (a, b)) in out.iter().zip(&oracle).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "world {world} param {p}: bucketed != oracle"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_engine_is_reusable_and_overwrites_stale_output() {
+        let shapes: Vec<Vec<usize>> = vec![vec![10, 10], vec![17]];
+        let sizes: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product()).collect();
+        let pool = WorkerPool::new(2);
+        let mut red = BucketedAllReduce::new(2, &sizes, 1);
+        let mut out = zeros_like(&shapes);
+        for round in 0..3u64 {
+            let workers: Vec<Vec<Tensor>> = (0..2)
+                .map(|w| worker_grads(100 * round + w, &shapes))
+                .collect();
+            // poison the output to prove full overwrite
+            for t in out.iter_mut() {
+                t.data.fill(f32::NAN);
+            }
+            red.average_into(&pool, &workers, &mut out);
+            let oracle = allreduce::average(workers);
+            for (a, b) in out.iter().zip(&oracle) {
+                assert_eq!(a.data, b.data, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_is_a_plain_copy() {
+        let shapes: Vec<Vec<usize>> = vec![vec![4, 4]];
+        let pool = WorkerPool::new(1);
+        let mut red = BucketedAllReduce::new(1, &[16], 64);
+        let workers = vec![worker_grads(1, &shapes)];
+        let mut out = zeros_like(&shapes);
+        red.average_into(&pool, &workers, &mut out);
+        assert_eq!(out[0].data, workers[0][0].data);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker count")]
+    fn world_mismatch_panics() {
+        let pool = WorkerPool::new(1);
+        let mut red = BucketedAllReduce::new(2, &[4], 64);
+        let workers = vec![vec![Tensor::zeros(&[4])]];
+        let mut out = vec![Tensor::zeros(&[4])];
+        red.average_into(&pool, &workers, &mut out);
+    }
+}

@@ -1,0 +1,207 @@
+//! Data-parallel sharding substrate: bucketed pool all-reduce, ZeRO-1-style
+//! sharded low-rank optimizer state, and per-rank subspace-refresh
+//! ownership.
+//!
+//! The paper's experiments run 8-way data parallel. The original substrate
+//! simulated that with `coordinator::allreduce::average` — a toy that
+//! materializes every worker's full gradient set and reduces it
+//! single-threaded — and replicated the complete low-rank optimizer state
+//! on every rank, exactly the memory the low-rank method exists to save.
+//! This module is the real engine:
+//!
+//! * [`topology`] — deterministic rank/shard assignment ([`Topology`]) and
+//!   the fixed-size flat bucket plan ([`BucketPlan`]) every rank derives
+//!   identically.
+//! * [`allreduce`] — [`BucketedAllReduce`]: pack → recursive-halving
+//!   reduce → scale/scatter, executed as `WorkerPool` broadcast work with
+//!   zero steady-state allocation. Bit-identical to the retained
+//!   `coordinator::allreduce::average` oracle.
+//! * [`sharded_state`] — [`ShardedState`]: each rank owns the
+//!   inner-optimizer moments and projector for its parameter shard; deltas
+//!   are all-gathered after the owner applies its update.
+//! * [`refresh`] — subspace refreshes are launched only by the owning rank
+//!   and the installed `P` broadcast, so per-tau SVD/Gram cost divides by
+//!   `W` instead of duplicating.
+//!
+//! `dist.workers = 1` (the default) is bit-identical to the single-rank
+//! trajectory (pinned by `tests/integration_dist.rs`); `workers > 1`
+//! reduces through the bucket plan and shards the state so per-rank
+//! optimizer bytes are ≈ `1/W` of the replicated total.
+
+pub mod allreduce;
+pub mod refresh;
+pub mod sharded_state;
+pub mod topology;
+
+pub use allreduce::BucketedAllReduce;
+pub use sharded_state::ShardedState;
+pub use topology::{Bucket, BucketPlan, Segment, Topology};
+
+/// Per-run observability for the dist substrate: surfaced as the trainer's
+/// `dist` report row and carried on `TrainResult`.
+#[derive(Clone, Debug, Default)]
+pub struct DistReport {
+    /// Data-parallel world size W.
+    pub world: usize,
+    /// Buckets in the all-reduce plan and their capacity in elements.
+    pub bucket_count: usize,
+    pub bucket_elems: usize,
+    /// Optimizer-state bytes held by each rank (its shard only).
+    pub per_rank_state_bytes: Vec<usize>,
+    /// Projector refreshes performed, attributed to the owning rank.
+    pub per_rank_refreshes: Vec<usize>,
+    /// Wall time spent in the gradient reduction, and calls made.
+    pub reduce_nanos: u64,
+    pub reduce_calls: u64,
+    /// Aggregate per-step delta all-gather traffic ((W-1) x delta bytes).
+    pub allgather_bytes_per_step: usize,
+    /// Cumulative projector-broadcast bytes (owner -> W-1 ranks).
+    pub projector_bcast_bytes: usize,
+}
+
+impl DistReport {
+    /// One-line report row for logs:
+    /// `dist W=2  state/rank 1.5/1.4 MiB  reduce 12.3ms/300  refr 4+4  ...`.
+    pub fn row(&self) -> String {
+        let mib = |b: usize| b as f64 / (1024.0 * 1024.0);
+        let state: Vec<String> = self
+            .per_rank_state_bytes
+            .iter()
+            .map(|&b| format!("{:.2}", mib(b)))
+            .collect();
+        let refr: Vec<String> =
+            self.per_rank_refreshes.iter().map(|c| c.to_string()).collect();
+        format!(
+            "dist W={}  buckets {}x{:.1}KiB  state/rank [{}] MiB  reduce {:.1}ms/{} calls  refr/rank [{}]  allgather {:.2} MiB/step  P-bcast {:.2} MiB",
+            self.world,
+            self.bucket_count,
+            self.bucket_elems as f64 * 4.0 / 1024.0,
+            state.join(" "),
+            self.reduce_nanos as f64 / 1e6,
+            self.reduce_calls,
+            refr.join(" "),
+            mib(self.allgather_bytes_per_step),
+            mib(self.projector_bcast_bytes),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptimConfig, SelectorKind, WrapperKind};
+    use crate::linalg::Matrix;
+    use crate::optim::ParamOptimizer;
+    use crate::rng::Pcg64;
+    use crate::runtime::Tensor;
+    use crate::selector::make_selector;
+    use crate::util::alloc_count::thread_alloc_count;
+    use crate::util::pool::WorkerPool;
+
+    /// The ISSUE's satellite: the **full step** — bucketed reduction,
+    /// sharded optimizer pass, refresh-launch check, and weight apply —
+    /// performs zero heap allocations in steady state. A 1-thread pool
+    /// degenerates to inline execution on the calling thread, so the
+    /// per-thread counting allocator observes the whole pipeline.
+    #[test]
+    fn full_step_with_reduction_is_allocation_free() {
+        let pool = WorkerPool::new(1);
+        let world = 2;
+        let mut cfg = OptimConfig::default();
+        cfg.wrapper = WrapperKind::GaLore;
+        cfg.selector = SelectorKind::Dominant;
+        cfg.rank = 4;
+        cfg.update_period = 10_000; // no refresh during measurement
+        let shapes: Vec<Vec<usize>> = vec![vec![16, 24], vec![40]];
+        let sizes: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product()).collect();
+        let opts = vec![
+            ParamOptimizer::low_rank(16, 24, &cfg, make_selector(cfg.selector, 1, 0)),
+            ParamOptimizer::full(1, 40, &cfg),
+        ];
+        let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+        let mut sharded =
+            ShardedState::new(opts, Topology::new(world, &weights));
+        let mut reducer = BucketedAllReduce::new(world, &sizes, 1);
+
+        let mut rng = Pcg64::new(11);
+        let workers: Vec<Vec<Tensor>> = (0..world)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let n: usize = s.iter().product();
+                        let data: Vec<f32> =
+                            (0..n).map(|_| rng.next_normal() as f32).collect();
+                        Tensor::from_vec(s, data)
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut reduced: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let mut deltas: Vec<Matrix> =
+            vec![Matrix::zeros(16, 24), Matrix::zeros(1, 40)];
+        let mut params: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::zeros(s)).collect();
+
+        fn full_step(
+            pool: &WorkerPool,
+            workers: &[Vec<Tensor>],
+            sharded: &mut ShardedState,
+            reducer: &mut BucketedAllReduce,
+            reduced: &mut [Tensor],
+            deltas: &mut [Matrix],
+            params: &mut [Tensor],
+        ) {
+            reducer.average_into(pool, workers, reduced);
+            sharded.step_into(pool, reduced, 0.01, deltas);
+            sharded.launch_owned_refreshes(pool);
+            for (p, d) in params.iter_mut().zip(deltas.iter()) {
+                for (w, &u) in p.data.iter_mut().zip(&d.data) {
+                    *w -= u;
+                }
+            }
+        }
+
+        // warmup: bootstrap refresh + out_ptrs capacity fill
+        for _ in 0..3 {
+            full_step(
+                &pool, &workers, &mut sharded, &mut reducer, &mut reduced,
+                &mut deltas, &mut params,
+            );
+        }
+        let before = thread_alloc_count();
+        for _ in 0..25 {
+            full_step(
+                &pool, &workers, &mut sharded, &mut reducer, &mut reduced,
+                &mut deltas, &mut params,
+            );
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "{allocs} allocations in steady-state full step (reduce + \
+             sharded optimizer + apply)"
+        );
+    }
+
+    #[test]
+    fn report_row_renders() {
+        let r = DistReport {
+            world: 2,
+            bucket_count: 3,
+            bucket_elems: 256,
+            per_rank_state_bytes: vec![1024, 2048],
+            per_rank_refreshes: vec![4, 2],
+            reduce_nanos: 1_500_000,
+            reduce_calls: 10,
+            allgather_bytes_per_step: 4096,
+            projector_bcast_bytes: 8192,
+        };
+        let row = r.row();
+        assert!(row.contains("W=2"), "{row}");
+        assert!(row.contains("reduce 1.5ms/10 calls"), "{row}");
+        assert!(row.contains("refr/rank [4 2]"), "{row}");
+    }
+}

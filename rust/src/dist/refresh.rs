@@ -1,0 +1,131 @@
+//! Per-rank subspace-refresh ownership.
+//!
+//! Under replicated data parallelism every rank would redundantly run the
+//! per-tau selector refresh (SVD / Gram / QR) for every layer. With the
+//! ZeRO-1 sharding of `dist::sharded_state`, a layer's refresh is launched
+//! **only by its owning rank** — the per-tau refresh compute divides by
+//! `W` — and the installed projector `P` is broadcast to the other ranks
+//! (accounted by [`projector_broadcast_bytes`]; in the single-process
+//! simulation the broadcast is the shared install itself).
+//!
+//! [`launch_owned_refreshes`] is the dist-aware counterpart of
+//! `train::launch_scheduled_refreshes`: identical launch semantics (so
+//! trajectories are unchanged), plus per-owner attribution.
+
+use super::topology::Topology;
+use crate::optim::ParamOptimizer;
+use crate::util::pool::WorkerPool;
+
+/// Move every refresh job scheduled by the optimizer pass that just ran
+/// onto `pool`'s background lane, attributing each launch to the layer's
+/// owning rank in `launched`. Exactly one rank — the owner — ever launches
+/// a given layer's job (the topology maps each parameter to one rank), so
+/// refresh compute is partitioned, never duplicated. The launch sequence
+/// itself is `train::launch_refresh` — shared with the legacy path, so
+/// the two cannot diverge.
+pub fn launch_owned_refreshes(
+    pool: &WorkerPool,
+    opts: &mut [ParamOptimizer],
+    topo: &Topology,
+    launched: &mut [u64],
+) {
+    assert_eq!(opts.len(), topo.params(), "topology/param count mismatch");
+    assert_eq!(launched.len(), topo.world(), "one counter per rank");
+    for (i, opt) in opts.iter_mut().enumerate() {
+        if crate::train::launch_refresh(pool, opt) {
+            launched[topo.owner_of(i)] += 1;
+        }
+    }
+}
+
+/// Refreshes performed so far (inline bootstrap + pipelined), attributed
+/// to each layer's owning rank. Structural: the owner performed them all.
+pub fn per_rank_refresh_counts(
+    opts: &[ParamOptimizer],
+    topo: &Topology,
+) -> Vec<usize> {
+    let mut counts = vec![0usize; topo.world()];
+    for (i, opt) in opts.iter().enumerate() {
+        counts[topo.owner_of(i)] += opt.refresh_stats().0;
+    }
+    counts
+}
+
+/// Cumulative bytes of projector broadcasts: each installed `P` (current
+/// dims x refresh count) is shipped from its owner to the other `W - 1`
+/// ranks. Zero for a single rank.
+pub fn projector_broadcast_bytes(opts: &[ParamOptimizer], world: usize) -> usize {
+    if world <= 1 {
+        return 0;
+    }
+    let mut bytes = 0usize;
+    for opt in opts {
+        if let Some(p) = opt.projector() {
+            let (count, _) = opt.refresh_stats();
+            bytes += p.rows * p.cols * 4 * count * (world - 1);
+        }
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptimConfig, SelectorKind, WrapperKind};
+    use crate::linalg::Matrix;
+    use crate::rng::Pcg64;
+    use crate::selector::make_selector;
+
+    #[test]
+    fn launches_land_on_owner_and_background_threads() {
+        let pool = WorkerPool::new(2);
+        let mut cfg = OptimConfig::default();
+        cfg.wrapper = WrapperKind::GaLore;
+        cfg.selector = SelectorKind::Dominant;
+        cfg.rank = 3;
+        cfg.update_period = 3;
+        cfg.refresh_lookahead = 1;
+        let mut opts: Vec<ParamOptimizer> = (0..3)
+            .map(|i| {
+                ParamOptimizer::low_rank(
+                    8,
+                    12,
+                    &cfg,
+                    make_selector(cfg.selector, 1, i),
+                )
+            })
+            .collect();
+        // LPT: param 1 (weight 10) is taken first -> rank 0; params 0 and
+        // 2 then land on the lighter rank 1
+        let topo = Topology::new(2, &[1, 10, 1]);
+        assert_eq!(topo.owner_of(1), 0); // heaviest first -> rank 0
+        let mut launched = vec![0u64; 2];
+        let mut rng = Pcg64::new(3);
+        let mut out = Matrix::zeros(8, 12);
+        for _ in 0..7 {
+            let g = Matrix::randn(8, 12, 1.0, &mut rng);
+            for opt in opts.iter_mut() {
+                opt.step_into(&g, 0.05, &mut out);
+            }
+            launch_owned_refreshes(&pool, &mut opts, &topo, &mut launched);
+        }
+        // tau=3, L=1, 7 steps: schedule steps t=3 and t=6 -> 2 launches
+        // per layer, attributed by ownership
+        let by_owner: Vec<u64> = (0..2)
+            .map(|r| {
+                (0..3)
+                    .filter(|&p| topo.owner_of(p) == r)
+                    .map(|_| 2u64)
+                    .sum()
+            })
+            .collect();
+        assert_eq!(launched, by_owner);
+        assert_eq!(launched.iter().sum::<u64>(), 6);
+        // structural refresh attribution covers the inline bootstrap too
+        let counts = per_rank_refresh_counts(&opts, &topo);
+        assert_eq!(counts.iter().sum::<usize>(), 3 * 3); // 3 layers x 3 installs
+        // broadcast accounting: P is 8x3 (short side 8), 3 installs each
+        let bcast = projector_broadcast_bytes(&opts, 2);
+        assert_eq!(bcast, 3 * (8 * 3 * 4) * 3 * 1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Rank/shard assignment and the deterministic bucket plan.
+//!
+//! [`Topology`] partitions the parameter list across `W` data-parallel
+//! ranks (ZeRO-1 ownership: the owner holds the inner-optimizer moments and
+//! projector for its shard and launches its subspace refreshes).
+//! [`BucketPlan`] packs the concatenation of all per-parameter gradients
+//! into fixed-size flat buckets — the unit the bucketed all-reduce ships
+//! and reduces. Both are pure functions of their inputs (no RNG, no
+//! ambient state), so every rank derives the identical plan independently —
+//! the invariant a real multi-process deployment needs.
+
+/// Assignment of parameters to owning ranks, balanced by a per-parameter
+/// weight (optimizer-state bytes).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    world: usize,
+    /// param index -> owning rank
+    owner: Vec<usize>,
+    /// rank -> owned param indices (ascending)
+    shards: Vec<Vec<usize>>,
+    /// rank -> total assigned weight
+    loads: Vec<usize>,
+}
+
+impl Topology {
+    /// Greedy LPT partition: parameters are taken in descending-weight
+    /// order (ties broken by ascending index) and each is assigned to the
+    /// currently least-loaded rank (ties broken by lowest rank id).
+    /// Deterministic, and within a factor ~(1 + 1/W) of a perfect balance
+    /// when no single parameter dominates.
+    pub fn new(world: usize, weights: &[usize]) -> Self {
+        let world = world.max(1);
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+        let mut owner = vec![0usize; weights.len()];
+        let mut loads = vec![0usize; world];
+        for &i in &order {
+            let rank = (0..world).min_by_key(|&r| (loads[r], r)).unwrap();
+            owner[i] = rank;
+            loads[rank] += weights[i].max(1);
+        }
+        let mut shards = vec![Vec::new(); world];
+        for (i, &r) in owner.iter().enumerate() {
+            shards[r].push(i);
+        }
+        Self { world, owner, shards, loads }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn params(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Rank that owns parameter `p`'s optimizer state and refreshes.
+    pub fn owner_of(&self, p: usize) -> usize {
+        self.owner[p]
+    }
+
+    /// Parameter indices owned by `rank`, ascending.
+    pub fn shard(&self, rank: usize) -> &[usize] {
+        &self.shards[rank]
+    }
+
+    /// Total assigned weight per rank (balance diagnostics).
+    pub fn loads(&self) -> &[usize] {
+        &self.loads
+    }
+}
+
+/// One contiguous slice of one parameter inside a bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Parameter index the slice belongs to.
+    pub param: usize,
+    /// Offset into the parameter's flat data.
+    pub param_off: usize,
+    /// Offset inside the bucket.
+    pub bucket_off: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+/// One fixed-size flat bucket: a range of the concatenated parameter space
+/// plus the segments mapping it back to per-parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    /// Offset of this bucket in the concatenated (flat) gradient space.
+    pub start: usize,
+    /// Element count (== bucket capacity except for the final bucket).
+    pub len: usize,
+    pub segs: Vec<Segment>,
+}
+
+/// Deterministic packing of per-parameter gradients into fixed-size flat
+/// buckets: the concatenation of all parameters (in parameter order) is
+/// chopped into `bucket_elems`-sized chunks, so a large parameter may span
+/// several buckets and a bucket may hold many small parameters. Every rank
+/// derives the identical plan from (sizes, bucket size) alone.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    pub buckets: Vec<Bucket>,
+    /// Total element count across all parameters.
+    pub total: usize,
+}
+
+impl BucketPlan {
+    /// `sizes[p]` = element count of parameter `p`; `bucket_kib` = bucket
+    /// capacity in KiB of f32 (clamped to at least one element).
+    pub fn new(sizes: &[usize], bucket_kib: usize) -> Self {
+        let cap = (bucket_kib * 1024 / 4).max(1);
+        let total: usize = sizes.iter().sum();
+        let mut buckets = Vec::with_capacity(total / cap + 1);
+        let mut cur = Bucket { start: 0, len: 0, segs: Vec::new() };
+        for (p, &n) in sizes.iter().enumerate() {
+            let mut off = 0usize;
+            while off < n {
+                if cur.len == cap {
+                    let start = cur.start + cur.len;
+                    buckets.push(std::mem::replace(
+                        &mut cur,
+                        Bucket { start, len: 0, segs: Vec::new() },
+                    ));
+                }
+                let take = (n - off).min(cap - cur.len);
+                cur.segs.push(Segment {
+                    param: p,
+                    param_off: off,
+                    bucket_off: cur.len,
+                    len: take,
+                });
+                cur.len += take;
+                off += take;
+            }
+        }
+        if cur.len > 0 {
+            buckets.push(cur);
+        }
+        Self { buckets, total }
+    }
+
+    /// Bucket capacity this plan was built with (elements of the largest
+    /// bucket; the final bucket may be shorter).
+    pub fn bucket_elems(&self) -> usize {
+        self.buckets.iter().map(|b| b.len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_is_deterministic_and_covers_every_param() {
+        let weights = [100, 1, 900, 50, 50, 300, 2, 2];
+        let a = Topology::new(3, &weights);
+        let b = Topology::new(3, &weights);
+        for p in 0..weights.len() {
+            assert_eq!(a.owner_of(p), b.owner_of(p), "param {p}");
+            assert!(a.owner_of(p) < 3);
+        }
+        let covered: usize = (0..3).map(|r| a.shard(r).len()).sum();
+        assert_eq!(covered, weights.len());
+        for r in 0..3 {
+            for w in a.shard(r).windows(2) {
+                assert!(w[0] < w[1], "shard not ascending");
+            }
+        }
+    }
+
+    #[test]
+    fn topology_balances_equal_weights_exactly() {
+        let weights = vec![64usize; 8];
+        let t = Topology::new(4, &weights);
+        for r in 0..4 {
+            assert_eq!(t.shard(r).len(), 2, "rank {r}");
+            assert_eq!(t.loads()[r], 128);
+        }
+    }
+
+    #[test]
+    fn topology_world_one_owns_everything() {
+        let t = Topology::new(1, &[5, 10, 15]);
+        assert_eq!(t.world(), 1);
+        assert_eq!(t.shard(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn bucket_plan_partitions_the_flat_space_exactly() {
+        // capacity 6 elements => bucket_kib chosen so cap = 6 is not
+        // expressible in KiB; use a tiny plan via direct construction
+        let sizes = [4usize, 9, 1, 6];
+        let plan = BucketPlan::new(&sizes, 1); // cap = 256 elements
+        assert_eq!(plan.total, 20);
+        assert_eq!(plan.buckets.len(), 1, "everything fits one bucket");
+        // chop finer by shrinking through many params: emulate small cap
+        // with a large parameter set instead
+        let big: Vec<usize> = (0..40).map(|i| 30 + i % 7).collect();
+        let plan = BucketPlan::new(&big, 1);
+        let total: usize = big.iter().sum();
+        assert_eq!(plan.total, total);
+        // every flat element is covered exactly once, in order
+        let mut next_flat = 0usize;
+        let mut per_param_next = vec![0usize; big.len()];
+        for b in &plan.buckets {
+            assert_eq!(b.start, next_flat);
+            let mut in_bucket = 0usize;
+            for s in &b.segs {
+                assert_eq!(s.bucket_off, in_bucket);
+                assert_eq!(s.param_off, per_param_next[s.param]);
+                per_param_next[s.param] += s.len;
+                in_bucket += s.len;
+            }
+            assert_eq!(in_bucket, b.len);
+            assert!(b.len <= 256);
+            next_flat += b.len;
+        }
+        assert_eq!(next_flat, total);
+        for (p, &n) in big.iter().enumerate() {
+            assert_eq!(per_param_next[p], n, "param {p} not fully covered");
+        }
+    }
+
+    #[test]
+    fn bucket_plan_splits_large_params_across_buckets() {
+        // one parameter much larger than the bucket capacity
+        let plan = BucketPlan::new(&[1024, 100], 1); // cap 256
+        assert_eq!(plan.buckets.len(), 5); // 256*4 + (0 remainder) then 100
+        assert!(plan.buckets[..4].iter().all(|b| b.len == 256));
+        assert_eq!(plan.buckets[4].len, 100);
+        assert!(plan.buckets[0].segs.iter().all(|s| s.param == 0));
+        assert_eq!(plan.bucket_elems(), 256);
+    }
+}

@@ -15,6 +15,8 @@
 //!   sampling** (Algorithm 2), GoLore random projections, or online PCA.
 //! * [`train`] + [`coordinator`] orchestrate pretraining runs, probes and
 //!   the paper's experiment sweeps (Tables 1–4, Figures 1–4, App. F).
+//! * [`dist`] is the data-parallel substrate: bucketed pool all-reduce,
+//!   ZeRO-1-style sharded optimizer state, per-rank refresh ownership.
 //!
 //! Substrates ([`linalg`], [`rng`], [`quant`], [`data`], [`util`],
 //! [`config`], [`metrics`]) are implemented from scratch — the build is
@@ -23,6 +25,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod linalg;
 pub mod metrics;
 pub mod optim;

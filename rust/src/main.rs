@@ -32,7 +32,8 @@ fn usage() -> &'static str {
      sara train --model <name> [--selector sara|dominant|golore|online-pca]\n\
      \u{20}          [--wrapper galore|fira|full] [--inner adam|adafactor|adam-mini|adam8bit|msgd]\n\
      \u{20}          [--steps N] [--lr F] [--rank R] [--tau T] [--refresh-lookahead L]\n\
-     \u{20}          [--workers W] [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
+     \u{20}          [--workers W] [--dist-workers W] [--bucket-kib K]\n\
+     \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
      \u{20}          [--save ckpt.bin]\n\
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
      \u{20}          [--steps N] [--rank R] [--tau T] [--anchor N] [--per-layer]\n\
@@ -86,9 +87,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.execute_secs,
         100.0 * result.execute_secs / result.wall_secs.max(1e-9)
     );
+    if result.dist.world > 1 {
+        println!("{}", result.dist.row());
+    }
     if let Some(path) = args.get("save") {
         let ck = Checkpoint {
             step: trainer.current_step(),
+            dist_workers: cfg.world() as u32,
             params: trainer.params.clone(),
         };
         ck.save(std::path::Path::new(path))?;
@@ -145,6 +150,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.model = model.to_string();
     cfg.apply_args(args)?;
+    // eval restores only the (complete, unsharded) weights, so the dist
+    // topology is irrelevant here — report it, and enforce a match only
+    // when the caller explicitly pinned one. Restoring *optimizer* state
+    // (a future train-resume path) is where ensure_world must gate.
+    if ck.dist_workers != 1 {
+        println!("checkpoint from a {}-worker run", ck.dist_workers);
+    }
+    if args.get("dist-workers").is_some() {
+        // compare against the explicitly pinned value, not world(), which
+        // also maxes in the legacy --workers knob
+        ck.ensure_world(cfg.dist.workers)?;
+    }
     let mut trainer = Trainer::new(engine, cfg)?;
     trainer.params = ck.params;
     let vl = trainer.validate()?;

@@ -10,9 +10,15 @@ use crate::util::pool::WorkerPool;
 
 /// GARD18 overlap between the column spans of two orthonormal matrices
 /// (`m x r` each). 1.0 = identical subspace, ~r/m for random subspaces.
+/// Rank-0 inputs (`r = 0`) have empty spans and return 0.0 (the old code
+/// divided by zero there).
 pub fn overlap(u: &Matrix, v: &Matrix) -> f64 {
     assert_eq!(u.rows, v.rows, "subspace ambient dims differ");
+    assert_eq!(u.cols, v.cols, "subspace ranks differ");
     let r = v.cols;
+    if r == 0 {
+        return 0.0;
+    }
     // ||U^T v_i||^2 summed = ||U^T V||_F^2
     let utv = u.t_matmul(v);
     let fro2: f64 = utv.data.iter().map(|&x| (x as f64) * (x as f64)).sum();
@@ -92,13 +98,13 @@ impl AdjacentOverlapTracker {
 
     pub fn observe(&mut self, step: usize, p: &Matrix) {
         if let Some(prev) = &self.prev {
-            if prev.rows == p.rows {
+            if prev.rows == p.rows && prev.cols == p.cols {
                 self.adjacent.push(overlap(prev, p));
                 self.steps.push(step);
             }
         }
         if let Some(anchor) = &self.anchor {
-            if anchor.rows == p.rows {
+            if anchor.rows == p.rows && anchor.cols == p.cols {
                 self.vs_anchor.push(overlap(anchor, p));
             }
         }
@@ -157,6 +163,21 @@ mod tests {
         let mean = acc / trials as f64;
         let expect = r as f64 / m as f64;
         assert!((mean - expect).abs() < 0.05, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn overlap_rank_zero_is_zero_not_nan() {
+        let u = Matrix::zeros(8, 0);
+        let v = Matrix::zeros(8, 0);
+        assert_eq!(overlap(&u, &v), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "subspace ranks differ")]
+    fn overlap_rejects_mismatched_ranks() {
+        let u = random_orthonormal(16, 4, 7);
+        let v = random_orthonormal(16, 3, 8);
+        overlap(&u, &v);
     }
 
     #[test]

@@ -129,6 +129,23 @@ impl Engine {
         params: &[Tensor],
         tokens: &[i32],
     ) -> Result<(f32, Vec<Tensor>)> {
+        let mut grads = Vec::new();
+        let loss = self.train_step_into(params, tokens, &mut grads)?;
+        Ok((loss, grads))
+    }
+
+    /// [`Engine::train_step`] writing the gradients into caller-owned,
+    /// reusable buffers: on the first call `grads` is filled with
+    /// manifest-shaped tensors; on every later call the same buffers are
+    /// rewritten in place, so steady-state steps reuse the per-step
+    /// gradient memory instead of reallocating it (ROADMAP
+    /// "Gradient-buffer reuse").
+    pub fn train_step_into(
+        &self,
+        params: &[Tensor],
+        tokens: &[i32],
+        grads: &mut Vec<Tensor>,
+    ) -> Result<f32> {
         let outs = self.execute(&self.train_exe, params, tokens)?;
         if outs.len() != 1 + params.len() {
             bail!(
@@ -138,12 +155,33 @@ impl Engine {
             );
         }
         let loss = outs[0].to_vec::<f32>()?[0];
-        let grads = outs[1..]
-            .iter()
-            .zip(&self.manifest.params)
-            .map(|(lit, info)| Tensor::from_literal(lit, &info.shape))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((loss, grads))
+        if grads.is_empty() {
+            // bootstrap directly from the literals (no zero-fill pass;
+            // subsequent calls rewrite these buffers in place). A mid-way
+            // failure must not leave a partial set behind — a later retry
+            // would bail on the count mismatch and mask the real cause.
+            for (lit, info) in outs[1..].iter().zip(&self.manifest.params) {
+                match Tensor::from_literal(lit, &info.shape) {
+                    Ok(t) => grads.push(t),
+                    Err(e) => {
+                        grads.clear();
+                        return Err(e);
+                    }
+                }
+            }
+            return Ok(loss);
+        }
+        if grads.len() != self.manifest.params.len() {
+            bail!(
+                "gradient buffer set has {} tensors, expected {}",
+                grads.len(),
+                self.manifest.params.len()
+            );
+        }
+        for (g, lit) in grads.iter_mut().zip(&outs[1..]) {
+            g.fill_from_literal(lit)?;
+        }
+        Ok(loss)
     }
 
     /// Loss-only evaluation step.

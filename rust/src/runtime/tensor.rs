@@ -83,6 +83,15 @@ impl Tensor {
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
+    /// Refill this tensor's existing buffer from a Literal (must be f32 of
+    /// matching element count). The pooled counterpart of
+    /// [`Tensor::from_literal`]: the trainer's per-step gradient buffers
+    /// are allocated once and rewritten in place every step.
+    pub fn fill_from_literal(&mut self, lit: &xla::Literal) -> Result<()> {
+        lit.read_into(&mut self.data)?;
+        Ok(())
+    }
+
     /// Read a Literal back (must be f32).
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
         let data = lit.to_vec::<f32>()?;
@@ -122,6 +131,20 @@ mod tests {
         let d = Tensor::from_vec(&[2], vec![0.5, -0.5]);
         w.sub_assign(&d);
         assert_eq!(w.data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    fn fill_from_literal_reuses_buffer() {
+        let src = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = src.to_literal().unwrap();
+        let mut dst = Tensor::zeros(&[2, 2]);
+        let ptr = dst.data.as_ptr();
+        dst.fill_from_literal(&lit).unwrap();
+        assert_eq!(dst.data, src.data);
+        assert_eq!(ptr, dst.data.as_ptr(), "buffer must be reused in place");
+        // element-count mismatch is a clean error
+        let mut wrong = Tensor::zeros(&[3]);
+        assert!(wrong.fill_from_literal(&lit).is_err());
     }
 
     #[test]

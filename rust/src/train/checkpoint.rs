@@ -2,21 +2,55 @@
 //! parameters + step counter (magic, version, shapes, little-endian f32).
 //! Used by the trainer's periodic snapshots and the Figure-4 ΔW probes
 //! (spectrum of `W_{28k} - W_{30k}`-style checkpoint diffs).
+//!
+//! Format v2 (`SARACKP2`) adds a dist-worker-count header field so sharded
+//! runs restore onto the same topology (mismatch is a clean error via
+//! [`Checkpoint::ensure_world`]), and the f32 payload is written/read as
+//! chunked little-endian byte slices (one buffered syscall-sized write per
+//! ~64 KiB instead of one `write_all` per value — the old encoding's
+//! dominant cost). The payload byte layout is unchanged, so v1 files
+//! (`SARACKP1`, no dist field) still load.
 
 use crate::runtime::Tensor;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"SARACKP1";
+const MAGIC_V1: &[u8; 8] = b"SARACKP1";
+const MAGIC_V2: &[u8; 8] = b"SARACKP2";
+
+/// Payload chunk size in f32 elements (64 KiB of bytes per chunk).
+const CHUNK_ELEMS: usize = 16 * 1024;
 
 /// Saved training state.
 pub struct Checkpoint {
     pub step: usize,
+    /// Data-parallel world size of the producing run (v1 files: 1).
+    pub dist_workers: u32,
     pub params: Vec<Tensor>,
 }
 
 impl Checkpoint {
+    /// Checkpoint of a single-rank run (`dist_workers = 1`).
+    pub fn new(step: usize, params: Vec<Tensor>) -> Self {
+        Self { step, dist_workers: 1, params }
+    }
+
+    /// Fail unless this checkpoint was produced by a run with the given
+    /// dist world size — sharded runs must restore onto the same topology.
+    pub fn ensure_world(&self, world: usize) -> Result<()> {
+        if self.dist_workers as usize != world.max(1) {
+            bail!(
+                "checkpoint was written by a {}-worker run; this run has \
+                 dist world {} (pass --dist-workers {} to match)",
+                self.dist_workers,
+                world.max(1),
+                self.dist_workers
+            );
+        }
+        Ok(())
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -24,16 +58,21 @@ impl Checkpoint {
         let mut w = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("{path:?}"))?,
         );
-        w.write_all(MAGIC)?;
+        w.write_all(MAGIC_V2)?;
         w.write_all(&(self.step as u64).to_le_bytes())?;
+        w.write_all(&self.dist_workers.to_le_bytes())?;
         w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        let mut buf = vec![0u8; CHUNK_ELEMS * 4];
         for t in &self.params {
             w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
             for &d in &t.shape {
                 w.write_all(&(d as u64).to_le_bytes())?;
             }
-            for &v in &t.data {
-                w.write_all(&v.to_le_bytes())?;
+            for chunk in t.data.chunks(CHUNK_ELEMS) {
+                for (i, &v) in chunk.iter().enumerate() {
+                    buf[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+                }
+                w.write_all(&buf[..chunk.len() * 4])?;
             }
         }
         Ok(())
@@ -45,14 +84,21 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{path:?} is not a SARA checkpoint");
-        }
+        let versioned = match &magic {
+            m if m == MAGIC_V1 => false,
+            m if m == MAGIC_V2 => true,
+            _ => bail!("{path:?} is not a SARA checkpoint"),
+        };
         let step = read_u64(&mut r)? as usize;
+        let dist_workers = if versioned { read_u32(&mut r)? } else { 1 };
+        if dist_workers == 0 || dist_workers > 1 << 20 {
+            bail!("implausible dist worker count {dist_workers}");
+        }
         let nparams = read_u32(&mut r)? as usize;
         if nparams > 1_000_000 {
             bail!("implausible param count {nparams}");
         }
+        let mut buf = vec![0u8; CHUNK_ELEMS * 4];
         let mut params = Vec::with_capacity(nparams);
         for _ in 0..nparams {
             let rank = read_u32(&mut r)? as usize;
@@ -64,15 +110,19 @@ impl Checkpoint {
                 shape.push(read_u64(&mut r)? as usize);
             }
             let numel: usize = shape.iter().product();
-            let mut buf = vec![0u8; numel * 4];
-            r.read_exact(&mut buf)?;
-            let data = buf
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            let mut data = Vec::with_capacity(numel);
+            let mut remaining = numel;
+            while remaining > 0 {
+                let n = remaining.min(CHUNK_ELEMS);
+                r.read_exact(&mut buf[..n * 4])?;
+                data.extend(buf[..n * 4].chunks_exact(4).map(|c| {
+                    f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                }));
+                remaining -= n;
+            }
             params.push(Tensor::from_vec(&shape, data));
         }
-        Ok(Self { step, params })
+        Ok(Self { step, dist_workers, params })
     }
 }
 
@@ -98,18 +148,65 @@ mod tests {
         dir.join(name)
     }
 
-    #[test]
-    fn roundtrip_identity() {
-        let params = vec![
+    fn big_params() -> Vec<Tensor> {
+        // > CHUNK_ELEMS elements so the chunked path splits the payload
+        let n = CHUNK_ELEMS + 123;
+        let data: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        vec![
+            Tensor::from_vec(&[n], data),
             Tensor::from_vec(&[2, 3], vec![1., -2., 3.5, 0., 1e-9, 7.]),
             Tensor::from_vec(&[4], vec![9., 8., 7., 6.]),
-        ];
-        let ck = Checkpoint { step: 1234, params: params.clone() };
+        ]
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let params = big_params();
+        let ck = Checkpoint { step: 1234, dist_workers: 2, params: params.clone() };
         let p = tmp("roundtrip.ckpt");
         ck.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back.step, 1234);
+        assert_eq!(back.dist_workers, 2);
         assert_eq!(back.params, params);
+    }
+
+    #[test]
+    fn v1_files_still_load_with_implied_single_worker() {
+        // hand-write the legacy encoding: magic v1, step, nparams, then
+        // per tensor rank/dims/payload (same payload byte layout as v2)
+        let p = tmp("legacy.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&77u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // nparams
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let ck = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck.step, 77);
+        assert_eq!(ck.dist_workers, 1);
+        assert_eq!(ck.params[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(ck.ensure_world(1).is_ok());
+    }
+
+    #[test]
+    fn world_mismatch_is_a_clean_error() {
+        let ck = Checkpoint {
+            step: 5,
+            dist_workers: 4,
+            params: vec![Tensor::zeros(&[2])],
+        };
+        assert!(ck.ensure_world(4).is_ok());
+        let err = ck.ensure_world(2).unwrap_err().to_string();
+        assert!(err.contains("4-worker"), "{err}");
+        assert!(err.contains("--dist-workers 4"), "{err}");
+        // restoring a sharded checkpoint into a default run errors too
+        assert!(ck.ensure_world(1).is_err());
     }
 
     #[test]

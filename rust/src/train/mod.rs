@@ -1,11 +1,14 @@
 //! Training loop: Algorithm 1 of the paper driving the AOT-compiled model.
 //!
 //! Per step: fetch batches from the streaming loaders (one stream per
-//! simulated data-parallel worker), run the compiled fwd+bwd executable per
-//! worker, all-reduce (average) gradients, global-norm clip, then apply one
-//! [`crate::optim::ParamOptimizer`] step per parameter under a warmup+cosine
-//! LR schedule. Periodic validation (PPL), subspace probes, and checkpoints
-//! hang off the loop.
+//! data-parallel rank), run the compiled fwd+bwd executable per rank into
+//! that rank's reusable gradient buffers, bucketed all-reduce (average)
+//! via [`crate::dist::BucketedAllReduce`], global-norm clip, then apply
+//! one [`crate::optim::ParamOptimizer`] step per parameter — each owned by
+//! its [`crate::dist::Topology`] rank (ZeRO-1 sharding) — under a
+//! warmup+cosine LR schedule. Periodic validation (PPL), subspace probes,
+//! and checkpoints hang off the loop. `dist.workers = 1` (default) is
+//! bit-identical to the pre-dist single-rank trajectory.
 //!
 //! ## Hot-path architecture
 //!
@@ -48,8 +51,8 @@ pub use probe::{DeltaSpectrumProbe, SubspaceProbe};
 pub use schedule::CosineSchedule;
 
 use crate::config::{RunConfig, WrapperKind};
-use crate::coordinator::allreduce;
 use crate::data::{CorpusProfile, StreamingLoader};
+use crate::dist::{BucketedAllReduce, DistReport, ShardedState, Topology};
 use crate::linalg::Matrix;
 use crate::optim::ParamOptimizer;
 use crate::runtime::{Engine, ParamKind, Tensor};
@@ -69,6 +72,9 @@ pub struct TrainResult {
     pub steps: usize,
     pub wall_secs: f64,
     pub execute_secs: f64,
+    /// Dist-substrate observability (world size, per-rank state bytes,
+    /// reduce time, refreshes owned).
+    pub dist: DistReport,
 }
 
 /// Optional probe bundle threaded into [`Trainer::train`].
@@ -84,12 +90,24 @@ pub struct Trainer {
     pub engine: Engine,
     pub cfg: RunConfig,
     pub params: Vec<Tensor>,
-    opts: Vec<ParamOptimizer>,
+    /// Optimizer states, partitioned across the dist topology's ranks
+    /// (ZeRO-1 ownership; world 1 = the classic replicated layout).
+    sharded: ShardedState,
     schedule: CosineSchedule,
     loaders: Vec<StreamingLoader>,
     val_loader: StreamingLoader,
     /// Persistent worker pool — constructed once, reused every step.
     pool: WorkerPool,
+    /// Per-rank gradient buffers, filled in place by the engine every step
+    /// (allocated on the first step, reused thereafter).
+    grad_bufs: Vec<Vec<Tensor>>,
+    /// Reduced (averaged) gradient workspace, reused every step.
+    reduced: Vec<Tensor>,
+    /// Bucketed pool all-reduce engine (workspace allocated once).
+    reducer: BucketedAllReduce,
+    /// Cumulative wall time / call count of the gradient reduction.
+    reduce_nanos: u64,
+    reduce_calls: u64,
     /// Per-parameter delta workspaces, reused every step.
     deltas: Vec<Matrix>,
     /// Pre-clip global gradient norm of the most recent step.
@@ -126,8 +144,10 @@ impl Trainer {
         );
         let profile = CorpusProfile::from_name(&cfg.dataset);
         let (batch, seqp1) = (man.tokens_shape[0], man.tokens_shape[1]);
-        let workers = cfg.workers.max(1);
-        let loaders = (0..workers)
+        // dist substrate: world size = rank count = gradient streams;
+        // optimizer states are sharded across ranks by state bytes
+        let world = cfg.world();
+        let loaders = (0..world)
             .map(|w| {
                 StreamingLoader::new(
                     profile, man.vocab, cfg.seed, w as u64, batch, seqp1, 4,
@@ -139,74 +159,83 @@ impl Trainer {
             profile, man.vocab, cfg.seed, 1_000_000, batch, seqp1, 2,
         );
         let pool = WorkerPool::with_default_threads();
+        let weights: Vec<usize> =
+            opts.iter().map(|o| o.state_bytes()).collect();
+        let sharded = ShardedState::new(opts, Topology::new(world, &weights));
+        let sizes: Vec<usize> =
+            man.params.iter().map(|p| p.shape.iter().product()).collect();
+        let reducer =
+            BucketedAllReduce::new(world, &sizes, cfg.dist.bucket_kib);
+        let reduced =
+            man.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
         Ok(Self {
             engine,
             cfg,
             params,
-            opts,
+            sharded,
             schedule,
             loaders,
             val_loader,
             pool,
+            grad_bufs: vec![Vec::new(); world],
+            reduced,
+            reducer,
+            reduce_nanos: 0,
+            reduce_calls: 0,
             deltas,
             last_grad_norm: 0.0,
             step: 0,
         })
     }
 
-    /// Gradient step over all simulated workers: execute the compiled model
-    /// per worker stream, then all-reduce (average).
-    fn compute_gradients(&mut self) -> Result<(f32, Vec<Tensor>)> {
-        let mut worker_grads: Vec<Vec<Tensor>> = Vec::new();
-        let mut losses = Vec::new();
-        for loader in &self.loaders {
+    /// Gradient step over all data-parallel ranks: execute the compiled
+    /// model per rank stream into that rank's reusable gradient buffers,
+    /// then bucketed all-reduce (average) into `self.reduced`. Returns the
+    /// mean train loss.
+    fn compute_gradients(&mut self) -> Result<f32> {
+        let mut loss_acc = 0.0f32;
+        for (loader, bufs) in self.loaders.iter().zip(&mut self.grad_bufs) {
             let batch = loader.next_batch();
-            let (loss, grads) = self.engine.train_step(&self.params, &batch.tokens)?;
-            losses.push(loss);
-            worker_grads.push(grads);
+            loss_acc +=
+                self.engine.train_step_into(&self.params, &batch.tokens, bufs)?;
         }
-        let grads = allreduce::average(worker_grads);
-        let loss = losses.iter().sum::<f32>() / losses.len() as f32;
-        Ok((loss, grads))
-    }
-
-    /// Global-norm gradient clipping (in place). Returns the pre-clip norm.
-    fn clip_gradients(&self, grads: &mut [Tensor]) -> f64 {
-        let norm: f64 = grads
-            .iter()
-            .map(|g| {
-                g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>()
-            })
-            .sum::<f64>()
-            .sqrt();
-        let clip = self.cfg.grad_clip;
-        if clip > 0.0 && norm > clip {
-            let s = (clip / norm) as f32;
-            for g in grads.iter_mut() {
-                g.scale(s);
-            }
+        if self.reducer.world() == 1 {
+            // single rank: no reduction — ping-pong the buffer sets
+            // instead of copying the whole gradient space (the engine
+            // refills whatever ends up in grad_bufs[0] in place next
+            // step). Not counted as a reduce call: nothing ran.
+            std::mem::swap(&mut self.grad_bufs[0], &mut self.reduced);
+        } else {
+            let t0 = std::time::Instant::now();
+            self.reducer
+                .average_into(&self.pool, &self.grad_bufs, &mut self.reduced);
+            self.reduce_nanos += t0.elapsed().as_nanos() as u64;
+            self.reduce_calls += 1;
         }
-        norm
+        Ok(loss_acc / self.loaders.len() as f32)
     }
 
     /// One full optimizer step; returns the train loss.
     pub fn step_once(&mut self) -> Result<f32> {
-        let (loss, mut grads) = self.compute_gradients()?;
-        self.last_grad_norm = self.clip_gradients(&mut grads);
+        let loss = self.compute_gradients()?;
+        self.last_grad_norm =
+            clip_gradients(self.cfg.grad_clip, &mut self.reduced);
         let lr = self.schedule.lr(self.step) as f32;
 
-        // per-parameter optimizer updates on the persistent pool
-        parallel_optimizer_step_into(
+        // per-parameter optimizer updates on the persistent pool, applied
+        // by each parameter's owning rank (ZeRO-1 sharding; the shared
+        // deltas array is the simulated all-gather)
+        self.sharded.step_into(
             &self.pool,
-            &mut self.opts,
-            &mut grads,
+            &mut self.reduced,
             lr,
             &mut self.deltas,
         );
         // refreshes due `refresh_lookahead` steps from now were scheduled
-        // during the pass; launch them on the pool's background lane so
-        // their SVDs overlap with the next step's engine.train_step
-        launch_scheduled_refreshes(&self.pool, &mut self.opts);
+        // during the pass; the owning rank launches them on the pool's
+        // background lane so their SVDs overlap with the next step's
+        // engine.train_step
+        self.sharded.launch_owned_refreshes(&self.pool);
         for (p, d) in self.params.iter_mut().zip(&self.deltas) {
             debug_assert_eq!(p.data.len(), d.data.len());
             for (w, &u) in p.data.iter_mut().zip(&d.data) {
@@ -222,14 +251,29 @@ impl Trainer {
     /// across low-rank layers (one shared `tau`), so the max reads as
     /// "refreshes per layer so far".
     pub fn refresh_totals(&self) -> (usize, f64) {
-        let mut per_layer_max = 0usize;
-        let mut nanos = 0u64;
-        for o in &self.opts {
-            let (c, ns) = o.refresh_stats();
-            per_layer_max = per_layer_max.max(c);
-            nanos += ns;
-        }
+        let (per_layer_max, nanos) = self.sharded.refresh_totals();
         (per_layer_max, nanos as f64 / 1e6)
+    }
+
+    /// Dist-substrate report: world size, bucket plan, per-rank state
+    /// bytes / refreshes owned, reduce time, and simulated communication
+    /// volumes.
+    pub fn dist_report(&self) -> DistReport {
+        let plan = self.reducer.plan();
+        let sizes = self.reducer.sizes();
+        DistReport {
+            world: self.sharded.topology().world(),
+            bucket_count: plan.buckets.len(),
+            bucket_elems: plan.bucket_elems(),
+            per_rank_state_bytes: self.sharded.per_rank_state_bytes(),
+            per_rank_refreshes: self.sharded.per_rank_refreshes(),
+            reduce_nanos: self.reduce_nanos,
+            reduce_calls: self.reduce_calls,
+            allgather_bytes_per_step: self
+                .sharded
+                .allgather_bytes_per_step(sizes),
+            projector_bcast_bytes: self.sharded.projector_broadcast_bytes(),
+        }
     }
 
     /// Pre-clip global gradient norm of the most recent step (observability
@@ -259,9 +303,11 @@ impl Trainer {
         self.engine
     }
 
-    /// Current optimizer-state footprint in bytes (memory table).
+    /// Current optimizer-state footprint in bytes (memory table): the
+    /// total across all shards, which equals the single-rank footprint —
+    /// sharding partitions the state, it never replicates it.
     pub fn optimizer_state_bytes(&self) -> usize {
-        self.opts.iter().map(|o| o.state_bytes()).sum()
+        self.sharded.state_bytes()
     }
 
     /// Run the full configured training loop.
@@ -315,7 +361,7 @@ impl Trainer {
             // probes
             if self.cfg.probe_every > 0 && t % self.cfg.probe_every == 0 {
                 if let Some(sp) = probes.subspace.as_mut() {
-                    for (i, opt) in self.opts.iter().enumerate() {
+                    for (i, opt) in self.sharded.opts().iter().enumerate() {
                         if let Some(p) = opt.projector() {
                             sp.observe(&names[i], t, p);
                         }
@@ -341,8 +387,26 @@ impl Trainer {
             steps: self.cfg.total_steps,
             wall_secs: t0.elapsed().as_secs_f64(),
             execute_secs: self.engine.execute_secs.get() - execute_at_start,
+            dist: self.dist_report(),
         })
     }
+}
+
+/// Global-norm gradient clipping (in place). Returns the pre-clip norm.
+/// Free function so callers can clip a field they hold `&mut` to.
+pub fn clip_gradients(clip: f64, grads: &mut [Tensor]) -> f64 {
+    let norm: f64 = grads
+        .iter()
+        .map(|g| g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>())
+        .sum::<f64>()
+        .sqrt();
+    if clip > 0.0 && norm > clip {
+        let s = (clip / norm) as f32;
+        for g in grads.iter_mut() {
+            g.scale(s);
+        }
+    }
+    norm
 }
 
 /// Matrix view dims for a tensor shape: 2-D as-is, anything else flattened
@@ -398,6 +462,22 @@ pub fn parallel_optimizer_step_into(
     });
 }
 
+/// Launch one parameter's scheduled refresh (if any) on `pool`'s
+/// background lane, parking the completion handle back in the optimizer.
+/// Returns whether a job was launched. **The single source of the launch
+/// sequence**: both [`launch_scheduled_refreshes`] and the dist
+/// substrate's owner-attributed `dist::refresh::launch_owned_refreshes`
+/// delegate here, so the legacy and sharded paths cannot diverge.
+pub fn launch_refresh(pool: &WorkerPool, opt: &mut ParamOptimizer) -> bool {
+    if let Some(job) = opt.take_scheduled_refresh() {
+        let handle = pool.spawn_background(move || job.run());
+        opt.set_in_flight(handle);
+        true
+    } else {
+        false
+    }
+}
+
 /// Move every refresh job scheduled by the optimizer pass that just ran
 /// onto `pool`'s background lane, parking the completion handles back in
 /// the owning optimizers. Cheap when nothing is due (one `Option` check
@@ -405,10 +485,7 @@ pub fn parallel_optimizer_step_into(
 /// in [`Trainer::step_once`], the next `engine.train_step`.
 pub fn launch_scheduled_refreshes(pool: &WorkerPool, opts: &mut [ParamOptimizer]) {
     for opt in opts.iter_mut() {
-        if let Some(job) = opt.take_scheduled_refresh() {
-            let handle = pool.spawn_background(move || job.run());
-            opt.set_in_flight(handle);
-        }
+        launch_refresh(pool, opt);
     }
 }
 

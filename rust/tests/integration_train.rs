@@ -169,7 +169,7 @@ fn checkpoint_roundtrip_preserves_val_loss() {
 
     let dir = std::env::temp_dir().join("sara_int_ckpt");
     let path = dir.join("t.ckpt");
-    Checkpoint { step: 10, params: trainer.params.clone() }
+    Checkpoint::new(10, trainer.params.clone())
         .save(&path)
         .unwrap();
     let loaded = Checkpoint::load(&path).unwrap();

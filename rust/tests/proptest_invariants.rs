@@ -4,6 +4,8 @@
 
 use sara::config::{InnerOpt, OptimConfig, SelectorKind, WrapperKind};
 use sara::coordinator::allreduce;
+use sara::dist::BucketedAllReduce;
+use sara::util::pool::WorkerPool;
 use sara::linalg::{
     eigh_symmetric, left_singular_vectors, orthogonality_defect, qr_thin,
     singular_values, Matrix,
@@ -293,6 +295,61 @@ fn prop_allreduce_mean_invariants() {
                 .map(|g| g[0].data[j])
                 .fold(f32::NEG_INFINITY, f32::max);
             assert!(a[0].data[j] >= lo - 1e-5 && a[0].data[j] <= hi + 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_bucketed_allreduce_matches_average_oracle() {
+    // the dist substrate's bucketed pool reduce vs the retained
+    // single-threaded oracle, over arbitrary worker counts, tensor shape
+    // sets, and bucket sizes (ISSUE acceptance: within 1e-6; the
+    // implementation actually reproduces the oracle's arithmetic order, so
+    // unit tests pin exact equality — this property test keeps the looser
+    // spec-level contract under full randomization)
+    let pool = WorkerPool::new(4);
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4200 + seed);
+        let workers = 1 + rng.next_bounded(8) as usize;
+        let nparams = 1 + rng.next_bounded(5) as usize;
+        let shapes: Vec<Vec<usize>> = (0..nparams)
+            .map(|_| {
+                if rng.next_f64() < 0.5 {
+                    vec![rand_dims(&mut rng, 1, 20), rand_dims(&mut rng, 1, 20)]
+                } else {
+                    vec![rand_dims(&mut rng, 1, 200)]
+                }
+            })
+            .collect();
+        let sizes: Vec<usize> =
+            shapes.iter().map(|s| s.iter().product()).collect();
+        let grads: Vec<Vec<Tensor>> = (0..workers)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let n: usize = s.iter().product();
+                        let data: Vec<f32> =
+                            (0..n).map(|_| rng.next_normal() as f32).collect();
+                        Tensor::from_vec(s, data)
+                    })
+                    .collect()
+            })
+            .collect();
+        let bucket_kib = 1 + rng.next_bounded(8) as usize;
+        let mut red = BucketedAllReduce::new(workers, &sizes, bucket_kib);
+        let mut out: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        red.average_into(&pool, &grads, &mut out);
+        let oracle = allreduce::average(grads);
+        for (p, (a, b)) in out.iter().zip(&oracle).enumerate() {
+            for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-6,
+                    "seed {seed} param {p} elem {i}: {x} vs {y} \
+                     (W={workers}, bucket_kib={bucket_kib})"
+                );
+            }
         }
     }
 }

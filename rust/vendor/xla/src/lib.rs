@@ -54,6 +54,8 @@ pub trait NativeType: Sized + Clone {
     fn wrap(v: Vec<Self>) -> Data;
     #[doc(hidden)]
     fn unwrap(d: &Data) -> Result<Vec<Self>>;
+    #[doc(hidden)]
+    fn view(d: &Data) -> Result<&[Self]>;
 }
 
 impl NativeType for f32 {
@@ -66,6 +68,12 @@ impl NativeType for f32 {
             other => Err(Error::new(format!("literal is not f32: {other:?}"))),
         }
     }
+    fn view(d: &Data) -> Result<&[Self]> {
+        match d {
+            Data::F32(v) => Ok(v),
+            other => Err(Error::new(format!("literal is not f32: {other:?}"))),
+        }
+    }
 }
 
 impl NativeType for i32 {
@@ -75,6 +83,12 @@ impl NativeType for i32 {
     fn unwrap(d: &Data) -> Result<Vec<Self>> {
         match d {
             Data::I32(v) => Ok(v.clone()),
+            other => Err(Error::new(format!("literal is not i32: {other:?}"))),
+        }
+    }
+    fn view(d: &Data) -> Result<&[Self]> {
+        match d {
+            Data::I32(v) => Ok(v),
             other => Err(Error::new(format!("literal is not i32: {other:?}"))),
         }
     }
@@ -116,6 +130,23 @@ impl Literal {
     /// Copy out as a host vector of `T`.
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
         T::unwrap(&self.data)
+    }
+
+    /// Copy the payload into a caller-owned buffer (must match in length).
+    /// Stub extension used by the trainer's pooled gradient buffers: unlike
+    /// [`Literal::to_vec`], no allocation happens when the destination is
+    /// already sized — callers reuse one buffer across steps.
+    pub fn read_into<T: NativeType + Copy>(&self, out: &mut [T]) -> Result<()> {
+        let src = T::view(&self.data)?;
+        if src.len() != out.len() {
+            return Err(Error::new(format!(
+                "read_into: literal has {} elements, buffer has {}",
+                src.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(src);
+        Ok(())
     }
 
     /// Decompose a tuple literal into its elements.
@@ -211,6 +242,18 @@ mod tests {
         let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
         assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
         assert!(s.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn read_into_fills_buffer_without_resizing() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        let mut buf = [0.0f32; 3];
+        l.read_into(&mut buf).unwrap();
+        assert_eq!(buf, [1.0, 2.0, 3.0]);
+        let mut short = [0.0f32; 2];
+        assert!(l.read_into(&mut short).is_err());
+        let mut wrong = [0i32; 3];
+        assert!(l.read_into(&mut wrong).is_err());
     }
 
     #[test]

@@ -18,31 +18,52 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 (cd rust && cargo build --release && cargo test -q)
 
 echo
-echo "== perf smoke: hotpath bench (fast mode) =="
+echo "== dist smoke: 2-worker bucketed-reduce + sharded-state path =="
+# the artifact-free dist pipeline tests (reduce oracle equivalence,
+# 2-worker determinism, W=1 bit-identity) already ran inside the full
+# `cargo test -q` above (tests/integration_dist.rs); this block adds the
+# end-to-end 2-worker Trainer run when PJRT artifacts are available
+if [ -f rust/artifacts/test.train.hlo.txt ]; then
+  (cd rust && cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/dist-smoke.toml")
+else
+  echo "(no PJRT artifacts; skipped the end-to-end 2-worker train run)"
+fi
+
+echo
+echo "== perf smoke: hotpath + allreduce benches (fast mode) =="
 (
   cd rust
   SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_hotpath.json" \
     cargo bench --bench hotpath
+  SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_allreduce.json" \
+    cargo bench --bench allreduce
 )
 
 echo
-if [ -f "$REPO_ROOT/BENCH_baseline.json" ]; then
-  if ! command -v python3 >/dev/null 2>&1; then
-    echo "perf diff skipped: python3 not available on this host"
-  else
-    echo "== perf trajectory: diff vs committed baseline =="
-    strict_flag=""
-    if [ "${TIER1_STRICT_PERF:-0}" = "1" ]; then
-      strict_flag="--strict"
-    fi
-    python3 "$REPO_ROOT/scripts/bench_diff.py" \
-      "$REPO_ROOT/BENCH_hotpath.json" "$REPO_ROOT/BENCH_baseline.json" \
-      --threshold 0.25 $strict_flag
-  fi
-else
-  echo "no BENCH_baseline.json committed yet — record one on a quiet host with:"
-  echo "  cp BENCH_hotpath.json BENCH_baseline.json && git add BENCH_baseline.json"
+strict_flag=""
+if [ "${TIER1_STRICT_PERF:-0}" = "1" ]; then
+  strict_flag="--strict"
 fi
+# current-run json -> committed baseline json; each bench target feeds the
+# same median-diff gate (warn >25%, TIER1_STRICT_PERF=1 to fail)
+diff_against_baseline() {
+  current="$1"; baseline="$2"
+  if [ -f "$baseline" ]; then
+    if ! command -v python3 >/dev/null 2>&1; then
+      echo "perf diff skipped: python3 not available on this host"
+    else
+      echo "== perf trajectory: $(basename "$current") vs $(basename "$baseline") =="
+      python3 "$REPO_ROOT/scripts/bench_diff.py" \
+        "$current" "$baseline" --threshold 0.25 $strict_flag
+    fi
+  else
+    echo "no $(basename "$baseline") committed yet — record one on a quiet host with:"
+    echo "  cp $(basename "$current") $(basename "$baseline") && git add $(basename "$baseline")"
+  fi
+}
+diff_against_baseline "$REPO_ROOT/BENCH_hotpath.json" "$REPO_ROOT/BENCH_baseline.json"
+diff_against_baseline "$REPO_ROOT/BENCH_allreduce.json" "$REPO_ROOT/BENCH_allreduce_baseline.json"
 
 echo
-echo "tier-1 OK; perf trajectory at $REPO_ROOT/BENCH_hotpath.json"
+echo "tier-1 OK; perf trajectories at $REPO_ROOT/BENCH_hotpath.json and $REPO_ROOT/BENCH_allreduce.json"

@@ -1,0 +1,84 @@
+//! Bench: SIMD vs scalar GEMM microkernels at the paper's hot shapes.
+//!
+//! One row per (kernel, product) pair over the 60M-config layer shapes —
+//! the projection pair `R = P^T G` / `U = P N` at rank 128, the refresh
+//! Gram, and a square bench GEMM. Emits `BENCH_gemm.json` (or
+//! `SARA_BENCH_JSON=<path>`) for `scripts/bench_diff.py`'s median gate;
+//! the ISSUE acceptance bar is a >= 2x median win for the native SIMD
+//! `matmul_into` rows over `[scalar]` on an AVX2 host.
+
+use sara::linalg::{
+    available_kernels, detect_native, gram_into_with, matmul_into_with,
+    matmul_t_into_with, qr_thin, resolve, t_matmul_into_with, Kernel,
+    KernelChoice, Matrix,
+};
+use sara::rng::Pcg64;
+use sara::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Pcg64::new(0);
+    let (m, n, r) = (512usize, 1376usize, 128usize);
+
+    // scalar oracle, portable lane schedule, and (when the CPU has one)
+    // the native vector backend
+    let kernels = available_kernels();
+    println!(
+        "host: native backend {:?}; forced-simd resolves to {}",
+        detect_native().map(Kernel::name),
+        resolve(KernelChoice::Simd)
+    );
+
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    let p = {
+        let (q, _) = qr_thin(&Matrix::randn(m, r, 1.0, &mut rng));
+        q
+    };
+    let rproj = p.t_matmul(&g);
+    let big_a = Matrix::randn(m, m, 1.0, &mut rng);
+    let big_b = Matrix::randn(m, n, 1.0, &mut rng);
+
+    section(&format!("matmul_into {m}x{m}x{n} (dense bench GEMM)"));
+    let mut c_big = Matrix::zeros(m, n);
+    for &k in &kernels {
+        b.run(&format!("matmul {m}x{m}x{n} [{k}]"), || {
+            matmul_into_with(k, &big_a, &big_b, &mut c_big)
+        });
+    }
+
+    section(&format!("un-project U = P N ({m}x{r} @ {r}x{n})"));
+    let mut u_ws = Matrix::zeros(m, n);
+    for &k in &kernels {
+        b.run(&format!("matmul {m}x{r}x{n} [{k}]"), || {
+            matmul_into_with(k, &p, &rproj, &mut u_ws)
+        });
+    }
+
+    section(&format!("project R = P^T G (({m}x{r})^T @ {m}x{n})"));
+    let mut r_ws = Matrix::zeros(r, n);
+    for &k in &kernels {
+        b.run(&format!("t_matmul {m}x{r}x{n} [{k}]"), || {
+            t_matmul_into_with(k, &p, &g, &mut r_ws)
+        });
+    }
+
+    section(&format!("matmul_t G G'^T ({m}x{n} @ ({m}x{n})^T)"));
+    let g2 = Matrix::randn(m, n, 1.0, &mut rng);
+    let mut mt_ws = Matrix::zeros(m, m);
+    for &k in &kernels {
+        b.run(&format!("matmul_t {m}x{n} [{k}]"), || {
+            matmul_t_into_with(k, &g, &g2, &mut mt_ws)
+        });
+    }
+
+    section(&format!("gram {m}x{n} (selector-refresh Gram)"));
+    let mut g_ws = Matrix::zeros(m, m);
+    for &k in &kernels {
+        b.run(&format!("gram {m}x{n} [{k}]"), || {
+            gram_into_with(k, &g, &mut g_ws)
+        });
+    }
+
+    println!();
+    b.finish_or("gemm", "BENCH_gemm.json");
+}

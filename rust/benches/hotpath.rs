@@ -8,7 +8,10 @@
 //! the workspace-reuse and pooled kernels against the allocating baseline.
 
 use sara::config::{InnerOpt, OptimConfig, SelectorKind, WrapperKind};
-use sara::linalg::{matmul_into, matmul_into_par, t_matmul_into, Matrix};
+use sara::linalg::{
+    matmul_into, matmul_into_par, matmul_into_par_with, matmul_into_with,
+    resolve, t_matmul_into, KernelChoice, Matrix,
+};
 use sara::optim::{make_state, OptState, ParamOptimizer};
 use sara::rng::Pcg64;
 use sara::selector::make_selector;
@@ -62,6 +65,17 @@ fn main() {
     b.run(&format!("gram {m}x{n} pool({})", pool.threads()), || {
         g.gram_par(&pool)
     });
+    // simd-vs-scalar on the same shapes (full sweep in benches/gemm.rs;
+    // these rows keep the comparison visible in the hotpath trajectory —
+    // `simd` is the native backend, or the portable lanes off-x86/arm)
+    let simd = resolve(KernelChoice::Simd);
+    b.run(&format!("matmul {m}x{m}x{n} serial [{simd}]"), || {
+        matmul_into_with(simd, &big_a, &big_b, &mut big_c)
+    });
+    b.run(
+        &format!("matmul {m}x{m}x{n} pool({}) [{simd}]", pool.threads()),
+        || matmul_into_par_with(simd, &pool, &big_a, &big_b, &mut big_c),
+    );
 
     section("full ParamOptimizer.step per method (tau=200 amortized)");
     for (wrapper, selector, inner, label) in [

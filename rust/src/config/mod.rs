@@ -8,6 +8,7 @@
 
 pub mod toml;
 
+use crate::linalg::KernelChoice;
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 
@@ -128,6 +129,25 @@ impl DistConfig {
     }
 }
 
+/// Dense linear-algebra substrate configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinalgConfig {
+    /// GEMM kernel selection: `scalar` (default — the pre-SIMD blocked
+    /// kernels, bit-exact with every paper-exact trajectory recorded so
+    /// far), `auto` (native AVX2/NEON f32x8 microkernels when the CPU
+    /// reports support, scalar otherwise), or `simd` (always the SIMD
+    /// schedule, portable-lane fallback on hosts without a vector unit).
+    /// `SARA_GEMM_KERNEL` / `SARA_FORCE_SCALAR=1` in the environment
+    /// override this knob (CI dual-path runs).
+    pub kernel: KernelChoice,
+}
+
+impl Default for LinalgConfig {
+    fn default() -> Self {
+        Self { kernel: KernelChoice::Scalar }
+    }
+}
+
 /// Training-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -150,6 +170,9 @@ pub struct RunConfig {
     /// Data-parallel sharding substrate (bucketed all-reduce + ZeRO-1
     /// optimizer-state shards).
     pub dist: DistConfig,
+    /// GEMM kernel selection (`[linalg]` in TOML, `--gemm-kernel` on the
+    /// CLI).
+    pub linalg: LinalgConfig,
     /// Evaluate validation loss every N steps (0 = only at the end).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -171,6 +194,7 @@ impl Default for RunConfig {
             dataset: "c4".into(),
             workers: 1,
             dist: DistConfig::default(),
+            linalg: LinalgConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             probe_every: 0,
@@ -196,6 +220,11 @@ pub fn parse_inner(s: &str) -> Result<InnerOpt> {
         "msgd" | "sgdm" => InnerOpt::Msgd,
         _ => bail!("unknown inner optimizer '{s}'"),
     })
+}
+
+pub fn parse_kernel(s: &str) -> Result<KernelChoice> {
+    KernelChoice::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel '{s}' (auto|simd|scalar)"))
 }
 
 pub fn parse_selector(s: &str) -> Result<SelectorKind> {
@@ -258,6 +287,9 @@ impl RunConfig {
         self.dist.bucket_kib =
             args.get_usize("bucket-kib", self.dist.bucket_kib)?;
         self.dist.validate()?;
+        if let Some(s) = args.get("gemm-kernel") {
+            self.linalg.kernel = parse_kernel(s)?;
+        }
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.probe_every = args.get_usize("probe-every", self.probe_every)?;
         if let Some(d) = args.get("dataset") {
@@ -301,6 +333,9 @@ impl RunConfig {
         cfg.dist.bucket_kib =
             doc.get_usize("dist", "bucket_kib").unwrap_or(cfg.dist.bucket_kib);
         cfg.dist.validate()?;
+        if let Some(v) = doc.get_str("linalg", "kernel") {
+            cfg.linalg.kernel = parse_kernel(v)?;
+        }
         cfg.eval_every = doc.get_usize("run", "eval_every").unwrap_or(cfg.eval_every);
         cfg.probe_every =
             doc.get_usize("run", "probe_every").unwrap_or(cfg.probe_every);
@@ -413,6 +448,32 @@ mod tests {
         assert!(parse_selector("frobnicate").is_err());
         assert!(parse_inner("adamw9000").is_err());
         assert!(parse_wrapper("lora").is_err());
+        assert!(parse_kernel("avx512").is_err());
+    }
+
+    #[test]
+    fn gemm_kernel_knob_defaults_scalar_and_parses() {
+        // scalar default = paper-exact trajectories stay bit-identical
+        assert_eq!(RunConfig::default().linalg.kernel, KernelChoice::Scalar);
+
+        let args = Args::parse(
+            "train --gemm-kernel auto".split_whitespace().map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.linalg.kernel, KernelChoice::Auto);
+
+        let args = Args::parse(
+            "train --gemm-kernel simd".split_whitespace().map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.linalg.kernel, KernelChoice::Simd);
+
+        let bad = Args::parse(
+            "train --gemm-kernel turbo".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]
@@ -441,6 +502,9 @@ momentum_reproject = false
 [dist]
 workers = 2
 bucket_kib = 64
+
+[linalg]
+kernel = "auto"
 "#,
         )
         .unwrap();
@@ -455,5 +519,6 @@ bucket_kib = 64
         assert_eq!(c.dist.workers, 2);
         assert_eq!(c.dist.bucket_kib, 64);
         assert_eq!(c.world(), 2);
+        assert_eq!(c.linalg.kernel, KernelChoice::Auto);
     }
 }

@@ -9,19 +9,43 @@
 //! j-innermost accumulation (contiguous loads of B and C that autovectorize
 //! with -O3), and a dense inner loop with no data-dependent branches.
 //!
+//! ## Kernel dispatch: scalar = oracle, SIMD = tolerance-tested
+//!
+//! Every public entry point dispatches on [`super::simd::active_kernel`]:
+//!
+//! * [`Kernel::Scalar`] (the process default) runs the blocked scalar
+//!   kernels in this file — **byte-for-byte the pre-SIMD kernels**. They
+//!   are the conformance oracle for every other backend and the kernel
+//!   that paper-exact presets and trajectory-exactness tests pin, because
+//!   FMA re-association in the SIMD schedule changes float results.
+//! * The SIMD kernels (AVX2/FMA, NEON, or the portable lane fallback —
+//!   see [`super::simd`] for the f32x8 lane abstraction and dispatch
+//!   rules) agree with the scalar oracle within a documented tolerance
+//!   (`tests/proptest_invariants.rs::prop_simd_*`) and with *each other*
+//!   bit-exactly.
+//!
+//! Selection: `[linalg] kernel = auto|simd|scalar` in TOML,
+//! `--gemm-kernel` on the CLI, `SARA_GEMM_KERNEL` / `SARA_FORCE_SCALAR=1`
+//! in the environment (env wins, so CI can force either path host-wide).
+//! The `*_with` variants take an explicit [`Kernel`] and skip the global —
+//! tests and benches compare backends through them without racing other
+//! threads.
+//!
 //! Large products (selector-refresh Gram matrices, bench-scale GEMMs) can
 //! additionally be row-partitioned across a persistent
 //! [`WorkerPool`](crate::util::pool::WorkerPool) via the `_par` variants;
-//! output rows are disjoint per task, so workers never contend. Note that
-//! inside the trainer, selector refreshes already execute *on* pool
-//! workers (parallel across parameters), where a nested `_par` call
-//! degrades to serial by design — the `_par` entry points serve main-thread
-//! callers (probes, standalone SVD sweeps, benches) and the planned
-//! double-buffered refresh pipeline (see ROADMAP "Refresh pipelining").
+//! output rows are disjoint per task, so workers never contend, and the
+//! kernel is sampled once per call so every row block of one product runs
+//! the same backend. Note that inside the trainer, selector refreshes
+//! already execute *on* pool workers (parallel across parameters), where a
+//! nested `_par` call degrades to serial by design — the `_par` entry
+//! points serve main-thread callers (probes, standalone SVD sweeps,
+//! benches) and the double-buffered refresh pipeline.
 //!
 //! The allocating `Matrix` methods are thin wrappers over the `_into`
 //! kernels, so both paths are bit-identical by construction.
 
+use super::simd::{self, active_kernel, Kernel};
 use super::Matrix;
 use crate::util::pool::{SendPtr, WorkerPool};
 
@@ -120,25 +144,58 @@ fn matmul_rows(a: &Matrix, b: &Matrix, lo: usize, hi: usize, c_rows: &mut [f32])
     }
 }
 
+/// Row-range core with kernel dispatch: the scalar oracle or a SIMD
+/// backend (see module docs). Every matmul entry point funnels here.
+fn matmul_rows_k(
+    kernel: Kernel,
+    a: &Matrix,
+    b: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    match kernel {
+        Kernel::Scalar => matmul_rows(a, b, lo, hi, c_rows),
+        k => simd::matmul_rows_simd(k, a, b, lo, hi, c_rows),
+    }
+}
+
 /// C = A @ B into a preallocated buffer (overwrites C).
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    matmul_into_with(active_kernel(), a, b, c);
+}
+
+/// [`matmul_into`] with an explicit kernel (conformance tests, benches).
+pub fn matmul_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(
         a.cols, b.rows,
         "matmul shape mismatch: {}x{} @ {}x{}",
         a.rows, a.cols, b.rows, b.cols
     );
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul output shape");
-    matmul_rows(a, b, 0, a.rows, &mut c.data);
+    matmul_rows_k(kernel, a, b, 0, a.rows, &mut c.data);
 }
 
 /// C = A @ B with C's rows partitioned across the pool's work queue.
 pub fn matmul_into_par(pool: &WorkerPool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    matmul_into_par_with(active_kernel(), pool, a, b, c);
+}
+
+/// [`matmul_into_par`] with an explicit kernel; all row blocks of the
+/// product run that one backend.
+pub fn matmul_into_par_with(
+    kernel: Kernel,
+    pool: &WorkerPool,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul output shape");
     let (m, n) = (a.rows, b.cols);
     if m * n * a.cols < 64 * 64 * 64 {
         // too small to amortize the broadcast; stay serial
-        matmul_rows(a, b, 0, m, &mut c.data);
+        matmul_rows_k(kernel, a, b, 0, m, &mut c.data);
         return;
     }
     let base = SendPtr(c.data.as_mut_ptr());
@@ -150,19 +207,28 @@ pub fn matmul_into_par(pool: &WorkerPool, a: &Matrix, b: &Matrix, c: &mut Matrix
         let rows = unsafe {
             std::slice::from_raw_parts_mut(base.0.add(lo * n), (hi - lo) * n)
         };
-        matmul_rows(a, b, lo, hi, rows);
+        matmul_rows_k(kernel, a, b, lo, hi, rows);
     });
 }
 
 /// C = A^T @ B into a preallocated buffer (overwrites C). A is m x r,
 /// B is m x n, C is r x n; both inputs stream row-major.
 pub fn t_matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    t_matmul_into_with(active_kernel(), a, b, c);
+}
+
+/// [`t_matmul_into`] with an explicit kernel.
+pub fn t_matmul_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(
         a.rows, b.rows,
         "t_matmul shape mismatch: ({}x{})^T @ {}x{}",
         a.rows, a.cols, b.rows, b.cols
     );
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "t_matmul output shape");
+    if kernel != Kernel::Scalar {
+        simd::t_matmul_simd(kernel, a, b, c);
+        return;
+    }
     let (m, r) = (a.rows, a.cols);
     let n = b.cols;
     c.data.fill(0.0);
@@ -198,15 +264,26 @@ pub fn t_matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
-/// C = A @ B^T into a preallocated buffer (overwrites C); f64 dot-product
-/// accumulation, matching the Gram/SVD path's precision.
+/// C = A @ B^T into a preallocated buffer (overwrites C); the scalar
+/// oracle accumulates dot products in f64, matching the Gram/SVD path's
+/// precision (the SIMD backends accumulate in f32 — the one place their
+/// tolerance vs the oracle is precision- rather than association-bound).
 pub fn matmul_t_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    matmul_t_into_with(active_kernel(), a, b, c);
+}
+
+/// [`matmul_t_into`] with an explicit kernel.
+pub fn matmul_t_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(
         a.cols, b.cols,
         "matmul_t shape mismatch: {}x{} @ ({}x{})^T",
         a.rows, a.cols, b.rows, b.cols
     );
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_t output shape");
+    if kernel != Kernel::Scalar {
+        simd::matmul_t_simd(kernel, a, b, c);
+        return;
+    }
     for i in 0..a.rows {
         let arow = a.row(i);
         let crow = c.row_mut(i);
@@ -237,21 +314,52 @@ fn gram_rows_upper(a: &Matrix, lo: usize, hi: usize, out: &mut [f32], m: usize) 
     }
 }
 
+/// Upper-triangle row range with kernel dispatch (the symmetric fill is
+/// shared below — it is an exact copy, identical for every backend).
+fn gram_rows_upper_k(
+    kernel: Kernel,
+    a: &Matrix,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    m: usize,
+) {
+    match kernel {
+        Kernel::Scalar => gram_rows_upper(a, lo, hi, out, m),
+        k => simd::gram_rows_upper_simd(k, a, lo, hi, out, m),
+    }
+}
+
 /// G = A @ A^T into a preallocated buffer (overwrites G), exploiting
-/// symmetry for half the FLOPs; f64 accumulation.
+/// symmetry for half the FLOPs; f64 accumulation in the scalar oracle.
 pub fn gram_into(a: &Matrix, g: &mut Matrix) {
+    gram_into_with(active_kernel(), a, g);
+}
+
+/// [`gram_into`] with an explicit kernel.
+pub fn gram_into_with(kernel: Kernel, a: &Matrix, g: &mut Matrix) {
     let m = a.rows;
     assert_eq!((g.rows, g.cols), (m, m), "gram output shape");
-    gram_rows_upper(a, 0, m, &mut g.data, m);
+    gram_rows_upper_k(kernel, a, 0, m, &mut g.data, m);
     mirror_upper(g);
 }
 
 /// G = A @ A^T with rows of the upper triangle spread across the pool.
 pub fn gram_into_par(pool: &WorkerPool, a: &Matrix, g: &mut Matrix) {
+    gram_into_par_with(active_kernel(), pool, a, g);
+}
+
+/// [`gram_into_par`] with an explicit kernel.
+pub fn gram_into_par_with(
+    kernel: Kernel,
+    pool: &WorkerPool,
+    a: &Matrix,
+    g: &mut Matrix,
+) {
     let m = a.rows;
     assert_eq!((g.rows, g.cols), (m, m), "gram output shape");
     if m * m * a.cols < 64 * 64 * 64 {
-        gram_rows_upper(a, 0, m, &mut g.data, m);
+        gram_rows_upper_k(kernel, a, 0, m, &mut g.data, m);
         mirror_upper(g);
         return;
     }
@@ -264,7 +372,7 @@ pub fn gram_into_par(pool: &WorkerPool, a: &Matrix, g: &mut Matrix) {
         let rows = unsafe {
             std::slice::from_raw_parts_mut(base.0.add(lo * m), (hi - lo) * m)
         };
-        gram_rows_upper(a, lo, hi, rows, m);
+        gram_rows_upper_k(kernel, a, lo, hi, rows, m);
     });
     mirror_upper(g);
 }
@@ -431,6 +539,112 @@ mod tests {
             let gp = a.gram_par(&pool);
             assert_eq!(gs.data, gp.data, "gram_par ({m},{k})");
         }
+    }
+
+    /// Tiny-shape agreement against the f64 naive reference. For the
+    /// scalar oracle this is exact on every shape below (outputs are
+    /// empty, single products, or f64-accumulated like `naive` itself);
+    /// the SIMD kernels get a whisker of tolerance because they
+    /// accumulate in fused f32 while `naive` rounds once from f64 (the
+    /// k = 7 gram dots can differ in the last ulp). Either way the
+    /// 1e30-poisoned workspaces prove full overwrite.
+    fn assert_matches_naive(kernel: Kernel, got: &Matrix, want: &Matrix, what: &str) {
+        if kernel == Kernel::Scalar {
+            assert_eq!(got.data, want.data, "{what} [{kernel}]");
+        } else {
+            let diff = got.max_abs_diff(want);
+            assert!(diff <= 1e-5, "{what} [{kernel}]: {diff}");
+        }
+    }
+
+    /// Degenerate shapes (k = 0, zero-row, zero-col, 1x1): no kernel may
+    /// read out of bounds, and every output element must be overwritten —
+    /// a k = 0 product into a stale workspace must yield zeros, not
+    /// garbage from the previous step.
+    #[test]
+    fn degenerate_shapes_zero_output_and_stay_in_bounds() {
+        let mut rng = Pcg64::new(17);
+        for kernel in simd::available_kernels() {
+            for &(m, k, n) in &[
+                (0usize, 5usize, 7usize),
+                (5, 0, 7),
+                (5, 7, 0),
+                (0, 0, 0),
+                (1, 1, 1),
+                (1, 0, 1),
+            ] {
+                let a = Matrix::randn(m, k, 1.0, &mut rng);
+                let b = Matrix::randn(k, n, 1.0, &mut rng);
+                let mut c = Matrix::from_vec(m, n, vec![1e30; m * n]);
+                matmul_into_with(kernel, &a, &b, &mut c);
+                assert_matches_naive(
+                    kernel,
+                    &c,
+                    &naive(&a, &b),
+                    &format!("matmul ({m},{k},{n})"),
+                );
+
+                // A^T B with shared leading dim k
+                let at = Matrix::randn(k, m, 1.0, &mut rng);
+                let bt = Matrix::randn(k, n, 1.0, &mut rng);
+                let mut ct = Matrix::from_vec(m, n, vec![1e30; m * n]);
+                t_matmul_into_with(kernel, &at, &bt, &mut ct);
+                assert_matches_naive(
+                    kernel,
+                    &ct,
+                    &naive(&at.transpose(), &bt),
+                    &format!("t_matmul ({k},{m},{n})"),
+                );
+
+                // A B^T with shared trailing dim k
+                let bt2 = Matrix::randn(n, k, 1.0, &mut rng);
+                let mut cmt = Matrix::from_vec(m, n, vec![1e30; m * n]);
+                matmul_t_into_with(kernel, &a, &bt2, &mut cmt);
+                assert_matches_naive(
+                    kernel,
+                    &cmt,
+                    &naive(&a, &bt2.transpose()),
+                    &format!("matmul_t ({m},{k},{n})"),
+                );
+
+                // Gram (for (5,7,0) this is the one non-empty product:
+                // 5x5 over k = 7 — real dots, hence the tolerance path)
+                let mut gg = Matrix::from_vec(m, m, vec![1e30; m * m]);
+                gram_into_with(kernel, &a, &mut gg);
+                assert_matches_naive(
+                    kernel,
+                    &gg,
+                    &naive(&a, &a.transpose()),
+                    &format!("gram ({m},{k})"),
+                );
+            }
+        }
+        // degenerate shapes through the pooled wrappers (all under the
+        // serial threshold, but they must not index out of bounds either)
+        let pool = WorkerPool::new(2);
+        let a = Matrix::zeros(0, 4);
+        let b = Matrix::zeros(4, 3);
+        let mut c = Matrix::zeros(0, 3);
+        for kernel in simd::available_kernels() {
+            matmul_into_par_with(kernel, &pool, &a, &b, &mut c);
+            let mut g = Matrix::zeros(0, 0);
+            gram_into_par_with(kernel, &pool, &a, &mut g);
+        }
+    }
+
+    /// Dispatching `Kernel::Scalar` through the `_with` entry points is
+    /// the identical code path as the default-dispatch methods under the
+    /// default (scalar) process kernel.
+    #[test]
+    fn scalar_with_matches_default_dispatch_bitwise() {
+        let mut rng = Pcg64::new(19);
+        let a = Matrix::randn(23, 41, 1.0, &mut rng);
+        let b = Matrix::randn(41, 17, 1.0, &mut rng);
+        let mut c = Matrix::zeros(23, 17);
+        matmul_into_with(Kernel::Scalar, &a, &b, &mut c);
+        let mut c2 = Matrix::zeros(23, 17);
+        matmul_rows(&a, &b, 0, a.rows, &mut c2.data);
+        assert_eq!(c.data, c2.data);
     }
 
     #[test]

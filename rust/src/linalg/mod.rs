@@ -6,19 +6,30 @@
 //! Frobenius geometry. All are implemented here and property-tested; sizes
 //! are the paper's (m ≤ 2048), where the Gram-matrix SVD route is both
 //! simple and fast.
+//!
+//! GEMM runs on runtime-dispatched kernels ([`simd`]): the blocked scalar
+//! path (default; the conformance oracle and paper-exact baseline) or
+//! explicit f32x8 AVX2/NEON microkernels selected by `[linalg] kernel =
+//! auto|simd|scalar` / `--gemm-kernel` / `SARA_GEMM_KERNEL`.
 
 mod eigh;
 mod matmul;
 mod matrix;
 mod qr;
+pub mod simd;
 mod svd;
 
 pub use eigh::{eigh_symmetric, eigh_symmetric_with_threshold};
 pub use matmul::{
-    gram_into, gram_into_par, matmul_into, matmul_into_par, matmul_t_into,
-    t_matmul_into,
+    gram_into, gram_into_par, gram_into_par_with, gram_into_with, matmul_into,
+    matmul_into_par, matmul_into_par_with, matmul_into_with, matmul_t_into,
+    matmul_t_into_with, t_matmul_into, t_matmul_into_with,
 };
 pub use matrix::Matrix;
+pub use simd::{
+    active_kernel, available_kernels, detect_native, force_kernel, resolve,
+    set_kernel, Kernel, KernelChoice,
+};
 pub use qr::{orthogonality_defect, qr_thin};
 pub use svd::{
     left_singular_vectors, left_singular_vectors_pooled, singular_values,

@@ -1,0 +1,990 @@
+//! Explicit-SIMD GEMM microkernels behind a portable f32x8 lane abstraction.
+//!
+//! The scalar kernels in [`super::matmul`] autovectorize, but leave 2-4x on
+//! the table against hand-scheduled 8-wide FMA accumulators (ROADMAP "SIMD
+//! intrinsics for the GEMM microkernel"). This module supplies that layer
+//! without disturbing the scalar path, which survives **byte-for-byte** as
+//! both the fallback and the conformance oracle every kernel here is
+//! property-tested against (`tests/proptest_invariants.rs::prop_simd_*`).
+//!
+//! ## The lane abstraction
+//!
+//! [`Lane8`] models one 8-lane f32 vector register. Three backends
+//! implement it:
+//!
+//! * [`ScalarLanes`] — plain `[f32; 8]` arithmetic using [`f32::mul_add`].
+//!   It exists so the SIMD *algorithm* (packing, tiling, accumulator
+//!   schedule) runs on any host, which is what lets CI conformance-test
+//!   the code path without AVX2/NEON hardware (`kernel = simd` falls back
+//!   here, never silently to the oracle).
+//! * `Avx2` (x86_64) — `__m256` via `avx2,fma` intrinsics, entered only
+//!   through `#[target_feature]` wrappers after runtime detection.
+//! * `Neon` (aarch64) — a pair of `float32x4_t` with `vfmaq_f32` (NEON is
+//!   baseline on aarch64, so no feature gate is needed beyond the arch).
+//!
+//! Every backend is **bit-identical to the other two** by construction:
+//! `fma` is a fused multiply-add (one rounding) in all three
+//! (`f32::mul_add` == `vfmadd231ps` == `vfmaq_f32`), the reduction helpers
+//! (`hsum`, the 8-accumulator transpose-reduce) fix one association order,
+//! and remainder columns/rows run shared scalar code. The property suite
+//! pins this cross-backend equality exactly, which turns any host into a
+//! conformance host for the vector backends' shared schedule. Against the
+//! *scalar oracle* the results differ only by FMA re-association, bounded
+//! and documented in the tests — which is also why trajectory-exactness
+//! tests and paper-exact presets pin `kernel = scalar`.
+//!
+//! ## Microkernel shapes
+//!
+//! * `gemm_rows_lanes` (C = A·B and C = Aᵀ·B via strides): k-panels of
+//!   [`KC`] with the B j-tile packed into an 8-wide **stack** panel (8 KiB;
+//!   stack rather than a plumbed workspace keeps every `_into` entry point
+//!   allocation-free without touching the trainer's workspace sizing), then
+//!   a 4-row x 8-column FMA microkernel with one accumulator register per
+//!   row.
+//! * `dot8_tile` (C = A·Bᵀ and Gram rows): eight k-strided dot-product
+//!   accumulators reduced with [`Lane8::transpose8`] — the f32x8 transpose
+//!   turns eight horizontal sums into three vector adds — then summed in a
+//!   fixed tree. f32 accumulation here, vs the oracle's f64 (tolerance
+//!   documented in the property suite).
+//!
+//! ## Dispatch
+//!
+//! [`KernelChoice`] (`auto | simd | scalar`) is the config-facing knob
+//! (`[linalg] kernel`, `--gemm-kernel`); [`resolve`] turns it into a
+//! concrete [`Kernel`] via `is_x86_feature_detected!` / aarch64 detection.
+//! The process-global active kernel (set once per run by
+//! `Trainer::new` / [`set_kernel`], read by the `matmul.rs` entry points)
+//! defaults to the scalar oracle; `SARA_GEMM_KERNEL=auto|simd|scalar` or
+//! `SARA_FORCE_SCALAR=1` override any config so CI can exercise both paths
+//! on any host. Kernel-explicit `*_with` entry points in `matmul.rs`
+//! bypass the global entirely (tests/benches).
+
+use super::Matrix;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// k-panel depth, matching the scalar kernel's L1 blocking.
+const KC: usize = 256;
+
+// --------------------------------------------------------------- lane trait
+
+/// One 8-lane f32 vector register.
+///
+/// Contract: `fma` is fused (single rounding), `load`/`store` are
+/// unaligned, and the provided reductions fix one association order — so
+/// any two conforming backends produce bit-identical kernel results.
+pub trait Lane8 {
+    /// The register type (`[f32; 8]`, `__m256`, or a NEON pair).
+    type V: Copy;
+    /// Human-readable backend name (logs, bench rows, dispatch tests).
+    const NAME: &'static str;
+
+    fn zero() -> Self::V;
+    fn splat(x: f32) -> Self::V;
+    /// # Safety
+    /// `src` must be valid for reads of 8 consecutive `f32`s.
+    unsafe fn load(src: *const f32) -> Self::V;
+    /// # Safety
+    /// `dst` must be valid for writes of 8 consecutive `f32`s.
+    unsafe fn store(dst: *mut f32, v: Self::V);
+    fn add(a: Self::V, b: Self::V) -> Self::V;
+    /// Fused `acc + a * b` — one rounding, never mul-then-add.
+    fn fma(acc: Self::V, a: Self::V, b: Self::V) -> Self::V;
+
+    /// Spill to an array (reductions, the transpose fallback).
+    #[inline(always)]
+    fn to_array(v: Self::V) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        // Safety: `out` is exactly 8 f32s.
+        unsafe { Self::store(out.as_mut_ptr(), v) };
+        out
+    }
+
+    #[inline(always)]
+    fn from_array(a: &[f32; 8]) -> Self::V {
+        // Safety: `a` is exactly 8 f32s.
+        unsafe { Self::load(a.as_ptr()) }
+    }
+
+    /// Horizontal sum in a fixed tree order (shared by every backend so
+    /// results stay bit-identical): `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))`
+    /// — the order the classic AVX `extractf128`/`movehl` ladder produces.
+    #[inline(always)]
+    fn hsum(v: Self::V) -> f32 {
+        let a = Self::to_array(v);
+        ((a[0] + a[4]) + (a[2] + a[6])) + ((a[1] + a[5]) + (a[3] + a[7]))
+    }
+
+    /// Transpose eight 8-lane vectors (an 8x8 f32 tile) in place. The
+    /// provided implementation round-trips through the stack (exact — a
+    /// pure permutation); AVX2 overrides it with the
+    /// unpack/shuffle/permute2f128 ladder.
+    #[inline(always)]
+    fn transpose8(v: &mut [Self::V; 8]) {
+        let mut buf = [[0.0f32; 8]; 8];
+        for (row, lane) in buf.iter_mut().zip(v.iter()) {
+            *row = Self::to_array(*lane);
+        }
+        for (i, lane) in v.iter_mut().enumerate() {
+            let mut col = [0.0f32; 8];
+            for (j, row) in buf.iter().enumerate() {
+                col[j] = row[i];
+            }
+            *lane = Self::from_array(&col);
+        }
+    }
+}
+
+/// Portable backend: the SIMD algorithm on `[f32; 8]` arrays. `mul_add`
+/// keeps fused semantics, so this is bit-identical to the vector backends
+/// — the conformance reference for hosts without AVX2/NEON.
+pub struct ScalarLanes;
+
+impl Lane8 for ScalarLanes {
+    type V = [f32; 8];
+    const NAME: &'static str = "simd-portable";
+
+    #[inline(always)]
+    fn zero() -> [f32; 8] {
+        [0.0; 8]
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> [f32; 8] {
+        [x; 8]
+    }
+
+    #[inline(always)]
+    unsafe fn load(src: *const f32) -> [f32; 8] {
+        let mut v = [0.0f32; 8];
+        std::ptr::copy_nonoverlapping(src, v.as_mut_ptr(), 8);
+        v
+    }
+
+    #[inline(always)]
+    unsafe fn store(dst: *mut f32, v: [f32; 8]) {
+        std::ptr::copy_nonoverlapping(v.as_ptr(), dst, 8);
+    }
+
+    #[inline(always)]
+    fn add(a: [f32; 8], b: [f32; 8]) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        for i in 0..8 {
+            out[i] = a[i] + b[i];
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn fma(acc: [f32; 8], a: [f32; 8], b: [f32; 8]) -> [f32; 8] {
+        let mut out = [0.0f32; 8];
+        for i in 0..8 {
+            out[i] = a[i].mul_add(b[i], acc[i]);
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::Lane8;
+    use core::arch::x86_64::*;
+
+    /// AVX2 + FMA backend. Only entered through the `#[target_feature]`
+    /// wrappers below, after runtime detection — every method is
+    /// `inline(always)` so the intrinsics land inside the feature-enabled
+    /// frame and compile to single instructions.
+    pub struct Avx2;
+
+    impl Lane8 for Avx2 {
+        type V = __m256;
+        const NAME: &'static str = "avx2+fma";
+
+        #[inline(always)]
+        fn zero() -> __m256 {
+            unsafe { _mm256_setzero_ps() }
+        }
+
+        #[inline(always)]
+        fn splat(x: f32) -> __m256 {
+            unsafe { _mm256_set1_ps(x) }
+        }
+
+        #[inline(always)]
+        unsafe fn load(src: *const f32) -> __m256 {
+            _mm256_loadu_ps(src)
+        }
+
+        #[inline(always)]
+        unsafe fn store(dst: *mut f32, v: __m256) {
+            _mm256_storeu_ps(dst, v);
+        }
+
+        #[inline(always)]
+        fn add(a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_add_ps(a, b) }
+        }
+
+        #[inline(always)]
+        fn fma(acc: __m256, a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_fmadd_ps(a, b, acc) }
+        }
+
+        #[inline(always)]
+        fn transpose8(v: &mut [__m256; 8]) {
+            // canonical 8x8: unpack pairs, 4-wide shuffles, cross-lane
+            // 128-bit permutes (exact permutation — same result as the
+            // provided stack fallback, pinned by a unit test below)
+            unsafe {
+                let t0 = _mm256_unpacklo_ps(v[0], v[1]);
+                let t1 = _mm256_unpackhi_ps(v[0], v[1]);
+                let t2 = _mm256_unpacklo_ps(v[2], v[3]);
+                let t3 = _mm256_unpackhi_ps(v[2], v[3]);
+                let t4 = _mm256_unpacklo_ps(v[4], v[5]);
+                let t5 = _mm256_unpackhi_ps(v[4], v[5]);
+                let t6 = _mm256_unpacklo_ps(v[6], v[7]);
+                let t7 = _mm256_unpackhi_ps(v[6], v[7]);
+                let u0 = _mm256_shuffle_ps::<0x44>(t0, t2);
+                let u1 = _mm256_shuffle_ps::<0xEE>(t0, t2);
+                let u2 = _mm256_shuffle_ps::<0x44>(t1, t3);
+                let u3 = _mm256_shuffle_ps::<0xEE>(t1, t3);
+                let u4 = _mm256_shuffle_ps::<0x44>(t4, t6);
+                let u5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+                let u6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+                let u7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+                v[0] = _mm256_permute2f128_ps::<0x20>(u0, u4);
+                v[1] = _mm256_permute2f128_ps::<0x20>(u1, u5);
+                v[2] = _mm256_permute2f128_ps::<0x20>(u2, u6);
+                v[3] = _mm256_permute2f128_ps::<0x20>(u3, u7);
+                v[4] = _mm256_permute2f128_ps::<0x31>(u0, u4);
+                v[5] = _mm256_permute2f128_ps::<0x31>(u1, u5);
+                v[6] = _mm256_permute2f128_ps::<0x31>(u2, u6);
+                v[7] = _mm256_permute2f128_ps::<0x31>(u3, u7);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::Lane8;
+    use core::arch::aarch64::*;
+
+    /// Two q-registers making one f32x8 lane.
+    #[derive(Clone, Copy)]
+    pub struct V8 {
+        lo: float32x4_t,
+        hi: float32x4_t,
+    }
+
+    /// NEON backend (baseline on aarch64 — no runtime feature gate).
+    pub struct Neon;
+
+    impl Lane8 for Neon {
+        type V = V8;
+        const NAME: &'static str = "neon";
+
+        #[inline(always)]
+        fn zero() -> V8 {
+            unsafe { V8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) } }
+        }
+
+        #[inline(always)]
+        fn splat(x: f32) -> V8 {
+            unsafe { V8 { lo: vdupq_n_f32(x), hi: vdupq_n_f32(x) } }
+        }
+
+        #[inline(always)]
+        unsafe fn load(src: *const f32) -> V8 {
+            V8 { lo: vld1q_f32(src), hi: vld1q_f32(src.add(4)) }
+        }
+
+        #[inline(always)]
+        unsafe fn store(dst: *mut f32, v: V8) {
+            vst1q_f32(dst, v.lo);
+            vst1q_f32(dst.add(4), v.hi);
+        }
+
+        #[inline(always)]
+        fn add(a: V8, b: V8) -> V8 {
+            unsafe {
+                V8 { lo: vaddq_f32(a.lo, b.lo), hi: vaddq_f32(a.hi, b.hi) }
+            }
+        }
+
+        #[inline(always)]
+        fn fma(acc: V8, a: V8, b: V8) -> V8 {
+            unsafe {
+                V8 {
+                    lo: vfmaq_f32(acc.lo, a.lo, b.lo),
+                    hi: vfmaq_f32(acc.hi, a.hi, b.hi),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- kernels
+
+/// Rows `lo..hi` of C = A·B (or C = Aᵀ·B) where the A element feeding
+/// output row `i` at depth `d` is `a[i * a_row_stride + d * a_depth_stride]`
+/// — `(a.cols, 1)` for plain matmul over `a.data`, `(1, a.cols)` for the
+/// transposed orientation. `c_rows` holds exactly rows `lo..hi` of C and
+/// is overwritten.
+///
+/// Schedule: per k-panel of [`KC`], pack the current 8-column B tile into
+/// a stack panel (k-major, so the inner loop streams 32-byte lines), then
+/// a 4-row x 8-column FMA microkernel; single-row tail for `hi - lo % 4`,
+/// shared scalar `mul_add` tail for `n % 8` columns.
+#[inline(always)]
+fn gemm_rows_lanes<L: Lane8>(
+    a: &[f32],
+    a_row_stride: usize,
+    a_depth_stride: usize,
+    b: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    let (k, n) = (b.rows, b.cols);
+    debug_assert_eq!(c_rows.len(), (hi - lo) * n);
+    c_rows.fill(0.0);
+    if k == 0 || n == 0 || lo >= hi {
+        return;
+    }
+    let n8 = n - n % 8;
+    let mut panel = [0.0f32; KC * 8];
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        let klen = kend - kb;
+        let mut j = 0;
+        while j < n8 {
+            for kk in 0..klen {
+                let src = (kb + kk) * n + j;
+                panel[kk * 8..kk * 8 + 8]
+                    .copy_from_slice(&b.data[src..src + 8]);
+            }
+            let at = |i: usize, kk: usize| -> f32 {
+                a[i * a_row_stride + (kb + kk) * a_depth_stride]
+            };
+            let mut i = lo;
+            while i + 4 <= hi {
+                let mut acc = [L::zero(); 4];
+                for kk in 0..klen {
+                    // Safety: panel row kk is 8 floats.
+                    let bv = unsafe { L::load(panel.as_ptr().add(kk * 8)) };
+                    acc[0] = L::fma(acc[0], L::splat(at(i, kk)), bv);
+                    acc[1] = L::fma(acc[1], L::splat(at(i + 1, kk)), bv);
+                    acc[2] = L::fma(acc[2], L::splat(at(i + 2, kk)), bv);
+                    acc[3] = L::fma(acc[3], L::splat(at(i + 3, kk)), bv);
+                }
+                for (r, &av) in acc.iter().enumerate() {
+                    let off = (i + r - lo) * n + j;
+                    // Safety: [off, off + 8) is inside row i + r of C.
+                    unsafe {
+                        let cp = c_rows.as_mut_ptr().add(off);
+                        L::store(cp, L::add(L::load(cp), av));
+                    }
+                }
+                i += 4;
+            }
+            while i < hi {
+                let mut acc = L::zero();
+                for kk in 0..klen {
+                    // Safety: panel row kk is 8 floats.
+                    let bv = unsafe { L::load(panel.as_ptr().add(kk * 8)) };
+                    acc = L::fma(acc, L::splat(at(i, kk)), bv);
+                }
+                let off = (i - lo) * n + j;
+                // Safety: [off, off + 8) is inside row i of C.
+                unsafe {
+                    let cp = c_rows.as_mut_ptr().add(off);
+                    L::store(cp, L::add(L::load(cp), acc));
+                }
+                i += 1;
+            }
+            j += 8;
+        }
+        if n8 < n {
+            // column tail: shared scalar code (fused, same order on every
+            // backend)
+            for i in lo..hi {
+                let crow = &mut c_rows[(i - lo) * n..(i - lo) * n + n];
+                for kk in kb..kend {
+                    let av = a[i * a_row_stride + kk * a_depth_stride];
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for jj in n8..n {
+                        crow[jj] = av.mul_add(brow[jj], crow[jj]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Eight simultaneous dot products of `x` against rows `j..j+8` of `b`
+/// (all of length `x.len() == b.cols`), via eight vector accumulators
+/// reduced with the f32x8 transpose + a fixed add tree, plus a shared
+/// scalar tail for `k % 8`.
+#[inline(always)]
+fn dot8_tile<L: Lane8>(x: &[f32], b: &Matrix, j: usize) -> [f32; 8] {
+    let k = x.len();
+    debug_assert_eq!(k, b.cols);
+    let k8 = k - k % 8;
+    let mut acc = [L::zero(); 8];
+    let mut kk = 0;
+    while kk < k8 {
+        // Safety: kk + 8 <= k bounds every load below.
+        let xv = unsafe { L::load(x.as_ptr().add(kk)) };
+        for (jj, a) in acc.iter_mut().enumerate() {
+            let bp = unsafe { L::load(b.data.as_ptr().add((j + jj) * k + kk)) };
+            *a = L::fma(*a, xv, bp);
+        }
+        kk += 8;
+    }
+    // transpose-reduce: lane p of transposed vector q = accumulator q's
+    // lane p, so summing the eight transposed vectors yields all eight
+    // horizontal sums at once
+    L::transpose8(&mut acc);
+    let s01 = L::add(acc[0], acc[1]);
+    let s23 = L::add(acc[2], acc[3]);
+    let s45 = L::add(acc[4], acc[5]);
+    let s67 = L::add(acc[6], acc[7]);
+    let mut out = L::to_array(L::add(L::add(s01, s23), L::add(s45, s67)));
+    while kk < k {
+        let xv = x[kk];
+        for (jj, o) in out.iter_mut().enumerate() {
+            *o = xv.mul_add(b.data[(j + jj) * k + kk], *o);
+        }
+        kk += 1;
+    }
+    out
+}
+
+/// One dot product `x · y`, vector body + fixed-order `hsum` + shared
+/// scalar tail (the single-row remainder of the `dot8_tile` path).
+#[inline(always)]
+fn dot_lanes<L: Lane8>(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let k = x.len();
+    let k8 = k - k % 8;
+    let mut acc = L::zero();
+    let mut kk = 0;
+    while kk < k8 {
+        // Safety: kk + 8 <= k == x.len() == y.len().
+        unsafe {
+            acc = L::fma(
+                acc,
+                L::load(x.as_ptr().add(kk)),
+                L::load(y.as_ptr().add(kk)),
+            );
+        }
+        kk += 8;
+    }
+    let mut t = L::hsum(acc);
+    while kk < k {
+        t = x[kk].mul_add(y[kk], t);
+        kk += 1;
+    }
+    t
+}
+
+/// C = A·Bᵀ (overwrites C): full 8-row B tiles through [`dot8_tile`],
+/// remainder rows through [`dot_lanes`].
+#[inline(always)]
+fn matmul_t_lanes<L: Lane8>(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let n = b.rows;
+    let n8 = n - n % 8;
+    for i in 0..a.rows {
+        let arow = &a.data[i * a.cols..(i + 1) * a.cols];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n8 {
+            crow[j..j + 8].copy_from_slice(&dot8_tile::<L>(arow, b, j));
+            j += 8;
+        }
+        while j < n {
+            crow[j] =
+                dot_lanes::<L>(arow, &b.data[j * b.cols..(j + 1) * b.cols]);
+            j += 1;
+        }
+    }
+}
+
+/// Rows `lo..hi` of the upper triangle of A·Aᵀ (diagonal included),
+/// written at absolute positions in the `m`-wide output rows — the SIMD
+/// twin of the scalar `gram_rows_upper` (the `mirror_upper` fill stays
+/// shared in `matmul.rs`).
+#[inline(always)]
+fn gram_rows_upper_lanes<L: Lane8>(
+    a: &Matrix,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    m: usize,
+) {
+    for i in lo..hi {
+        let ri = &a.data[i * a.cols..(i + 1) * a.cols];
+        let mut j = i;
+        while j + 8 <= m {
+            out[(i - lo) * m + j..(i - lo) * m + j + 8]
+                .copy_from_slice(&dot8_tile::<L>(ri, a, j));
+            j += 8;
+        }
+        while j < m {
+            out[(i - lo) * m + j] =
+                dot_lanes::<L>(ri, &a.data[j * a.cols..(j + 1) * a.cols]);
+            j += 1;
+        }
+    }
+}
+
+// ----------------------------------------------- target_feature entry shims
+
+#[cfg(target_arch = "x86_64")]
+mod entry_avx2 {
+    use super::avx2::Avx2;
+    use super::Matrix;
+
+    // The generic kernels are `inline(always)`, so inside these frames the
+    // Avx2 lane methods monomorphize into real vector instructions.
+    // Safety (all): caller verified avx2+fma via runtime detection.
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_rows(
+        a: &[f32],
+        rs: usize,
+        ds: usize,
+        b: &Matrix,
+        lo: usize,
+        hi: usize,
+        c_rows: &mut [f32],
+    ) {
+        super::gemm_rows_lanes::<Avx2>(a, rs, ds, b, lo, hi, c_rows);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_t(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+        super::matmul_t_lanes::<Avx2>(a, b, c);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gram_rows_upper(
+        a: &Matrix,
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+        m: usize,
+    ) {
+        super::gram_rows_upper_lanes::<Avx2>(a, lo, hi, out, m);
+    }
+}
+
+// ------------------------------------------------------------- dispatch API
+
+/// Concrete kernel executing the GEMM entry points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// The pre-SIMD blocked scalar kernels — the conformance oracle, and
+    /// the bit-exactness baseline for paper-exact trajectories.
+    Scalar,
+    /// The SIMD schedule on the portable `[f32; 8]` backend (forced-`simd`
+    /// fallback on hosts without AVX2/NEON; bit-identical to the vector
+    /// backends).
+    SimdPortable,
+    /// AVX2 + FMA f32x8 (x86_64, runtime-detected).
+    SimdAvx2,
+    /// NEON 2x f32x4 (aarch64).
+    SimdNeon,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::SimdPortable => ScalarLanes::NAME,
+            Kernel::SimdAvx2 => "avx2+fma",
+            Kernel::SimdNeon => "neon",
+        }
+    }
+
+    /// True for every kernel running the SIMD schedule (portable included).
+    pub fn is_simd(self) -> bool {
+        self != Kernel::Scalar
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Kernel::Scalar => 0,
+            Kernel::SimdPortable => 1,
+            Kernel::SimdAvx2 => 2,
+            Kernel::SimdNeon => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Kernel {
+        match v {
+            0 => Kernel::Scalar,
+            1 => Kernel::SimdPortable,
+            2 => Kernel::SimdAvx2,
+            _ => Kernel::SimdNeon,
+        }
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Config-facing kernel selection (`[linalg] kernel`, `--gemm-kernel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Scalar oracle — the default, so paper-exact configs and every
+    /// pre-existing trajectory stay bit-identical (see ROADMAP follow-up
+    /// on flipping the default after a trajectory sweep).
+    #[default]
+    Scalar,
+    /// Native SIMD when the CPU reports support, scalar oracle otherwise.
+    Auto,
+    /// Always the SIMD schedule: native backend when available, portable
+    /// lanes otherwise (CI conformance on any host).
+    Simd,
+}
+
+impl KernelChoice {
+    pub fn parse(s: &str) -> Option<KernelChoice> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelChoice::Scalar),
+            "auto" => Some(KernelChoice::Auto),
+            "simd" => Some(KernelChoice::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Auto => "auto",
+            KernelChoice::Simd => "simd",
+        }
+    }
+}
+
+/// Every kernel that can execute on this host: the scalar oracle, the
+/// portable lane backend, and the native vector backend when the CPU
+/// reports one. The shared enumeration for conformance tests and benches
+/// — a future backend (e.g. AVX-512) added to [`detect_native`] is then
+/// covered everywhere automatically.
+pub fn available_kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar, Kernel::SimdPortable];
+    if let Some(native) = detect_native() {
+        ks.push(native);
+    }
+    ks
+}
+
+/// The native vector backend this CPU supports, if any.
+pub fn detect_native() -> Option<Kernel> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        {
+            return Some(Kernel::SimdAvx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(Kernel::SimdNeon);
+        }
+    }
+    None
+}
+
+/// Resolve a config choice to a concrete kernel on this host.
+pub fn resolve(choice: KernelChoice) -> Kernel {
+    match choice {
+        KernelChoice::Scalar => Kernel::Scalar,
+        // auto falls back to the *oracle* (the fastest scalar path);
+        // forced simd falls back to the portable lanes so the SIMD
+        // schedule is always the one exercised
+        KernelChoice::Auto => detect_native().unwrap_or(Kernel::Scalar),
+        KernelChoice::Simd => detect_native().unwrap_or(Kernel::SimdPortable),
+    }
+}
+
+const KERNEL_UNSET: u8 = u8::MAX;
+
+/// Process-global active kernel consumed by the dispatched entry points in
+/// `matmul.rs`. Lazily initialized from the environment; `Trainer::new`
+/// overwrites it from the run config (still subject to the env override).
+static ACTIVE: AtomicU8 = AtomicU8::new(KERNEL_UNSET);
+
+/// `SARA_FORCE_SCALAR=1` / `SARA_GEMM_KERNEL=auto|simd|scalar`: the CI
+/// hook that wins over any config, so one environment variable flips a
+/// whole test/bench run between the oracle and the SIMD path.
+fn env_override() -> Option<KernelChoice> {
+    if std::env::var("SARA_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return Some(KernelChoice::Scalar);
+    }
+    match std::env::var("SARA_GEMM_KERNEL") {
+        Ok(v) => match KernelChoice::parse(&v) {
+            Some(c) => Some(c),
+            None => {
+                eprintln!(
+                    "warning: SARA_GEMM_KERNEL='{v}' is not \
+                     auto|simd|scalar; ignoring"
+                );
+                None
+            }
+        },
+        Err(_) => None,
+    }
+}
+
+/// The kernel the dispatched entry points currently use.
+pub fn active_kernel() -> Kernel {
+    match ACTIVE.load(Ordering::Relaxed) {
+        KERNEL_UNSET => {
+            let k = resolve(env_override().unwrap_or_default());
+            ACTIVE.store(k.to_u8(), Ordering::Relaxed);
+            k
+        }
+        v => Kernel::from_u8(v),
+    }
+}
+
+/// Install the run config's kernel choice (env override still wins) and
+/// return what was resolved. Called once per run by `Trainer::new`.
+pub fn set_kernel(choice: KernelChoice) -> Kernel {
+    let k = resolve(env_override().unwrap_or(choice));
+    ACTIVE.store(k.to_u8(), Ordering::Relaxed);
+    k
+}
+
+/// Test/bench hook: pin the active kernel directly, bypassing env and
+/// config. Prefer the kernel-explicit `*_with` entry points where
+/// possible — this mutates process state other threads observe.
+pub fn force_kernel(k: Kernel) {
+    ACTIVE.store(k.to_u8(), Ordering::Relaxed);
+}
+
+// ------------------------------------------------------ dispatch into kernels
+
+/// SIMD rows of C = A·B (`kernel` must be a SIMD variant; row range as in
+/// the scalar `matmul_rows`).
+pub(crate) fn matmul_rows_simd(
+    kernel: Kernel,
+    a: &Matrix,
+    b: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    gemm_rows_dispatch(kernel, &a.data, a.cols, 1, b, lo, hi, c_rows);
+}
+
+/// SIMD C = Aᵀ·B (full output; A is m x r walked column-wise via strides).
+pub(crate) fn t_matmul_simd(
+    kernel: Kernel,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
+    gemm_rows_dispatch(kernel, &a.data, 1, a.cols, b, 0, a.cols, &mut c.data);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_dispatch(
+    kernel: Kernel,
+    a: &[f32],
+    rs: usize,
+    ds: usize,
+    b: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: SimdAvx2 only comes out of detect_native().
+        Kernel::SimdAvx2 => unsafe {
+            entry_avx2::gemm_rows(a, rs, ds, b, lo, hi, c_rows)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::SimdNeon => {
+            gemm_rows_lanes::<neon::Neon>(a, rs, ds, b, lo, hi, c_rows)
+        }
+        _ => gemm_rows_lanes::<ScalarLanes>(a, rs, ds, b, lo, hi, c_rows),
+    }
+}
+
+/// SIMD C = A·Bᵀ (overwrites C).
+pub(crate) fn matmul_t_simd(
+    kernel: Kernel,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
+    debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: SimdAvx2 only comes out of detect_native().
+        Kernel::SimdAvx2 => unsafe { entry_avx2::matmul_t(a, b, c) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::SimdNeon => matmul_t_lanes::<neon::Neon>(a, b, c),
+        _ => matmul_t_lanes::<ScalarLanes>(a, b, c),
+    }
+}
+
+/// SIMD upper-triangle Gram rows (the `mirror_upper` fill stays with the
+/// caller in `matmul.rs`).
+pub(crate) fn gram_rows_upper_simd(
+    kernel: Kernel,
+    a: &Matrix,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    m: usize,
+) {
+    debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: SimdAvx2 only comes out of detect_native().
+        Kernel::SimdAvx2 => unsafe {
+            entry_avx2::gram_rows_upper(a, lo, hi, out, m)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::SimdNeon => {
+            gram_rows_upper_lanes::<neon::Neon>(a, lo, hi, out, m)
+        }
+        _ => gram_rows_upper_lanes::<ScalarLanes>(a, lo, hi, out, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn seq8x8() -> [[f32; 8]; 8] {
+        let mut v = [[0.0f32; 8]; 8];
+        for (i, row) in v.iter_mut().enumerate() {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (i * 8 + j) as f32;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn portable_transpose8_is_the_transpose() {
+        let mut v = seq8x8().map(|r| <ScalarLanes as Lane8>::from_array(&r));
+        ScalarLanes::transpose8(&mut v);
+        for (i, lane) in v.iter().enumerate() {
+            let row = ScalarLanes::to_array(*lane);
+            for (j, &x) in row.iter().enumerate() {
+                assert_eq!(x, (j * 8 + i) as f32, "({i},{j})");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_lane_ops_match_portable_bitwise() {
+        if detect_native() != Some(Kernel::SimdAvx2) {
+            eprintln!("no avx2+fma on this host; skipping");
+            return;
+        }
+        use super::avx2::Avx2;
+        let mut rng = Pcg64::new(21);
+        for _ in 0..50 {
+            let mut a = [0.0f32; 8];
+            let mut b = [0.0f32; 8];
+            let mut c = [0.0f32; 8];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            rng.fill_normal(&mut c, 1.0);
+            let (pa, pb, pc) = (
+                <ScalarLanes as Lane8>::from_array(&a),
+                <ScalarLanes as Lane8>::from_array(&b),
+                <ScalarLanes as Lane8>::from_array(&c),
+            );
+            let (va, vb, vc) = (
+                <Avx2 as Lane8>::from_array(&a),
+                <Avx2 as Lane8>::from_array(&b),
+                <Avx2 as Lane8>::from_array(&c),
+            );
+            assert_eq!(
+                ScalarLanes::to_array(ScalarLanes::fma(pc, pa, pb)),
+                Avx2::to_array(Avx2::fma(vc, va, vb)),
+                "fused fma must be bit-identical across backends"
+            );
+            assert_eq!(
+                ScalarLanes::to_array(ScalarLanes::add(pa, pb)),
+                Avx2::to_array(Avx2::add(va, vb)),
+            );
+            assert_eq!(
+                ScalarLanes::hsum(pa).to_bits(),
+                Avx2::hsum(va).to_bits(),
+            );
+        }
+        // the shuffle-ladder transpose is the same permutation as the
+        // portable stack transpose
+        let mut v = seq8x8().map(|r| <Avx2 as Lane8>::from_array(&r));
+        Avx2::transpose8(&mut v);
+        for (i, lane) in v.iter().enumerate() {
+            let row = Avx2::to_array(*lane);
+            for (j, &x) in row.iter().enumerate() {
+                assert_eq!(x, (j * 8 + i) as f32, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_tile_agree_with_plain_sums() {
+        let mut rng = Pcg64::new(22);
+        for &k in &[0usize, 1, 7, 8, 9, 17, 64, 300] {
+            let a = Matrix::randn(1, k, 1.0, &mut rng);
+            let b = Matrix::randn(9, k, 1.0, &mut rng);
+            for j in 0..b.rows {
+                let want: f64 = (0..k)
+                    .map(|d| a.data[d] as f64 * b.data[j * k + d] as f64)
+                    .sum();
+                let got = dot_lanes::<ScalarLanes>(&a.data, b.row(j)) as f64;
+                assert!(
+                    (got - want).abs() <= 1e-5 * (k.max(1) as f64),
+                    "k={k} j={j}: {got} vs {want}"
+                );
+            }
+            if b.rows >= 8 {
+                let tile = dot8_tile::<ScalarLanes>(&a.data, &b, 0);
+                for (jj, &got) in tile.iter().enumerate() {
+                    let want = dot_lanes::<ScalarLanes>(&a.data, b.row(jj));
+                    assert!(
+                        (got - want).abs() <= 1e-5 * (k.max(1) as f32),
+                        "k={k} jj={jj}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn choice_parsing_and_resolution() {
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("SIMD"), Some(KernelChoice::Simd));
+        assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse("fast"), None);
+        assert_eq!(KernelChoice::default(), KernelChoice::Scalar);
+
+        assert_eq!(resolve(KernelChoice::Scalar), Kernel::Scalar);
+        // forced simd never lands on the oracle
+        assert!(resolve(KernelChoice::Simd).is_simd());
+        // auto is native-or-oracle, never the portable emulation
+        let auto = resolve(KernelChoice::Auto);
+        assert!(auto == Kernel::Scalar || detect_native() == Some(auto));
+    }
+}

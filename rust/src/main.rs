@@ -33,6 +33,7 @@ fn usage() -> &'static str {
      \u{20}          [--wrapper galore|fira|full] [--inner adam|adafactor|adam-mini|adam8bit|msgd]\n\
      \u{20}          [--steps N] [--lr F] [--rank R] [--tau T] [--refresh-lookahead L]\n\
      \u{20}          [--workers W] [--dist-workers W] [--bucket-kib K]\n\
+     \u{20}          [--gemm-kernel auto|simd|scalar]\n\
      \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
      \u{20}          [--save ckpt.bin]\n\
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
@@ -65,13 +66,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.eval_every == 0 {
         cfg.eval_every = (cfg.total_steps / 10).max(1);
     }
+    let gemm = sara::linalg::set_kernel(cfg.linalg.kernel);
     let engine = Engine::load(exp::ARTIFACTS, &cfg.model)?;
     println!(
-        "model '{}' ({} params, {} tensors) | method {}",
+        "model '{}' ({} params, {} tensors) | method {} | gemm {}",
         cfg.model,
         engine.manifest.n_params,
         engine.manifest.params.len(),
-        cfg.method_label()
+        cfg.method_label(),
+        gemm
     );
     let mut trainer = Trainer::new(engine, cfg.clone())?;
     let result = trainer.train(&mut Probes::default())?;

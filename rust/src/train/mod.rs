@@ -117,6 +117,9 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(engine: Engine, cfg: RunConfig) -> Result<Self> {
+        // resolve the GEMM kernel once per run (default scalar = the
+        // paper-exact oracle; env override wins for CI dual-path runs)
+        crate::linalg::set_kernel(cfg.linalg.kernel);
         let params = engine.init_params(cfg.seed);
         let man = &engine.manifest;
         let mut opts = Vec::with_capacity(man.params.len());

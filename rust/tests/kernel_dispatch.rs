@@ -1,0 +1,108 @@
+//! GEMM kernel dispatch tests: runtime detection, the `auto|simd|scalar`
+//! resolution rules, and the `SARA_GEMM_KERNEL` / `SARA_FORCE_SCALAR`
+//! environment overrides that let CI exercise both the scalar oracle and
+//! the SIMD path on any host.
+//!
+//! These live in their own integration-test binary because they mutate
+//! process environment and the process-global active kernel; everything
+//! env-touching is confined to the single `env_overrides_*` test so the
+//! test harness's intra-binary parallelism cannot race it against another
+//! env reader. Conformance (SIMD vs oracle numerics) is covered in
+//! `proptest_invariants.rs::prop_simd_*` through the kernel-explicit
+//! `*_with` entry points, which bypass the global entirely.
+
+use sara::config::{parse_kernel, RunConfig};
+use sara::linalg::{
+    active_kernel, detect_native, force_kernel, matmul_into, matmul_into_with,
+    resolve, set_kernel, Kernel, KernelChoice, Matrix,
+};
+use sara::rng::Pcg64;
+
+#[test]
+fn auto_picks_native_backend_when_cpu_reports_support() {
+    match detect_native() {
+        Some(native) => {
+            assert!(native.is_simd());
+            // auto and forced simd both land on the native vector backend
+            assert_eq!(resolve(KernelChoice::Auto), native);
+            assert_eq!(resolve(KernelChoice::Simd), native);
+        }
+        None => {
+            // clean fallbacks: auto -> the scalar oracle (fastest correct
+            // path), forced simd -> the portable lane backend (the SIMD
+            // schedule must still be the one exercised)
+            assert_eq!(resolve(KernelChoice::Auto), Kernel::Scalar);
+            assert_eq!(resolve(KernelChoice::Simd), Kernel::SimdPortable);
+        }
+    }
+    // scalar never resolves to anything else
+    assert_eq!(resolve(KernelChoice::Scalar), Kernel::Scalar);
+
+    #[cfg(target_arch = "x86_64")]
+    {
+        let avx2 = is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma");
+        assert_eq!(
+            detect_native(),
+            avx2.then_some(Kernel::SimdAvx2),
+            "x86_64 detection must mirror is_x86_feature_detected"
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    assert_eq!(detect_native(), Some(Kernel::SimdNeon));
+}
+
+#[test]
+fn config_choice_parses_and_defaults_to_scalar() {
+    assert_eq!(RunConfig::default().linalg.kernel, KernelChoice::Scalar);
+    assert_eq!(parse_kernel("auto").unwrap(), KernelChoice::Auto);
+    assert_eq!(parse_kernel("simd").unwrap(), KernelChoice::Simd);
+    assert_eq!(parse_kernel("scalar").unwrap(), KernelChoice::Scalar);
+    assert!(parse_kernel("sse2").is_err());
+}
+
+#[test]
+fn env_overrides_config_and_global_dispatch_follows() {
+    // establish a clean environment for this (single env-touching) test
+    std::env::remove_var("SARA_GEMM_KERNEL");
+    std::env::remove_var("SARA_FORCE_SCALAR");
+
+    // without env overrides, set_kernel resolves the config choice
+    assert_eq!(set_kernel(KernelChoice::Scalar), Kernel::Scalar);
+    assert_eq!(active_kernel(), Kernel::Scalar);
+    let simd = set_kernel(KernelChoice::Simd);
+    assert!(simd.is_simd(), "forced simd may never land on the oracle");
+    assert_eq!(active_kernel(), simd);
+
+    // SARA_FORCE_SCALAR=1 wins over any config choice
+    std::env::set_var("SARA_FORCE_SCALAR", "1");
+    assert_eq!(set_kernel(KernelChoice::Simd), Kernel::Scalar);
+    assert_eq!(set_kernel(KernelChoice::Auto), Kernel::Scalar);
+    std::env::remove_var("SARA_FORCE_SCALAR");
+
+    // SARA_GEMM_KERNEL=simd forces the SIMD schedule over a scalar config
+    std::env::set_var("SARA_GEMM_KERNEL", "simd");
+    assert!(set_kernel(KernelChoice::Scalar).is_simd());
+    // an unparseable value is ignored (with a warning), config wins
+    std::env::set_var("SARA_GEMM_KERNEL", "warp-drive");
+    assert_eq!(set_kernel(KernelChoice::Scalar), Kernel::Scalar);
+    std::env::remove_var("SARA_GEMM_KERNEL");
+
+    // the dispatched entry points follow the pinned global: same bits as
+    // the kernel-explicit call
+    let target = resolve(KernelChoice::Simd);
+    force_kernel(target);
+    assert_eq!(active_kernel(), target);
+    let mut rng = Pcg64::new(5);
+    let a = Matrix::randn(9, 33, 1.0, &mut rng);
+    let b = Matrix::randn(33, 17, 1.0, &mut rng);
+    let mut via_global = Matrix::zeros(9, 17);
+    matmul_into(&a, &b, &mut via_global);
+    let mut via_explicit = Matrix::zeros(9, 17);
+    matmul_into_with(target, &a, &b, &mut via_explicit);
+    assert_eq!(via_global.data, via_explicit.data);
+
+    // leave the process on the default oracle
+    force_kernel(Kernel::Scalar);
+    assert_eq!(active_kernel(), Kernel::Scalar);
+}

@@ -7,8 +7,9 @@ use sara::coordinator::allreduce;
 use sara::dist::BucketedAllReduce;
 use sara::util::pool::WorkerPool;
 use sara::linalg::{
-    eigh_symmetric, left_singular_vectors, orthogonality_defect, qr_thin,
-    singular_values, Matrix,
+    eigh_symmetric, gram_into_with, left_singular_vectors, matmul_into_with,
+    matmul_t_into_with, orthogonality_defect, qr_thin, resolve,
+    singular_values, t_matmul_into_with, Kernel, KernelChoice, Matrix,
 };
 use sara::metrics::overlap;
 use sara::optim::ParamOptimizer;
@@ -105,6 +106,315 @@ fn prop_projection_residual_bound_lemma_3_3() {
             (resid2 - tail).abs() < 2e-3 * g2.max(1e-9),
             "seed {seed}: resid {resid2} vs tail {tail}"
         );
+    }
+}
+
+// ------------------------------------------------------------ simd kernels
+
+/// Frozen byte-level copies of the **pre-SIMD** scalar GEMM kernels, as
+/// they stood before the dispatch layer existed. `Kernel::Scalar` must
+/// reproduce these bit-for-bit forever — it is the conformance oracle and
+/// the kernel paper-exact trajectories were recorded with. If a test in
+/// this section fails, the oracle was touched; fix the kernel, never this
+/// copy.
+mod prepr {
+    use sara::linalg::Matrix;
+
+    const KC: usize = 256;
+
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        let (k, n) = (a.cols, b.cols);
+        c.data.fill(0.0);
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for i in 0..a.rows {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                let mut kk = kb;
+                while kk + 4 <= kend {
+                    let a0 = arow[kk];
+                    let a1 = arow[kk + 1];
+                    let a2 = arow[kk + 2];
+                    let a3 = arow[kk + 3];
+                    let b0 = &b.data[kk * n..kk * n + n];
+                    let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                    let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                    let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    kk += 4;
+                }
+                while kk < kend {
+                    let av = arow[kk];
+                    let brow = &b.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                    kk += 1;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn t_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, r) = (a.rows, a.cols);
+        let n = b.cols;
+        let mut c = Matrix::zeros(r, n);
+        c.data.fill(0.0);
+        for kb in (0..m).step_by(KC) {
+            let kend = (kb + KC).min(m);
+            for i in 0..r {
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                let mut kk = kb;
+                while kk + 4 <= kend {
+                    let a0 = a.data[kk * r + i];
+                    let a1 = a.data[(kk + 1) * r + i];
+                    let a2 = a.data[(kk + 2) * r + i];
+                    let a3 = a.data[(kk + 3) * r + i];
+                    let b0 = &b.data[kk * n..kk * n + n];
+                    let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                    let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                    let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    kk += 4;
+                }
+                while kk < kend {
+                    let av = a.data[kk * r + i];
+                    let brow = &b.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                    kk += 1;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn matmul_t(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let crow = c.row_mut(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0.0f64;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    acc += x as f64 * y as f64;
+                }
+                crow[j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    pub fn gram(a: &Matrix) -> Matrix {
+        let m = a.rows;
+        let mut g = Matrix::zeros(m, m);
+        for i in 0..m {
+            let ri = a.row(i);
+            for j in i..m {
+                let rj = a.row(j);
+                let mut acc = 0.0f64;
+                for (&x, &y) in ri.iter().zip(rj) {
+                    acc += x as f64 * y as f64;
+                }
+                g.data[i * m + j] = acc as f32;
+            }
+        }
+        for i in 0..m {
+            for j in (i + 1)..m {
+                g.data[j * m + i] = g.data[i * m + j];
+            }
+        }
+        g
+    }
+}
+
+/// SIMD kernels available on this host: always the portable lane backend
+/// (the forced-`simd` fallback), plus the native vector backend when the
+/// CPU reports one. Every returned kernel runs the same 8-lane schedule.
+fn simd_kernels() -> Vec<Kernel> {
+    sara::linalg::available_kernels()
+        .into_iter()
+        .filter(|k| k.is_simd())
+        .collect()
+}
+
+/// Documented SIMD-vs-oracle tolerance: the SIMD schedule reorders the
+/// k-reduction into fused 8-lane partial sums, so on unit-variance data a
+/// k-length dot differs from the scalar oracle by O(sqrt(k)) ulps of its
+/// O(sqrt(k)) natural scale. `1e-5 * (k + 8)` over-covers that bound by
+/// ~100x while still catching any indexing/tail bug (those show O(1)
+/// errors).
+fn simd_tol(k: usize) -> f32 {
+    1e-5 * (k + 8) as f32
+}
+
+#[test]
+fn prop_simd_kernels_match_scalar_oracle_across_edge_shapes() {
+    // edge dims hit every tail path: 0 (empty), 1, 7 (below one lane),
+    // 8 (exactly one lane), 9 (lane + scalar tail), 17 (two lanes + tail,
+    // and a non-multiple-of-4 row count)
+    let edge = [0usize, 1, 7, 8, 9, 17];
+    let mut rng = Pcg64::new(7100);
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+    for &m in &edge {
+        for &k in &edge {
+            for &n in &edge {
+                shapes.push((m, k, n));
+            }
+        }
+    }
+    for _ in 0..CASES {
+        shapes.push((
+            1 + rng.next_bounded(60) as usize,
+            1 + rng.next_bounded(300) as usize,
+            1 + rng.next_bounded(60) as usize,
+        ));
+    }
+    for &(m, k, n) in &shapes {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let tol = simd_tol(k);
+
+        // scalar-oracle references through the same dispatch surface
+        let mut c_ref = Matrix::zeros(m, n);
+        matmul_into_with(Kernel::Scalar, &a, &b, &mut c_ref);
+        let mut ct_ref = Matrix::zeros(m, n);
+        t_matmul_into_with(Kernel::Scalar, &at, &b, &mut ct_ref);
+        let mut cmt_ref = Matrix::zeros(m, n);
+        matmul_t_into_with(Kernel::Scalar, &a, &bt, &mut cmt_ref);
+        let mut g_ref = Matrix::zeros(m, m);
+        gram_into_with(Kernel::Scalar, &a, &mut g_ref);
+
+        for &kernel in &simd_kernels() {
+            // poisoned outputs double as stale-workspace overwrite pins
+            let mut c = Matrix::from_vec(m, n, vec![1e30; m * n]);
+            matmul_into_with(kernel, &a, &b, &mut c);
+            assert!(
+                c.max_abs_diff(&c_ref) <= tol,
+                "matmul [{kernel}] ({m},{k},{n}): {}",
+                c.max_abs_diff(&c_ref)
+            );
+
+            let mut ct = Matrix::from_vec(m, n, vec![1e30; m * n]);
+            t_matmul_into_with(kernel, &at, &b, &mut ct);
+            assert!(
+                ct.max_abs_diff(&ct_ref) <= tol,
+                "t_matmul [{kernel}] ({k},{m},{n}): {}",
+                ct.max_abs_diff(&ct_ref)
+            );
+
+            let mut cmt = Matrix::from_vec(m, n, vec![1e30; m * n]);
+            matmul_t_into_with(kernel, &a, &bt, &mut cmt);
+            assert!(
+                cmt.max_abs_diff(&cmt_ref) <= tol,
+                "matmul_t [{kernel}] ({m},{k},{n}): {}",
+                cmt.max_abs_diff(&cmt_ref)
+            );
+
+            let mut g = Matrix::from_vec(m, m, vec![1e30; m * m]);
+            gram_into_with(kernel, &a, &mut g);
+            assert!(
+                g.max_abs_diff(&g_ref) <= tol,
+                "gram [{kernel}] ({m},{k}): {}",
+                g.max_abs_diff(&g_ref)
+            );
+            assert_eq!(
+                g.max_abs_diff(&g.transpose()),
+                0.0,
+                "gram symmetry [{kernel}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_simd_backends_are_bit_identical() {
+    // The portable lane backend and the native vector backend run the
+    // same schedule with fused arithmetic and fixed reduction orders, so
+    // they must agree *exactly* — this is what makes any CI host a
+    // conformance host for the vector backends. Trivially passes (scalar
+    // lanes vs itself) where no native backend exists.
+    let native = resolve(KernelChoice::Simd);
+    let mut rng = Pcg64::new(7200);
+    for case in 0..CASES {
+        let m = rand_dims(&mut rng, 1, 40);
+        let k = rand_dims(&mut rng, 1, 280);
+        let n = rand_dims(&mut rng, 1, 40);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+
+        let mut c_p = Matrix::zeros(m, n);
+        matmul_into_with(Kernel::SimdPortable, &a, &b, &mut c_p);
+        let mut c_n = Matrix::zeros(m, n);
+        matmul_into_with(native, &a, &b, &mut c_n);
+        assert_eq!(c_p.data, c_n.data, "matmul case {case} ({m},{k},{n})");
+
+        let mut t_p = Matrix::zeros(m, n);
+        t_matmul_into_with(Kernel::SimdPortable, &a.transpose(), &b, &mut t_p);
+        let mut t_n = Matrix::zeros(m, n);
+        t_matmul_into_with(native, &a.transpose(), &b, &mut t_n);
+        assert_eq!(t_p.data, t_n.data, "t_matmul case {case}");
+
+        let mut mt_p = Matrix::zeros(m, n);
+        matmul_t_into_with(Kernel::SimdPortable, &a, &bt, &mut mt_p);
+        let mut mt_n = Matrix::zeros(m, n);
+        matmul_t_into_with(native, &a, &bt, &mut mt_n);
+        assert_eq!(mt_p.data, mt_n.data, "matmul_t case {case}");
+
+        let mut g_p = Matrix::zeros(m, m);
+        gram_into_with(Kernel::SimdPortable, &a, &mut g_p);
+        let mut g_n = Matrix::zeros(m, m);
+        gram_into_with(native, &a, &mut g_n);
+        assert_eq!(g_p.data, g_n.data, "gram case {case}");
+    }
+}
+
+#[test]
+fn prop_simd_scalar_dispatch_reproduces_pre_pr_kernels_bitwise() {
+    let mut rng = Pcg64::new(7300);
+    for case in 0..CASES {
+        let m = rand_dims(&mut rng, 1, 48);
+        let k = rand_dims(&mut rng, 1, 300); // crosses the KC=256 panel edge
+        let n = rand_dims(&mut rng, 1, 48);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+
+        let mut c = Matrix::zeros(m, n);
+        matmul_into_with(Kernel::Scalar, &a, &b, &mut c);
+        assert_eq!(c.data, prepr::matmul(&a, &b).data, "matmul case {case}");
+
+        let mut ct = Matrix::zeros(m, n);
+        t_matmul_into_with(Kernel::Scalar, &at, &b, &mut ct);
+        assert_eq!(
+            ct.data,
+            prepr::t_matmul(&at, &b).data,
+            "t_matmul case {case}"
+        );
+
+        let mut cmt = Matrix::zeros(m, n);
+        matmul_t_into_with(Kernel::Scalar, &a, &bt, &mut cmt);
+        assert_eq!(
+            cmt.data,
+            prepr::matmul_t(&a, &bt).data,
+            "matmul_t case {case}"
+        );
+
+        let mut g = Matrix::zeros(m, m);
+        gram_into_with(Kernel::Scalar, &a, &mut g);
+        assert_eq!(g.data, prepr::gram(&a).data, "gram case {case}");
     }
 }
 

@@ -18,6 +18,17 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 (cd rust && cargo build --release && cargo test -q)
 
 echo
+echo "== linalg dual-path: scalar oracle vs forced-SIMD dispatch =="
+# the full suite above ran with the default kernel (the scalar oracle);
+# re-run the kernel-sensitive groups with the SIMD schedule forced via the
+# env override, so both dispatch paths are exercised on every host (on
+# machines without AVX2/NEON this lands on the portable lane backend —
+# bit-identical to the vector backends by construction)
+(cd rust && SARA_GEMM_KERNEL=simd cargo test -q --lib linalg)
+(cd rust && SARA_GEMM_KERNEL=simd cargo test -q --test proptest_invariants prop_simd)
+(cd rust && cargo test -q --test kernel_dispatch)
+
+echo
 echo "== dist smoke: 2-worker bucketed-reduce + sharded-state path =="
 # the artifact-free dist pipeline tests (reduce oracle equivalence,
 # 2-worker determinism, W=1 bit-identity) already ran inside the full
@@ -38,6 +49,8 @@ echo "== perf smoke: hotpath + allreduce benches (fast mode) =="
     cargo bench --bench hotpath
   SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_allreduce.json" \
     cargo bench --bench allreduce
+  SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_gemm.json" \
+    cargo bench --bench gemm
 )
 
 echo
@@ -64,6 +77,7 @@ diff_against_baseline() {
 }
 diff_against_baseline "$REPO_ROOT/BENCH_hotpath.json" "$REPO_ROOT/BENCH_baseline.json"
 diff_against_baseline "$REPO_ROOT/BENCH_allreduce.json" "$REPO_ROOT/BENCH_allreduce_baseline.json"
+diff_against_baseline "$REPO_ROOT/BENCH_gemm.json" "$REPO_ROOT/BENCH_gemm_baseline.json"
 
 echo
 echo "tier-1 OK; perf trajectories at $REPO_ROOT/BENCH_hotpath.json and $REPO_ROOT/BENCH_allreduce.json"

@@ -1,0 +1,122 @@
+//! Bench: the Engine boundary — host→literal upload and literal→host
+//! download cost per step, cached (dirty-tracked in-place rewrite,
+//! reusable output literal) vs uncached (the legacy rebuild-everything
+//! path) — at a paper-60M-flavored tensor family (8 transformer blocks of
+//! 512x512 attention + 512x1376 MLP weights, a 4096x512 embedding, norms).
+//!
+//! Emits `BENCH_engine.json` (or `SARA_BENCH_JSON=<path>`), diffed against
+//! `BENCH_engine_baseline.json` by `scripts/tier1.sh`. The acceptance
+//! number for the param-cache PR is a cached-step median >= 2x better than
+//! uncached on the upload/download rows; the mechanisms are the removal of
+//! the double copy in `to_literal` (`vec1` clone + `reshape` clone), of
+//! the per-step output-literal allocation, and of every per-output
+//! `to_vec`. The PJRT execute itself is not measured here (the vendored
+//! stub has no backend); these are exactly the host-side costs the cache
+//! deletes, identical under the real crate.
+
+use sara::runtime::{tokens_to_literal, ParamStore, Tensor};
+use sara::rng::Pcg64;
+use sara::util::bench::{section, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Pcg64::new(0);
+
+    // 60M-flavored tensor family (embedding scaled down so the bench stays
+    // fast; relative cached-vs-uncached cost is shape-independent)
+    let mut shapes: Vec<Vec<usize>> = vec![vec![4096, 512]];
+    for _ in 0..8 {
+        shapes.push(vec![512, 512]); // attention
+        shapes.push(vec![512, 1376]); // mlp
+        shapes.push(vec![512]); // norm
+    }
+    let params: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| {
+            let mut t = Tensor::zeros(s);
+            rng.fill_normal(&mut t.data, 0.02);
+            t
+        })
+        .collect();
+    let tokens_shape = vec![8usize, 129];
+    let tokens: Vec<i32> = (0..8 * 129).map(|i| (i % 1000) as i32).collect();
+    let total_elems: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    println!(
+        "param family: {} tensors, {:.1} MiB",
+        shapes.len(),
+        total_elems as f64 * 4.0 / (1024.0 * 1024.0)
+    );
+
+    section("upload: host -> literal, per train step");
+    b.run("upload uncached (fresh literals/step)", || {
+        let mut lits = Vec::with_capacity(params.len() + 1);
+        for t in &params {
+            lits.push(t.to_literal().unwrap());
+        }
+        lits.push(tokens_to_literal(&tokens, &tokens_shape).unwrap());
+        lits
+    });
+    let mut store = ParamStore::new(params.len());
+    store.set_enabled(true);
+    store.prepare(&params, &tokens, &tokens_shape).unwrap();
+    b.run("upload cached (all params dirty, in-place)", || {
+        store.mark_all_dirty();
+        store.prepare(&params, &tokens, &tokens_shape).unwrap().len()
+    });
+    b.run("upload cached (1 param dirty)", || {
+        store.mark_dirty(1);
+        store.prepare(&params, &tokens, &tokens_shape).unwrap().len()
+    });
+    b.run("upload cached (clean params: eval step)", || {
+        store.prepare(&params, &tokens, &tokens_shape).unwrap().len()
+    });
+
+    section("download: literal -> host, per train step");
+    // the simulated PJRT result tuple (loss + one gradient per param),
+    // standing in for what to_literal_sync materializes each step
+    let result_tuple = {
+        let mut elems = vec![xla::Literal::vec1(&[3.25f32]).reshape(&[]).unwrap()];
+        for t in &params {
+            elems.push(t.to_literal().unwrap());
+        }
+        xla::Literal::tuple(elems)
+    };
+    b.run("download uncached (sync-alloc + to_tuple + to_vec)", || {
+        // legacy path: a fresh result literal (to_literal_sync), consumed
+        // by to_tuple, loss via to_vec, gradients bootstrapped per step
+        let out = result_tuple.clone();
+        let outs = out.to_tuple().unwrap();
+        let loss = outs[0].to_vec::<f32>().unwrap()[0];
+        let grads: Vec<Tensor> = outs[1..]
+            .iter()
+            .zip(&shapes)
+            .map(|(l, s)| Tensor::from_literal(l, s).unwrap())
+            .collect();
+        (loss, grads.len())
+    });
+    let mut out_lit = result_tuple.clone();
+    let mut grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    b.run("download cached (sync-into + read_into, reused)", || {
+        // cached path: to_literal_sync_into rewrites the reusable output
+        // literal, the tuple is borrowed, loss + gradients land in
+        // caller-owned buffers — zero allocation
+        out_lit.write_from(&result_tuple).unwrap();
+        let outs = out_lit.as_tuple().unwrap();
+        let mut loss = [0.0f32; 1];
+        outs[0].read_into(&mut loss).unwrap();
+        for (g, l) in grads.iter_mut().zip(&outs[1..]) {
+            g.fill_from_literal(l).unwrap();
+        }
+        loss[0]
+    });
+
+    let stats = store.stats();
+    println!(
+        "\ncache counters: {} full builds, {} rewrites, {} skipped, {:.1} MiB uploaded",
+        stats.full_builds,
+        stats.param_rewrites,
+        stats.params_skipped,
+        stats.uploaded_bytes as f64 / (1024.0 * 1024.0)
+    );
+    b.finish_or("engine", "BENCH_engine.json");
+}

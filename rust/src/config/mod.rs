@@ -129,6 +129,25 @@ impl DistConfig {
     }
 }
 
+/// Runtime (engine-boundary) configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RuntimeConfig {
+    /// Device-resident parameter cache in `Engine::execute`: keep one
+    /// persistent literal per parameter across steps and rewrite only
+    /// dirty (optimizer-touched) ones in place, with reusable download
+    /// literals on the output side. Default **on**; `off` restores the
+    /// legacy rebuild-everything path. Caching reorders no arithmetic, so
+    /// results are bit-identical either way — `off` exists as an escape
+    /// hatch and an A/B lever, not a semantics switch.
+    pub param_cache: bool,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self { param_cache: true }
+    }
+}
+
 /// Dense linear-algebra substrate configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LinalgConfig {
@@ -173,6 +192,9 @@ pub struct RunConfig {
     /// GEMM kernel selection (`[linalg]` in TOML, `--gemm-kernel` on the
     /// CLI).
     pub linalg: LinalgConfig,
+    /// Engine-boundary knobs (`[runtime]` in TOML, `--param-cache` on the
+    /// CLI).
+    pub runtime: RuntimeConfig,
     /// Evaluate validation loss every N steps (0 = only at the end).
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -195,6 +217,7 @@ impl Default for RunConfig {
             workers: 1,
             dist: DistConfig::default(),
             linalg: LinalgConfig::default(),
+            runtime: RuntimeConfig::default(),
             eval_every: 0,
             eval_batches: 8,
             probe_every: 0,
@@ -225,6 +248,16 @@ pub fn parse_inner(s: &str) -> Result<InnerOpt> {
 pub fn parse_kernel(s: &str) -> Result<KernelChoice> {
     KernelChoice::parse(s)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel '{s}' (auto|simd|scalar)"))
+}
+
+/// `on|off` toggle values (`--param-cache`, `[runtime] param_cache`);
+/// `true/false` and `1/0` accepted as aliases.
+pub fn parse_onoff(s: &str) -> Result<bool> {
+    Ok(match s {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        _ => bail!("expected on|off, got '{s}'"),
+    })
 }
 
 pub fn parse_selector(s: &str) -> Result<SelectorKind> {
@@ -290,6 +323,9 @@ impl RunConfig {
         if let Some(s) = args.get("gemm-kernel") {
             self.linalg.kernel = parse_kernel(s)?;
         }
+        if let Some(s) = args.get("param-cache") {
+            self.runtime.param_cache = parse_onoff(s)?;
+        }
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.probe_every = args.get_usize("probe-every", self.probe_every)?;
         if let Some(d) = args.get("dataset") {
@@ -335,6 +371,19 @@ impl RunConfig {
         cfg.dist.validate()?;
         if let Some(v) = doc.get_str("linalg", "kernel") {
             cfg.linalg.kernel = parse_kernel(v)?;
+        }
+        if let Some(v) = doc.get("runtime", "param_cache") {
+            // every alias parse_onoff accepts on the CLI works here too;
+            // an unrecognized value is an error, never silently default-on
+            cfg.runtime.param_cache = match v {
+                toml::TomlValue::Bool(b) => *b,
+                toml::TomlValue::Int(0) => false,
+                toml::TomlValue::Int(1) => true,
+                toml::TomlValue::Str(s) => parse_onoff(s)?,
+                other => {
+                    bail!("runtime.param_cache must be on|off, got {other:?}")
+                }
+            };
         }
         cfg.eval_every = doc.get_usize("run", "eval_every").unwrap_or(cfg.eval_every);
         cfg.probe_every =
@@ -449,6 +498,58 @@ mod tests {
         assert!(parse_inner("adamw9000").is_err());
         assert!(parse_wrapper("lora").is_err());
         assert!(parse_kernel("avx512").is_err());
+        assert!(parse_onoff("maybe").is_err());
+    }
+
+    #[test]
+    fn param_cache_defaults_on_and_parses_from_cli_and_toml() {
+        // default on: the cached engine boundary is the normal path
+        assert!(RunConfig::default().runtime.param_cache);
+
+        let args = Args::parse(
+            "train --param-cache off".split_whitespace().map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert!(!c.runtime.param_cache);
+        let args = Args::parse(
+            "train --param-cache on".split_whitespace().map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert!(c.runtime.param_cache);
+        let bad = Args::parse(
+            "train --param-cache sometimes"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+
+        // TOML accepts the bool, 0/1, and quoted on/off forms
+        let dir = std::env::temp_dir().join("sara_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("param_cache.toml");
+        for (body, want) in [
+            ("[runtime]\nparam_cache = false\n", false),
+            ("[runtime]\nparam_cache = 0\n", false),
+            ("[runtime]\nparam_cache = 1\n", true),
+            ("[runtime]\nparam_cache = \"off\"\n", false),
+            ("[runtime]\nparam_cache = \"on\"\n", true),
+            ("", true),
+        ] {
+            std::fs::write(&path, body).unwrap();
+            let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+            assert_eq!(c.runtime.param_cache, want, "{body:?}");
+        }
+        // an unrecognized value errors instead of silently staying on
+        for body in
+            ["[runtime]\nparam_cache = 2\n", "[runtime]\nparam_cache = \"yes\"\n"]
+        {
+            std::fs::write(&path, body).unwrap();
+            assert!(
+                RunConfig::from_toml_file(path.to_str().unwrap()).is_err(),
+                "{body:?}"
+            );
+        }
     }
 
     #[test]

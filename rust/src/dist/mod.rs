@@ -57,6 +57,10 @@ pub struct DistReport {
     pub allgather_bytes_per_step: usize,
     /// Cumulative projector-broadcast bytes (owner -> W-1 ranks).
     pub projector_bcast_bytes: usize,
+    /// Host→device upload bytes per rank per step under the parameter
+    /// cache: each rank re-uploads only the touched params it owns (~1/W
+    /// of the model), not the full parameter set.
+    pub per_rank_upload_bytes: Vec<usize>,
 }
 
 impl DistReport {
@@ -71,8 +75,13 @@ impl DistReport {
             .collect();
         let refr: Vec<String> =
             self.per_rank_refreshes.iter().map(|c| c.to_string()).collect();
+        let upload: Vec<String> = self
+            .per_rank_upload_bytes
+            .iter()
+            .map(|&b| format!("{:.2}", mib(b)))
+            .collect();
         format!(
-            "dist W={}  buckets {}x{:.1}KiB  state/rank [{}] MiB  reduce {:.1}ms/{} calls  refr/rank [{}]  allgather {:.2} MiB/step  P-bcast {:.2} MiB",
+            "dist W={}  buckets {}x{:.1}KiB  state/rank [{}] MiB  reduce {:.1}ms/{} calls  refr/rank [{}]  allgather {:.2} MiB/step  P-bcast {:.2} MiB  upload/rank [{}] MiB/step",
             self.world,
             self.bucket_count,
             self.bucket_elems as f64 * 4.0 / 1024.0,
@@ -82,6 +91,7 @@ impl DistReport {
             refr.join(" "),
             mib(self.allgather_bytes_per_step),
             mib(self.projector_bcast_bytes),
+            upload.join(" "),
         )
     }
 }
@@ -198,10 +208,12 @@ mod tests {
             reduce_calls: 10,
             allgather_bytes_per_step: 4096,
             projector_bcast_bytes: 8192,
+            per_rank_upload_bytes: vec![1024 * 1024, 2 * 1024 * 1024],
         };
         let row = r.row();
         assert!(row.contains("W=2"), "{row}");
         assert!(row.contains("reduce 1.5ms/10 calls"), "{row}");
         assert!(row.contains("refr/rank [4 2]"), "{row}");
+        assert!(row.contains("upload/rank [1.00 2.00] MiB/step"), "{row}");
     }
 }

@@ -63,8 +63,24 @@ impl ShardedState {
         lr: f32,
         deltas: &mut [Matrix],
     ) {
-        crate::train::parallel_optimizer_step_into(
-            pool, &mut self.opts, grads, lr, deltas,
+        self.step_into_marked(pool, grads, lr, deltas, &mut []);
+    }
+
+    /// [`ShardedState::step_into`] recording which parameters the pass
+    /// touched (`touched` empty = untracked, else one slot per parameter).
+    /// The trainer forwards the marks to the engine's parameter cache —
+    /// with the all-gather applying every owner's delta on every rank,
+    /// a touched parameter means "this weight changed, re-upload it".
+    pub fn step_into_marked(
+        &mut self,
+        pool: &WorkerPool,
+        grads: &mut [Tensor],
+        lr: f32,
+        deltas: &mut [Matrix],
+        touched: &mut [bool],
+    ) {
+        crate::train::parallel_optimizer_step_marked(
+            pool, &mut self.opts, grads, lr, deltas, touched,
         );
     }
 
@@ -123,6 +139,27 @@ impl ShardedState {
     /// the other `W - 1` ranks.
     pub fn projector_broadcast_bytes(&self) -> usize {
         refresh::projector_broadcast_bytes(&self.opts, self.topo.world())
+    }
+
+    /// Host→device upload bytes each rank pays per step under the
+    /// parameter cache: a rank re-uploads exactly the touched parameters
+    /// **it owns** — its locally applied shard — because the all-gathered
+    /// remainder lands in device memory via collective transport, not a
+    /// host upload (the ZeRO partitioning story applied to the engine
+    /// boundary). `sizes[p]` = element count of parameter `p`; an empty
+    /// `touched` mask means every parameter was touched.
+    pub fn per_rank_upload_bytes(
+        &self,
+        sizes: &[usize],
+        touched: &[bool],
+    ) -> Vec<usize> {
+        let mut bytes = vec![0usize; self.topo.world()];
+        for (i, &n) in sizes.iter().enumerate() {
+            if touched.get(i).copied().unwrap_or(true) {
+                bytes[self.topo.owner_of(i)] += n * 4;
+            }
+        }
+        bytes
     }
 
     /// `(max per-layer refresh count, cumulative refresh-compute nanos)`
@@ -240,6 +277,65 @@ mod tests {
             assert!(opt.refresh_stats().0 >= 3, "param {i}");
             let _ = topo.owner_of(i);
         }
+    }
+
+    /// The ISSUE's acceptance criterion on upload scaling: per-rank upload
+    /// bytes under the parameter cache cover exactly the touched params
+    /// this rank owns — they partition the touched total (~1/W each for a
+    /// uniform layer family), and untouched params drop out entirely.
+    #[test]
+    fn per_rank_upload_bytes_scale_with_owned_touched_params() {
+        let cfg = lowrank_cfg();
+        let n = 8;
+        let opts = make_opts(&cfg, n);
+        let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+        let world = 4;
+        let sharded = ShardedState::new(opts, Topology::new(world, &weights));
+        let sizes = vec![12 * 16; n];
+        let total: usize = sizes.iter().map(|s| s * 4).sum();
+
+        // everything touched: uploads partition the full model, 1/W each
+        let all = sharded.per_rank_upload_bytes(&sizes, &vec![true; n]);
+        assert_eq!(all.iter().sum::<usize>(), total);
+        for (r, &b) in all.iter().enumerate() {
+            assert_eq!(b, total / world, "rank {r}: not ~1/W of the model");
+        }
+        // an empty mask means "all touched" (the pre-tracking default)
+        assert_eq!(sharded.per_rank_upload_bytes(&sizes, &[]), all);
+
+        // half touched: untouched params upload nothing anywhere
+        let mut touched = vec![true; n];
+        for t in touched.iter_mut().skip(n / 2) {
+            *t = false;
+        }
+        let half = sharded.per_rank_upload_bytes(&sizes, &touched);
+        assert_eq!(half.iter().sum::<usize>(), total / 2);
+        for (r, &b) in half.iter().enumerate() {
+            assert!(b <= all[r], "rank {r}: touching fewer params uploaded more");
+        }
+
+        // nothing touched (an eval step): zero upload on every rank
+        let none = sharded.per_rank_upload_bytes(&sizes, &vec![false; n]);
+        assert!(none.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn marked_step_reports_touched_params() {
+        let cfg = lowrank_cfg();
+        let pool = WorkerPool::new(2);
+        let n = 3;
+        let opts = make_opts(&cfg, n);
+        let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+        let mut sharded = ShardedState::new(opts, Topology::new(2, &weights));
+        let mut grads: Vec<Tensor> = (0..n)
+            .map(|_| Tensor::from_vec(&[12, 16], vec![0.5; 12 * 16]))
+            .collect();
+        let mut deltas: Vec<Matrix> =
+            (0..n).map(|_| Matrix::zeros(12, 16)).collect();
+        let mut touched = vec![false; n];
+        sharded.step_into_marked(&pool, &mut grads, 0.05, &mut deltas, &mut touched);
+        // every current optimizer touches its parameter each step
+        assert!(touched.iter().all(|&t| t));
     }
 
     #[test]

@@ -181,8 +181,23 @@ pub fn matmul_into_par(pool: &WorkerPool, a: &Matrix, b: &Matrix, c: &mut Matrix
     matmul_into_par_with(active_kernel(), pool, a, b, c);
 }
 
+thread_local! {
+    /// Per-product shared B pack for the pooled SIMD kernels (ROADMAP PR 4
+    /// follow-up "reuse the packed B panel across the pooled `_par` row
+    /// blocks"). The submitting thread packs B **once** per product into
+    /// this grow-only workspace immediately before the pool broadcast that
+    /// consumes it, and the row-block closures read it through a shared
+    /// borrow scoped to that one broadcast (the "pool generation") — the
+    /// borrow's lexical scope is what makes a pack unable to outlive, or
+    /// be consumed by, any product other than the one it was built for.
+    static SHARED_PACK: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// [`matmul_into_par`] with an explicit kernel; all row blocks of the
-/// product run that one backend.
+/// product run that one backend. SIMD backends pack B once per product
+/// (shared across the row blocks, bit-identical to per-block packing —
+/// the panel bytes are the same); the scalar oracle is byte-untouched.
 pub fn matmul_into_par_with(
     kernel: Kernel,
     pool: &WorkerPool,
@@ -200,6 +215,30 @@ pub fn matmul_into_par_with(
     }
     let base = SendPtr(c.data.as_mut_ptr());
     let blocks = m.div_ceil(ROW_BLOCK);
+    if kernel.is_simd() && blocks > 1 && n >= 8 {
+        // shared-pack path: pack B's j-tiles once on the submitting
+        // thread, then every row block consumes the same panels instead
+        // of re-packing them (the old per-block cost was one full B pack
+        // per ROW_BLOCK rows of C)
+        SHARED_PACK.with(|ws| {
+            let mut ws = ws.borrow_mut();
+            simd::pack_b_panels(b, &mut ws);
+            let pack: &[f32] = &ws;
+            pool.run_indexed(blocks, |bi| {
+                let lo = bi * ROW_BLOCK;
+                let hi = (lo + ROW_BLOCK).min(m);
+                // Safety: row ranges [lo, hi) are disjoint across items.
+                let rows = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.0.add(lo * n),
+                        (hi - lo) * n,
+                    )
+                };
+                simd::matmul_rows_prepacked_simd(kernel, a, b, pack, lo, hi, rows);
+            });
+        });
+        return;
+    }
     pool.run_indexed(blocks, |bi| {
         let lo = bi * ROW_BLOCK;
         let hi = (lo + ROW_BLOCK).min(m);
@@ -521,6 +560,48 @@ mod tests {
             gram_into(&a, &mut gg);
             assert_eq!(gg.data, a.gram().data, "gram_into bitwise");
             assert!(gg.max_abs_diff(&gg.transpose()) == 0.0, "gram symmetry");
+        }
+    }
+
+    /// The shared-pack `_par` path (B packed once per product, consumed by
+    /// every row block) must be **bit-identical** to the per-block packing
+    /// the serial kernel still does — same panel bytes, same microkernel,
+    /// same FMA order. Shapes cross the KC k-panel boundary, leave n % 8
+    /// tail columns, and include multi-row-block heights so the pooled
+    /// path (not the serial small-product fallback) is exercised.
+    #[test]
+    fn par_shared_pack_is_bit_identical_to_per_block_packing() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Pcg64::new(23);
+        for kernel in simd::available_kernels() {
+            for &(m, k, n) in &[
+                (64, 300, 40),  // multiple k-panels at KC=256
+                (65, 513, 33),  // 3 k-panels + row and column tails
+                (48, 100, 64),  // exact column tiles
+                (33, 64, 200),  // wide, row tail
+            ] {
+                let a = Matrix::randn(m, k, 1.0, &mut rng);
+                let b = Matrix::randn(k, n, 1.0, &mut rng);
+                let mut serial = Matrix::from_vec(m, n, vec![f32::NAN; m * n]);
+                matmul_into_with(kernel, &a, &b, &mut serial);
+                let mut par = Matrix::from_vec(m, n, vec![f32::NAN; m * n]);
+                matmul_into_par_with(kernel, &pool, &a, &b, &mut par);
+                assert_eq!(
+                    serial.data, par.data,
+                    "{kernel} ({m},{k},{n}): shared pack diverged"
+                );
+                // back-to-back products reuse the workspace; the second
+                // product must not see the first's panels
+                let b2 = Matrix::randn(k, n, 1.0, &mut rng);
+                let mut serial2 = Matrix::zeros(m, n);
+                matmul_into_with(kernel, &a, &b2, &mut serial2);
+                let mut par2 = Matrix::zeros(m, n);
+                matmul_into_par_with(kernel, &pool, &a, &b2, &mut par2);
+                assert_eq!(
+                    serial2.data, par2.data,
+                    "{kernel} ({m},{k},{n}): stale pack reused across products"
+                );
+            }
         }
     }
 

@@ -325,6 +325,102 @@ mod neon {
 
 // ---------------------------------------------------------------- kernels
 
+/// The 4-row x 8-column FMA microkernel over one packed B panel: rows
+/// `lo..hi` of C columns `j..j+8` accumulate `A[:, kb..kb+klen] · panel`.
+/// `panel` holds `klen` rows of 8 packed B values (k-major); whether it
+/// was packed on the stack just now ([`gemm_rows_lanes`]) or once per
+/// product into a shared workspace ([`gemm_rows_prepacked_lanes`]) is
+/// invisible here — the contents are identical bytes, which is what makes
+/// the shared-pack path bit-identical to the per-block packing.
+///
+/// Safety contract (checked by the callers): `panel` is valid for
+/// `klen * 8` reads, and `c_rows` holds rows `lo..hi` of an `n`-wide C.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn panel_rows<L: Lane8>(
+    a: &[f32],
+    a_row_stride: usize,
+    a_depth_stride: usize,
+    panel: *const f32,
+    kb: usize,
+    klen: usize,
+    lo: usize,
+    hi: usize,
+    j: usize,
+    n: usize,
+    c_rows: &mut [f32],
+) {
+    let at = |i: usize, kk: usize| -> f32 {
+        a[i * a_row_stride + (kb + kk) * a_depth_stride]
+    };
+    let mut i = lo;
+    while i + 4 <= hi {
+        let mut acc = [L::zero(); 4];
+        for kk in 0..klen {
+            // Safety: panel row kk is 8 floats (caller contract).
+            let bv = unsafe { L::load(panel.add(kk * 8)) };
+            acc[0] = L::fma(acc[0], L::splat(at(i, kk)), bv);
+            acc[1] = L::fma(acc[1], L::splat(at(i + 1, kk)), bv);
+            acc[2] = L::fma(acc[2], L::splat(at(i + 2, kk)), bv);
+            acc[3] = L::fma(acc[3], L::splat(at(i + 3, kk)), bv);
+        }
+        for (r, &av) in acc.iter().enumerate() {
+            let off = (i + r - lo) * n + j;
+            // Safety: [off, off + 8) is inside row i + r of C.
+            unsafe {
+                let cp = c_rows.as_mut_ptr().add(off);
+                L::store(cp, L::add(L::load(cp), av));
+            }
+        }
+        i += 4;
+    }
+    while i < hi {
+        let mut acc = L::zero();
+        for kk in 0..klen {
+            // Safety: panel row kk is 8 floats (caller contract).
+            let bv = unsafe { L::load(panel.add(kk * 8)) };
+            acc = L::fma(acc, L::splat(at(i, kk)), bv);
+        }
+        let off = (i - lo) * n + j;
+        // Safety: [off, off + 8) is inside row i of C.
+        unsafe {
+            let cp = c_rows.as_mut_ptr().add(off);
+            L::store(cp, L::add(L::load(cp), acc));
+        }
+        i += 1;
+    }
+}
+
+/// The `n % 8` remainder columns for one k-panel: plain fused scalar code,
+/// kernel-independent (identical order on every backend, and untouched by
+/// the shared-pack path — tail columns are never packed).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn scalar_column_tail(
+    a: &[f32],
+    a_row_stride: usize,
+    a_depth_stride: usize,
+    b: &Matrix,
+    kb: usize,
+    kend: usize,
+    lo: usize,
+    hi: usize,
+    n8: usize,
+    c_rows: &mut [f32],
+) {
+    let n = b.cols;
+    for i in lo..hi {
+        let crow = &mut c_rows[(i - lo) * n..(i - lo) * n + n];
+        for kk in kb..kend {
+            let av = a[i * a_row_stride + kk * a_depth_stride];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for jj in n8..n {
+                crow[jj] = av.mul_add(brow[jj], crow[jj]);
+            }
+        }
+    }
+}
+
 /// Rows `lo..hi` of C = A·B (or C = Aᵀ·B) where the A element feeding
 /// output row `i` at depth `d` is `a[i * a_row_stride + d * a_depth_stride]`
 /// — `(a.cols, 1)` for plain matmul over `a.data`, `(1, a.cols)` for the
@@ -333,8 +429,8 @@ mod neon {
 ///
 /// Schedule: per k-panel of [`KC`], pack the current 8-column B tile into
 /// a stack panel (k-major, so the inner loop streams 32-byte lines), then
-/// a 4-row x 8-column FMA microkernel; single-row tail for `hi - lo % 4`,
-/// shared scalar `mul_add` tail for `n % 8` columns.
+/// the [`panel_rows`] 4-row x 8-column FMA microkernel; single-row tail
+/// for `hi - lo % 4`, shared scalar `mul_add` tail for `n % 8` columns.
 #[inline(always)]
 fn gemm_rows_lanes<L: Lane8>(
     a: &[f32],
@@ -363,60 +459,125 @@ fn gemm_rows_lanes<L: Lane8>(
                 panel[kk * 8..kk * 8 + 8]
                     .copy_from_slice(&b.data[src..src + 8]);
             }
-            let at = |i: usize, kk: usize| -> f32 {
-                a[i * a_row_stride + (kb + kk) * a_depth_stride]
-            };
-            let mut i = lo;
-            while i + 4 <= hi {
-                let mut acc = [L::zero(); 4];
-                for kk in 0..klen {
-                    // Safety: panel row kk is 8 floats.
-                    let bv = unsafe { L::load(panel.as_ptr().add(kk * 8)) };
-                    acc[0] = L::fma(acc[0], L::splat(at(i, kk)), bv);
-                    acc[1] = L::fma(acc[1], L::splat(at(i + 1, kk)), bv);
-                    acc[2] = L::fma(acc[2], L::splat(at(i + 2, kk)), bv);
-                    acc[3] = L::fma(acc[3], L::splat(at(i + 3, kk)), bv);
-                }
-                for (r, &av) in acc.iter().enumerate() {
-                    let off = (i + r - lo) * n + j;
-                    // Safety: [off, off + 8) is inside row i + r of C.
-                    unsafe {
-                        let cp = c_rows.as_mut_ptr().add(off);
-                        L::store(cp, L::add(L::load(cp), av));
-                    }
-                }
-                i += 4;
-            }
-            while i < hi {
-                let mut acc = L::zero();
-                for kk in 0..klen {
-                    // Safety: panel row kk is 8 floats.
-                    let bv = unsafe { L::load(panel.as_ptr().add(kk * 8)) };
-                    acc = L::fma(acc, L::splat(at(i, kk)), bv);
-                }
-                let off = (i - lo) * n + j;
-                // Safety: [off, off + 8) is inside row i of C.
-                unsafe {
-                    let cp = c_rows.as_mut_ptr().add(off);
-                    L::store(cp, L::add(L::load(cp), acc));
-                }
-                i += 1;
-            }
+            panel_rows::<L>(
+                a,
+                a_row_stride,
+                a_depth_stride,
+                panel.as_ptr(),
+                kb,
+                klen,
+                lo,
+                hi,
+                j,
+                n,
+                c_rows,
+            );
             j += 8;
         }
         if n8 < n {
-            // column tail: shared scalar code (fused, same order on every
-            // backend)
-            for i in lo..hi {
-                let crow = &mut c_rows[(i - lo) * n..(i - lo) * n + n];
-                for kk in kb..kend {
-                    let av = a[i * a_row_stride + kk * a_depth_stride];
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for jj in n8..n {
-                        crow[jj] = av.mul_add(brow[jj], crow[jj]);
-                    }
-                }
+            scalar_column_tail(
+                a, a_row_stride, a_depth_stride, b, kb, kend, lo, hi, n8,
+                c_rows,
+            );
+        }
+    }
+}
+
+/// Number of `f32`s a shared B pack for [`pack_b_panels`] needs:
+/// `ceil(k / KC)` k-panels x `n8 / 8` j-tiles x a fixed `KC * 8` block.
+pub(crate) fn pack_b_len(k: usize, n: usize) -> usize {
+    let njt = (n - n % 8) / 8;
+    k.div_ceil(KC) * njt * (KC * 8)
+}
+
+/// Pack **all** of B's full 8-column j-tiles into `pack`, one `KC * 8`
+/// block per (k-panel, j-tile) pair at offset
+/// `(kb_idx * njt + jt) * KC * 8` (grow-only buffer, reused across
+/// products). Each block's contents are byte-for-byte what
+/// [`gemm_rows_lanes`] packs into its private stack panel for the same
+/// (k-panel, j-tile) — the packing is a pure relayout, independent of the
+/// consuming backend — so row blocks consuming the shared pack compute
+/// bit-identical results to per-block packing. Tail columns (`n % 8`) are
+/// not packed; they go through [`scalar_column_tail`] reading B directly.
+pub(crate) fn pack_b_panels(b: &Matrix, pack: &mut Vec<f32>) {
+    let (k, n) = (b.rows, b.cols);
+    let n8 = n - n % 8;
+    let njt = n8 / 8;
+    let need = pack_b_len(k, n);
+    if pack.len() < need {
+        pack.resize(need, 0.0);
+    }
+    for (kb_idx, kb) in (0..k).step_by(KC).enumerate() {
+        let kend = (kb + KC).min(k);
+        let klen = kend - kb;
+        for jt in 0..njt {
+            let j = jt * 8;
+            let base = (kb_idx * njt + jt) * (KC * 8);
+            for kk in 0..klen {
+                let src = (kb + kk) * n + j;
+                pack[base + kk * 8..base + kk * 8 + 8]
+                    .copy_from_slice(&b.data[src..src + 8]);
             }
+        }
+    }
+}
+
+/// [`gemm_rows_lanes`] consuming a pre-packed shared B pack (built by
+/// [`pack_b_panels`]) instead of packing its own stack panels — the
+/// pooled `_par` row blocks all read the one per-product pack, so B is
+/// packed once per product instead of once per row block. Identical
+/// microkernel, identical panel bytes => bit-identical results.
+#[inline(always)]
+fn gemm_rows_prepacked_lanes<L: Lane8>(
+    a: &[f32],
+    a_row_stride: usize,
+    a_depth_stride: usize,
+    b: &Matrix,
+    pack: &[f32],
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    let (k, n) = (b.rows, b.cols);
+    debug_assert_eq!(c_rows.len(), (hi - lo) * n);
+    c_rows.fill(0.0);
+    if k == 0 || n == 0 || lo >= hi {
+        return;
+    }
+    let n8 = n - n % 8;
+    let njt = n8 / 8;
+    debug_assert!(pack.len() >= pack_b_len(k, n), "shared pack too small");
+    for (kb_idx, kb) in (0..k).step_by(KC).enumerate() {
+        let kend = (kb + KC).min(k);
+        let klen = kend - kb;
+        let mut j = 0;
+        let mut jt = 0;
+        while j < n8 {
+            let base = (kb_idx * njt + jt) * (KC * 8);
+            debug_assert!(base + klen * 8 <= pack.len());
+            panel_rows::<L>(
+                a,
+                a_row_stride,
+                a_depth_stride,
+                // Safety contract of panel_rows: klen * 8 floats from base
+                // (bounds debug-asserted above, guaranteed by pack_b_len).
+                pack[base..].as_ptr(),
+                kb,
+                klen,
+                lo,
+                hi,
+                j,
+                n,
+                c_rows,
+            );
+            j += 8;
+            jt += 1;
+        }
+        if n8 < n {
+            scalar_column_tail(
+                a, a_row_stride, a_depth_stride, b, kb, kend, lo, hi, n8,
+                c_rows,
+            );
         }
     }
 }
@@ -560,6 +721,21 @@ mod entry_avx2 {
         c_rows: &mut [f32],
     ) {
         super::gemm_rows_lanes::<Avx2>(a, rs, ds, b, lo, hi, c_rows);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_rows_prepacked(
+        a: &[f32],
+        rs: usize,
+        ds: usize,
+        b: &Matrix,
+        pack: &[f32],
+        lo: usize,
+        hi: usize,
+        c_rows: &mut [f32],
+    ) {
+        super::gemm_rows_prepacked_lanes::<Avx2>(a, rs, ds, b, pack, lo, hi, c_rows);
     }
 
     #[target_feature(enable = "avx2,fma")]
@@ -783,6 +959,37 @@ pub(crate) fn matmul_rows_simd(
     c_rows: &mut [f32],
 ) {
     gemm_rows_dispatch(kernel, &a.data, a.cols, 1, b, lo, hi, c_rows);
+}
+
+/// SIMD rows of C = A·B consuming the per-product shared B pack (see
+/// [`pack_b_panels`]); the `_par` row blocks funnel here so B is packed
+/// once per product, not once per row block.
+pub(crate) fn matmul_rows_prepacked_simd(
+    kernel: Kernel,
+    a: &Matrix,
+    b: &Matrix,
+    pack: &[f32],
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: SimdAvx2 only comes out of detect_native().
+        Kernel::SimdAvx2 => unsafe {
+            entry_avx2::gemm_rows_prepacked(
+                &a.data, a.cols, 1, b, pack, lo, hi, c_rows,
+            )
+        },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::SimdNeon => gemm_rows_prepacked_lanes::<neon::Neon>(
+            &a.data, a.cols, 1, b, pack, lo, hi, c_rows,
+        ),
+        _ => gemm_rows_prepacked_lanes::<ScalarLanes>(
+            &a.data, a.cols, 1, b, pack, lo, hi, c_rows,
+        ),
+    }
 }
 
 /// SIMD C = Aᵀ·B (full output; A is m x r walked column-wise via strides).

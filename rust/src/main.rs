@@ -33,7 +33,7 @@ fn usage() -> &'static str {
      \u{20}          [--wrapper galore|fira|full] [--inner adam|adafactor|adam-mini|adam8bit|msgd]\n\
      \u{20}          [--steps N] [--lr F] [--rank R] [--tau T] [--refresh-lookahead L]\n\
      \u{20}          [--workers W] [--dist-workers W] [--bucket-kib K]\n\
-     \u{20}          [--gemm-kernel auto|simd|scalar]\n\
+     \u{20}          [--gemm-kernel auto|simd|scalar] [--param-cache on|off]\n\
      \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
      \u{20}          [--save ckpt.bin]\n\
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
@@ -69,12 +69,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let gemm = sara::linalg::set_kernel(cfg.linalg.kernel);
     let engine = Engine::load(exp::ARTIFACTS, &cfg.model)?;
     println!(
-        "model '{}' ({} params, {} tensors) | method {} | gemm {}",
+        "model '{}' ({} params, {} tensors) | method {} | gemm {} | param-cache {}",
         cfg.model,
         engine.manifest.n_params,
         engine.manifest.params.len(),
         cfg.method_label(),
-        gemm
+        gemm,
+        if cfg.runtime.param_cache { "on" } else { "off" }
     );
     let mut trainer = Trainer::new(engine, cfg.clone())?;
     let result = trainer.train(&mut Probes::default())?;
@@ -166,9 +167,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         ck.ensure_world(cfg.dist.workers)?;
     }
     let mut trainer = Trainer::new(engine, cfg)?;
-    trainer.params = ck.params;
+    let step = ck.step;
+    // restore_params (not a raw field write) so the engine's parameter
+    // cache is invalidated along with the swap
+    trainer.restore_params(ck.params);
     let vl = trainer.validate()?;
-    println!("checkpoint step {} | val loss {vl:.4} | PPL {:.3}", ck.step, vl.exp());
+    println!("checkpoint step {step} | val loss {vl:.4} | PPL {:.3}", vl.exp());
     Ok(())
 }
 

@@ -166,7 +166,13 @@ impl LowRankState {
 
     /// One optimizer step writing the weight delta into `out` (the caller
     /// does `W -= out`). Allocation-free on non-refresh steps.
-    pub fn step_into(&mut self, g: &Matrix, lr: f32, out: &mut Matrix) {
+    ///
+    /// Returns whether the step *touched* its parameter (wrote a
+    /// potentially nonzero delta) — the dirty-upload mark the trainer
+    /// forwards to the engine's parameter cache. The low-rank pipeline
+    /// always does; `false` is reserved for future update-skipping
+    /// optimizers (accumulation, frozen layers).
+    pub fn step_into(&mut self, g: &Matrix, lr: f32, out: &mut Matrix) -> bool {
         assert_eq!(
             (g.rows, g.cols),
             (self.rows, self.cols),
@@ -267,6 +273,7 @@ impl LowRankState {
             let job = self.selector.begin_refresh(snap, rank);
             self.pending = Some(PendingRefresh::Scheduled(job));
         }
+        true
     }
 
     /// A refresh scheduled by the step that just ran, if any. The trainer
@@ -342,13 +349,16 @@ impl ParamOptimizer {
     }
 
     /// One step writing the delta (to subtract from the weights) into
-    /// `out`. Allocation-free in steady state for both variants.
-    pub fn step_into(&mut self, g: &Matrix, lr: f32, out: &mut Matrix) {
+    /// `out`. Allocation-free in steady state for both variants. Returns
+    /// whether the parameter was touched (see
+    /// [`LowRankState::step_into`]); both current variants always are.
+    pub fn step_into(&mut self, g: &Matrix, lr: f32, out: &mut Matrix) -> bool {
         match self {
             ParamOptimizer::Full { state, t } => {
                 *t += 1;
                 state.direction_into(g, *t, out);
                 out.scale(lr);
+                true
             }
             ParamOptimizer::LowRank(lr_state) => lr_state.step_into(g, lr, out),
         }

@@ -6,15 +6,59 @@
 //! `PjRtClient::compile` -> `execute`. Text is the interchange format
 //! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids
 //! in serialized protos.
+//!
+//! ## Upload/download caching contract (`param_store`)
+//!
+//! The engine's execute boundary used to be the last allocating hot path:
+//! every step re-serialized all parameters host→literal and re-allocated
+//! every download literal. With the [`ParamStore`] cache enabled (the
+//! trainer's default; `[runtime] param_cache = off` / `--param-cache off`
+//! is the escape hatch), the engine instead keeps
+//!
+//! * one persistent literal per parameter + the tokens literal, rewriting
+//!   **only dirty parameters in place** per step (the trainer marks what
+//!   its optimizer pass touched via [`Engine::mark_param_dirty`]); eval
+//!   steps dirty nothing and upload only tokens;
+//! * one reusable output literal per executable, rewritten in place and
+//!   read through a borrowing tuple view, with output shapes validated
+//!   once at first call instead of per step.
+//!
+//! Caching reorders no arithmetic, so results are bit-identical with the
+//! cache on or off. The vendored xla stub backs literals with host
+//! buffers; when the real crate is swapped in it must satisfy the same
+//! surface, which is deliberately small:
+//!
+//! * `Literal::copy_from_host(&mut self, &[T])` — in-place payload
+//!   rewrite (no realloc, same backing buffer);
+//! * `Literal::write_from(&mut self, &Literal)` — in-place
+//!   literal-to-literal write, tuples recursing elementwise;
+//! * `PjRtBuffer::to_literal_sync_into(&self, &mut Literal)` — download
+//!   into a preallocated literal;
+//! * `Literal::as_tuple(&self) -> &[Literal]` — borrow tuple elements
+//!   without consuming the tuple.
+//!
+//! Follow-up for the real backend: donate the cached literals as true
+//! device buffers (`PjRtBuffer` donation) so clean parameters skip the
+//! host→device DMA too, not just the host-side serialization.
+//!
+//! Staleness is handled structurally, not heuristically: `Engine::load`
+//! starts with the cache **disabled** (raw engine users keep legacy
+//! semantics), `Trainer::new` enables it per config and always starts from
+//! an invalidated store, `Trainer::restore_params` invalidates after a
+//! checkpoint restore, and `Trainer::into_engine` disables the cache
+//! again. See `param_store`'s module docs.
 
 pub mod manifest;
+pub mod param_store;
 pub mod tensor;
 
 pub use manifest::{Manifest, ParamInfo, ParamKind};
+pub use param_store::{ExeKind, ParamCacheStats, ParamStore};
 pub use tensor::{tokens_to_literal, Tensor};
 
 use crate::rng::{fold_seed, Pcg64};
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::path::{Path, PathBuf};
 
 /// A loaded model: compiled train/eval executables + manifest.
@@ -26,6 +70,9 @@ pub struct Engine {
     /// Wallclock spent inside PJRT execute (perf accounting).
     pub execute_secs: std::cell::Cell<f64>,
     pub execute_calls: std::cell::Cell<u64>,
+    /// Device-resident parameter cache (disabled until a trainer enables
+    /// it — see the module docs' staleness discipline).
+    store: RefCell<ParamStore>,
 }
 
 fn compile(
@@ -62,6 +109,7 @@ impl Engine {
         );
         let train_exe = compile(&client, &dir.join(format!("{model}.train.hlo.txt")))?;
         let eval_exe = compile(&client, &dir.join(format!("{model}.eval.hlo.txt")))?;
+        let store = RefCell::new(ParamStore::new(manifest.params.len()));
         Ok(Self {
             client,
             train_exe,
@@ -69,6 +117,7 @@ impl Engine {
             manifest,
             execute_secs: std::cell::Cell::new(0.0),
             execute_calls: std::cell::Cell::new(0),
+            store,
         })
     }
 
@@ -94,12 +143,88 @@ impl Engine {
             .collect()
     }
 
-    fn execute(
+    /// Enable/disable the parameter cache. Either direction drops all
+    /// cached literals (a fresh enable always starts from a full build),
+    /// so stale data cannot survive a toggle.
+    pub fn set_param_cache(&self, on: bool) {
+        self.store.borrow_mut().set_enabled(on);
+    }
+
+    pub fn param_cache_enabled(&self) -> bool {
+        self.store.borrow().enabled()
+    }
+
+    /// Mark parameter `i` as mutated since the last execute; the next
+    /// upload rewrites only marked literals in place. The trainer calls
+    /// this for exactly the parameters its optimizer pass touched.
+    pub fn mark_param_dirty(&self, i: usize) {
+        self.store.borrow_mut().mark_dirty(i);
+    }
+
+    /// Drop all cached parameter literals (next execute rebuilds). For
+    /// wholesale parameter replacement — checkpoint restore, fresh
+    /// `init_params` — where per-index dirty marks cannot be trusted.
+    pub fn invalidate_param_cache(&self) {
+        self.store.borrow_mut().invalidate();
+    }
+
+    /// Upload-side cache counters (bytes written, rewrites vs skips).
+    pub fn param_cache_stats(&self) -> ParamCacheStats {
+        self.store.borrow().stats()
+    }
+
+    /// Validate an execute result's output arity and per-output element
+    /// counts against the manifest. On the cached path this runs **once**
+    /// per executable (then leaves the hot loop); the uncached path keeps
+    /// the legacy per-call check.
+    fn check_outputs(&self, kind: ExeKind, outs: &[xla::Literal]) -> Result<()> {
+        match kind {
+            ExeKind::Train => {
+                let expected = 1 + self.manifest.params.len();
+                if outs.len() != expected {
+                    bail!(
+                        "train artifact returned {} outputs, expected {}",
+                        outs.len(),
+                        expected
+                    );
+                }
+            }
+            ExeKind::Eval => {
+                if outs.is_empty() {
+                    bail!("eval artifact returned no outputs");
+                }
+            }
+        }
+        let loss_elems: i64 = outs[0].dims().iter().product();
+        if loss_elems != 1 {
+            bail!("output 0 (loss) has {loss_elems} elements, expected a scalar");
+        }
+        if kind == ExeKind::Train {
+            for (lit, info) in outs[1..].iter().zip(&self.manifest.params) {
+                let n: i64 = lit.dims().iter().product();
+                if n as usize != info.shape.iter().product::<usize>() {
+                    bail!(
+                        "gradient output for {} has {} elements, expected shape {:?}",
+                        info.name,
+                        n,
+                        info.shape
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload (cached or legacy), execute, download (cached or legacy),
+    /// validate, and hand the output tuple's elements to `read`. The one
+    /// funnel both executables go through — the cache lives entirely here.
+    fn execute_with<R>(
         &self,
-        exe: &xla::PjRtLoadedExecutable,
+        kind: ExeKind,
         params: &[Tensor],
         tokens: &[i32],
-    ) -> Result<Vec<xla::Literal>> {
+        read: impl FnOnce(&[xla::Literal]) -> Result<R>,
+    ) -> Result<R> {
         if params.len() != self.manifest.params.len() {
             bail!(
                 "expected {} params, got {}",
@@ -107,20 +232,54 @@ impl Engine {
                 params.len()
             );
         }
-        let mut literals = Vec::with_capacity(params.len() + 1);
         for (t, info) in params.iter().zip(&self.manifest.params) {
             debug_assert_eq!(t.shape, info.shape, "param {} shape", info.name);
-            literals.push(t.to_literal()?);
         }
-        literals.push(tokens_to_literal(tokens, &self.manifest.tokens_shape)?);
-        let t0 = std::time::Instant::now();
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let out = result[0][0].to_literal_sync()?;
-        self.execute_secs
-            .set(self.execute_secs.get() + t0.elapsed().as_secs_f64());
-        self.execute_calls.set(self.execute_calls.get() + 1);
-        // aot.py lowers with return_tuple=True
-        Ok(out.to_tuple()?)
+        let exe = match kind {
+            ExeKind::Train => &self.train_exe,
+            ExeKind::Eval => &self.eval_exe,
+        };
+        let mut store = self.store.borrow_mut();
+        if store.enabled() {
+            // cached path: dirty-tracked in-place uploads, reusable
+            // output literal, one-time shape validation
+            let lits = store.prepare(params, tokens, &self.manifest.tokens_shape)?;
+            let t0 = std::time::Instant::now();
+            let result = exe.execute::<xla::Literal>(lits)?;
+            let need_check = !store.outputs_validated(kind);
+            let tup = store.download_into(kind, &result[0][0])?;
+            self.execute_secs
+                .set(self.execute_secs.get() + t0.elapsed().as_secs_f64());
+            self.execute_calls.set(self.execute_calls.get() + 1);
+            let outs = tup.as_tuple()?;
+            if need_check {
+                self.check_outputs(kind, outs)?;
+            }
+            let r = read(outs)?;
+            if need_check {
+                store.set_outputs_validated(kind);
+            }
+            Ok(r)
+        } else {
+            // legacy path: fresh literals per step (the `param_cache = off`
+            // escape hatch and the raw-engine default)
+            drop(store);
+            let mut literals = Vec::with_capacity(params.len() + 1);
+            for t in params {
+                literals.push(t.to_literal()?);
+            }
+            literals.push(tokens_to_literal(tokens, &self.manifest.tokens_shape)?);
+            let t0 = std::time::Instant::now();
+            let result = exe.execute::<xla::Literal>(&literals)?;
+            let out = result[0][0].to_literal_sync()?;
+            self.execute_secs
+                .set(self.execute_secs.get() + t0.elapsed().as_secs_f64());
+            self.execute_calls.set(self.execute_calls.get() + 1);
+            // aot.py lowers with return_tuple=True
+            let outs = out.to_tuple()?;
+            self.check_outputs(kind, &outs)?;
+            read(&outs)
+        }
     }
 
     /// One fwd+bwd step: returns (loss, per-parameter gradients).
@@ -139,55 +298,60 @@ impl Engine {
     /// manifest-shaped tensors; on every later call the same buffers are
     /// rewritten in place, so steady-state steps reuse the per-step
     /// gradient memory instead of reallocating it (ROADMAP
-    /// "Gradient-buffer reuse").
+    /// "Gradient-buffer reuse"). With the parameter cache enabled the
+    /// upload side is in-place too, making the whole call allocation-free
+    /// in steady state.
     pub fn train_step_into(
         &self,
         params: &[Tensor],
         tokens: &[i32],
         grads: &mut Vec<Tensor>,
     ) -> Result<f32> {
-        let outs = self.execute(&self.train_exe, params, tokens)?;
-        if outs.len() != 1 + params.len() {
-            bail!(
-                "train artifact returned {} outputs, expected {}",
-                outs.len(),
-                1 + params.len()
-            );
-        }
-        let loss = outs[0].to_vec::<f32>()?[0];
-        if grads.is_empty() {
-            // bootstrap directly from the literals (no zero-fill pass;
-            // subsequent calls rewrite these buffers in place). A mid-way
-            // failure must not leave a partial set behind — a later retry
-            // would bail on the count mismatch and mask the real cause.
-            for (lit, info) in outs[1..].iter().zip(&self.manifest.params) {
-                match Tensor::from_literal(lit, &info.shape) {
-                    Ok(t) => grads.push(t),
-                    Err(e) => {
-                        grads.clear();
-                        return Err(e);
+        let manifest = &self.manifest;
+        self.execute_with(ExeKind::Train, params, tokens, |outs| {
+            let mut loss = [0.0f32; 1];
+            outs[0].read_into(&mut loss)?;
+            let loss = loss[0];
+            if grads.is_empty() {
+                // bootstrap directly from the literals (no zero-fill pass;
+                // subsequent calls rewrite these buffers in place). A
+                // mid-way failure must not leave a partial set behind — a
+                // later retry would bail on the count mismatch and mask
+                // the real cause.
+                for (lit, info) in outs[1..].iter().zip(&manifest.params) {
+                    match Tensor::from_literal(lit, &info.shape) {
+                        Ok(t) => grads.push(t),
+                        Err(e) => {
+                            grads.clear();
+                            return Err(e);
+                        }
                     }
                 }
+                return Ok(loss);
             }
-            return Ok(loss);
-        }
-        if grads.len() != self.manifest.params.len() {
-            bail!(
-                "gradient buffer set has {} tensors, expected {}",
-                grads.len(),
-                self.manifest.params.len()
-            );
-        }
-        for (g, lit) in grads.iter_mut().zip(&outs[1..]) {
-            g.fill_from_literal(lit)?;
-        }
-        Ok(loss)
+            if grads.len() != manifest.params.len() {
+                bail!(
+                    "gradient buffer set has {} tensors, expected {}",
+                    grads.len(),
+                    manifest.params.len()
+                );
+            }
+            for (g, lit) in grads.iter_mut().zip(&outs[1..]) {
+                g.fill_from_literal(lit)?;
+            }
+            Ok(loss)
+        })
     }
 
-    /// Loss-only evaluation step.
+    /// Loss-only evaluation step. Eval mutates nothing, so with the cache
+    /// enabled the upload is tokens-only — the full parameter re-upload it
+    /// used to pay per batch is gone.
     pub fn eval_loss(&self, params: &[Tensor], tokens: &[i32]) -> Result<f32> {
-        let outs = self.execute(&self.eval_exe, params, tokens)?;
-        Ok(outs[0].to_vec::<f32>()?[0])
+        self.execute_with(ExeKind::Eval, params, tokens, |outs| {
+            let mut loss = [0.0f32; 1];
+            outs[0].read_into(&mut loss)?;
+            Ok(loss[0])
+        })
     }
 
     /// Tokens per train batch (batch * (seq_len + 1)).

@@ -25,6 +25,14 @@
 //! discipline inside [`crate::optim::LowRankState`], a steady-state
 //! optimizer pass performs no heap allocation.
 //!
+//! The engine boundary is cached too: `Trainer::new` enables the engine's
+//! device-resident parameter cache (`[runtime] param_cache`, default on),
+//! the optimizer pass records which parameters it touched
+//! ([`parallel_optimizer_step_marked`]), and the apply loop forwards those
+//! as dirty marks so `Engine::execute` rewrites only updated literals in
+//! place — see [`crate::runtime::param_store`]. Checkpoint restores go
+//! through [`Trainer::restore_params`], which invalidates the cache.
+//!
 //! ## Pipelined subspace refresh
 //!
 //! With `refresh_lookahead = L >= 1`, the last per-step stall — the
@@ -89,6 +97,12 @@ pub struct Probes {
 pub struct Trainer {
     pub engine: Engine,
     pub cfg: RunConfig,
+    /// Model weights. CAUTION: with the engine's parameter cache enabled,
+    /// mutating these through the public field bypasses the dirty-marking
+    /// discipline the cache depends on — replace them via
+    /// [`Trainer::restore_params`], or follow any out-of-band write with
+    /// `engine.mark_param_dirty(i)` / `engine.invalidate_param_cache()`.
+    /// (Reading them is always safe.)
     pub params: Vec<Tensor>,
     /// Optimizer states, partitioned across the dist topology's ranks
     /// (ZeRO-1 ownership; world 1 = the classic replicated layout).
@@ -110,6 +124,9 @@ pub struct Trainer {
     reduce_calls: u64,
     /// Per-parameter delta workspaces, reused every step.
     deltas: Vec<Matrix>,
+    /// Which parameters the most recent optimizer pass touched — the dirty
+    /// marks forwarded to the engine's parameter cache after the apply.
+    touched: Vec<bool>,
     /// Pre-clip global gradient norm of the most recent step.
     last_grad_norm: f64,
     step: usize,
@@ -171,6 +188,13 @@ impl Trainer {
             BucketedAllReduce::new(world, &sizes, cfg.dist.bucket_kib);
         let reduced =
             man.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let n_params = man.params.len();
+        // device-resident parameter cache: enabled per config (default on;
+        // `--param-cache off` is the escape hatch — results are
+        // bit-identical either way). set_param_cache drops any literals a
+        // previous trainer left behind on a reused engine, so this
+        // trainer's fresh init_params can never be shadowed by stale ones.
+        engine.set_param_cache(cfg.runtime.param_cache);
         Ok(Self {
             engine,
             cfg,
@@ -186,6 +210,7 @@ impl Trainer {
             reduce_nanos: 0,
             reduce_calls: 0,
             deltas,
+            touched: vec![true; n_params],
             last_grad_norm: 0.0,
             step: 0,
         })
@@ -227,23 +252,38 @@ impl Trainer {
 
         // per-parameter optimizer updates on the persistent pool, applied
         // by each parameter's owning rank (ZeRO-1 sharding; the shared
-        // deltas array is the simulated all-gather)
-        self.sharded.step_into(
+        // deltas array is the simulated all-gather), recording which
+        // parameters the pass touched
+        self.sharded.step_into_marked(
             &self.pool,
             &mut self.reduced,
             lr,
             &mut self.deltas,
+            &mut self.touched,
         );
         // refreshes due `refresh_lookahead` steps from now were scheduled
         // during the pass; the owning rank launches them on the pool's
         // background lane so their SVDs overlap with the next step's
         // engine.train_step
         self.sharded.launch_owned_refreshes(&self.pool);
-        for (p, d) in self.params.iter_mut().zip(&self.deltas) {
+        for (i, (p, d)) in
+            self.params.iter_mut().zip(&self.deltas).enumerate()
+        {
+            // apply and dirty-mark are gated on the same touched flag: an
+            // untouched parameter (a future update-skipping optimizer may
+            // leave a stale delta workspace behind) must neither change
+            // the weights nor skip its re-upload — keeping "untouched =>
+            // weights unchanged => cached literal valid" a single fact
+            if !self.touched[i] {
+                continue;
+            }
             debug_assert_eq!(p.data.len(), d.data.len());
             for (w, &u) in p.data.iter_mut().zip(&d.data) {
                 *w -= u;
             }
+            // the all-gather apply just changed this weight on every rank:
+            // mark it so the next upload rewrites exactly these literals
+            self.engine.mark_param_dirty(i);
         }
         self.step += 1;
         Ok(loss)
@@ -276,6 +316,9 @@ impl Trainer {
                 .sharded
                 .allgather_bytes_per_step(sizes),
             projector_bcast_bytes: self.sharded.projector_broadcast_bytes(),
+            per_rank_upload_bytes: self
+                .sharded
+                .per_rank_upload_bytes(sizes, &self.touched),
         }
     }
 
@@ -300,10 +343,25 @@ impl Trainer {
         self.step
     }
 
+    /// Replace the trainer's parameters wholesale (checkpoint restore),
+    /// invalidating the engine's parameter cache so stale literals cannot
+    /// survive the swap. Prefer this over assigning the `params` field
+    /// directly; out-of-band field mutation must be followed by
+    /// `engine.invalidate_param_cache()` or per-index dirty marks.
+    pub fn restore_params(&mut self, params: Vec<Tensor>) {
+        self.params = params;
+        self.engine.invalidate_param_cache();
+    }
+
     /// Recover the engine (compiled executables) for reuse by the next run
-    /// in a sweep — avoids recompiling the HLO per table row.
+    /// in a sweep — avoids recompiling the HLO per table row. The
+    /// parameter cache is disabled on the way out: a raw engine has no one
+    /// maintaining dirty marks, so it reverts to uncached legacy
+    /// semantics (the next `Trainer::new` re-enables per its config).
     pub fn into_engine(self) -> Engine {
-        self.engine
+        let engine = self.engine;
+        engine.set_param_cache(false);
+        engine
     }
 
     /// Current optimizer-state footprint in bytes (memory table): the
@@ -436,9 +494,28 @@ pub fn parallel_optimizer_step_into(
     lr: f32,
     deltas: &mut [Matrix],
 ) {
+    parallel_optimizer_step_marked(pool, opts, grads, lr, deltas, &mut []);
+}
+
+/// [`parallel_optimizer_step_into`] that additionally records which
+/// parameters the pass *touched* (`touched[i]` = [`ParamOptimizer::step_into`]
+/// reported a potentially nonzero delta). The trainer forwards these marks
+/// to the engine's parameter cache so only updated parameters are
+/// re-uploaded. Pass an empty slice to skip tracking; otherwise the mask
+/// must have one slot per optimizer.
+pub fn parallel_optimizer_step_marked(
+    pool: &WorkerPool,
+    opts: &mut [ParamOptimizer],
+    grads: &mut [Tensor],
+    lr: f32,
+    deltas: &mut [Matrix],
+    touched: &mut [bool],
+) {
     let n = opts.len();
     assert_eq!(grads.len(), n, "one gradient per optimizer");
     assert_eq!(deltas.len(), n, "one delta workspace per optimizer");
+    let track = !touched.is_empty();
+    assert!(!track || touched.len() == n, "touched mask length");
 
     // Base pointers shared across the pool (SendPtr carries the safety
     // contract); each queue index touches only its own element, so access
@@ -446,9 +523,11 @@ pub fn parallel_optimizer_step_into(
     let opts_ptr = SendPtr(opts.as_mut_ptr());
     let grads_ptr = SendPtr(grads.as_mut_ptr());
     let deltas_ptr = SendPtr(deltas.as_mut_ptr());
+    let touched_ptr = SendPtr(touched.as_mut_ptr());
     pool.run_indexed(n, |i| {
         // Safety: index i is claimed by exactly one executor (pool work
-        // queue), and i < n == length of all three slices.
+        // queue), and i < n == length of all slices (touched only when
+        // tracking).
         let (opt, grad, out) = unsafe {
             (
                 &mut *opts_ptr.add(i),
@@ -460,8 +539,12 @@ pub fn parallel_optimizer_step_into(
         // borrow the gradient buffer as a matrix (no copy)
         let data = std::mem::take(&mut grad.data);
         let g = Matrix::from_vec(rows, cols, data);
-        opt.step_into(&g, lr, out);
+        let hit = opt.step_into(&g, lr, out);
         grad.data = g.data;
+        if track {
+            // Safety: i < n == touched.len() when tracking; disjoint per i.
+            unsafe { *touched_ptr.add(i) = hit };
+        }
     });
 }
 

@@ -17,7 +17,7 @@ use sara::dist::{BucketedAllReduce, ShardedState, Topology};
 use sara::linalg::Matrix;
 use sara::optim::ParamOptimizer;
 use sara::rng::Pcg64;
-use sara::runtime::Tensor;
+use sara::runtime::{ParamStore, Tensor};
 use sara::selector::make_selector;
 use sara::train::{
     clip_gradients, launch_scheduled_refreshes, parallel_optimizer_step_into,
@@ -187,6 +187,83 @@ fn dist_two_worker_run_is_deterministic() {
     let c = run_dist_pipeline(2, 12, 7, 64, false);
     for (p, (x, y)) in a.iter().zip(&c).enumerate() {
         assert_eq!(x.data, y.data, "param {p}: bucket size changed results");
+    }
+}
+
+/// Acceptance criterion: with the parameter cache **on**, the literal set
+/// the engine would upload each step is **bit-identical** to the cache-off
+/// (fresh construction) path, at dist workers 1 and 2 — driven through the
+/// full dist step pipeline with trainer-style dirty marking after every
+/// apply. The cache moves memory, never arithmetic: identical uploads =>
+/// identical device inputs => identical trajectories.
+#[test]
+fn param_cache_uploads_bit_identical_to_uncached_at_w1_and_w2() {
+    const TOKENS_SHAPE: [usize; 2] = [2, 5];
+    for world in [1usize, 2] {
+        let pool = WorkerPool::new(3);
+        let mut cfg = OptimConfig::default();
+        cfg.wrapper = WrapperKind::GaLore;
+        cfg.selector = SelectorKind::Sara;
+        cfg.rank = 4;
+        cfg.update_period = 3;
+        let opts = make_opts(&cfg, 11);
+        let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+        let mut sharded = ShardedState::new(opts, Topology::new(world, &weights));
+        let mut reducer = BucketedAllReduce::new(world, &sizes(), 1);
+        let mut reduced = zeros_params();
+        let mut deltas = zeros_deltas();
+        let mut params = zeros_params();
+        let mut touched = vec![false; SHAPES.len()];
+        let mut store = ParamStore::new(SHAPES.len());
+        store.set_enabled(true);
+
+        for t in 0..8u64 {
+            // per-step token batch, exercising the in-place token rewrite
+            let tokens: Vec<i32> =
+                (0..10).map(|i| (i as u64 + 13 * t) as i32).collect();
+            // the upload the engine would hand to execute this step
+            let lits = store.prepare(&params, &tokens, &TOKENS_SHAPE).unwrap();
+            // cache-off reference: fresh literal per tensor, every step
+            for (p, (lit, tensor)) in lits[..SHAPES.len()]
+                .iter()
+                .zip(&params)
+                .enumerate()
+            {
+                let fresh = tensor.to_literal().unwrap();
+                assert_eq!(
+                    lit.to_vec::<f32>().unwrap(),
+                    fresh.to_vec::<f32>().unwrap(),
+                    "W={world} step {t} param {p}: cached upload != uncached"
+                );
+                assert_eq!(lit.dims(), fresh.dims());
+            }
+            assert_eq!(
+                lits[SHAPES.len()].to_vec::<i32>().unwrap(),
+                tokens,
+                "W={world} step {t}: tokens literal stale"
+            );
+
+            // the rest of the step, exactly as Trainer::step_once runs it
+            let workers: Vec<Vec<Tensor>> =
+                (0..world as u64).map(|w| synth_grads(5, t, w)).collect();
+            reducer.average_into(&pool, &workers, &mut reduced);
+            clip_gradients(1.0, &mut reduced);
+            sharded.step_into_marked(
+                &pool, &mut reduced, 0.05, &mut deltas, &mut touched,
+            );
+            sharded.launch_owned_refreshes(&pool);
+            apply(&mut params, &deltas);
+            for (i, &hit) in touched.iter().enumerate() {
+                if hit {
+                    store.mark_dirty(i);
+                }
+            }
+        }
+        // the cache genuinely exercised its delta path: exactly one full
+        // build, then in-place rewrites only
+        let stats = store.stats();
+        assert_eq!(stats.full_builds, 1, "W={world}");
+        assert!(stats.param_rewrites > 0, "W={world}");
     }
 }
 

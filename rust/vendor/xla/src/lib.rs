@@ -56,6 +56,8 @@ pub trait NativeType: Sized + Clone {
     fn unwrap(d: &Data) -> Result<Vec<Self>>;
     #[doc(hidden)]
     fn view(d: &Data) -> Result<&[Self]>;
+    #[doc(hidden)]
+    fn view_mut(d: &mut Data) -> Result<&mut [Self]>;
 }
 
 impl NativeType for f32 {
@@ -69,6 +71,12 @@ impl NativeType for f32 {
         }
     }
     fn view(d: &Data) -> Result<&[Self]> {
+        match d {
+            Data::F32(v) => Ok(v),
+            other => Err(Error::new(format!("literal is not f32: {other:?}"))),
+        }
+    }
+    fn view_mut(d: &mut Data) -> Result<&mut [Self]> {
         match d {
             Data::F32(v) => Ok(v),
             other => Err(Error::new(format!("literal is not f32: {other:?}"))),
@@ -92,6 +100,12 @@ impl NativeType for i32 {
             other => Err(Error::new(format!("literal is not i32: {other:?}"))),
         }
     }
+    fn view_mut(d: &mut Data) -> Result<&mut [Self]> {
+        match d {
+            Data::I32(v) => Ok(v),
+            other => Err(Error::new(format!("literal is not i32: {other:?}"))),
+        }
+    }
 }
 
 /// Host-side tensor value. Functional in the stub (it is plain data).
@@ -105,6 +119,13 @@ impl Literal {
     /// 1-D literal from a host slice.
     pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
         Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Tuple literal from element literals (the shape `execute` results come
+    /// back in when the computation was lowered with `return_tuple=True`).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal { data: Data::Tuple(elems), dims: vec![n] }
     }
 
     fn elem_count(&self) -> usize {
@@ -149,9 +170,73 @@ impl Literal {
         Ok(())
     }
 
+    /// Rewrite this literal's payload **in place** from a host slice (type
+    /// and element count must match). The delta-upload surface of the
+    /// runtime's parameter cache: unlike rebuilding via [`Literal::vec1`] +
+    /// [`Literal::reshape`], no allocation happens and the literal's
+    /// identity (and, with the real crate, its backing device buffer) is
+    /// preserved across steps. The real xla crate must provide the
+    /// equivalent in-place write when swapped in.
+    pub fn copy_from_host<T: NativeType + Copy>(&mut self, src: &[T]) -> Result<()> {
+        let dst = T::view_mut(&mut self.data)?;
+        if dst.len() != src.len() {
+            return Err(Error::new(format!(
+                "copy_from_host: literal has {} elements, source has {}",
+                dst.len(),
+                src.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Rewrite this literal's payload in place from another literal of the
+    /// same shape and element type (tuples recurse elementwise). The
+    /// literal-to-literal counterpart of [`Literal::copy_from_host`], and
+    /// the host-side contract behind [`PjRtBuffer::to_literal_sync_into`].
+    pub fn write_from(&mut self, src: &Literal) -> Result<()> {
+        if self.dims != src.dims {
+            return Err(Error::new(format!(
+                "write_from: shape mismatch {:?} vs {:?}",
+                self.dims, src.dims
+            )));
+        }
+        match (&mut self.data, &src.data) {
+            (Data::F32(a), Data::F32(b)) if a.len() == b.len() => {
+                a.copy_from_slice(b);
+                Ok(())
+            }
+            (Data::I32(a), Data::I32(b)) if a.len() == b.len() => {
+                a.copy_from_slice(b);
+                Ok(())
+            }
+            (Data::Tuple(a), Data::Tuple(b)) if a.len() == b.len() => {
+                for (x, y) in a.iter_mut().zip(b) {
+                    x.write_from(y)?;
+                }
+                Ok(())
+            }
+            (a, b) => Err(Error::new(format!(
+                "write_from: incompatible payloads {a:?} vs {b:?}"
+            ))),
+        }
+    }
+
     /// Decompose a tuple literal into its elements.
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
         match self.data {
+            Data::Tuple(v) => Ok(v),
+            other => Err(Error::new(format!("literal is not a tuple: {other:?}"))),
+        }
+    }
+
+    /// Borrow a tuple literal's elements without consuming it — the
+    /// reusable-output path: one persistent tuple literal is rewritten in
+    /// place per step ([`PjRtBuffer::to_literal_sync_into`]) and its
+    /// elements read through this view, so downloads allocate nothing in
+    /// steady state.
+    pub fn as_tuple(&self) -> Result<&[Literal]> {
+        match &self.data {
             Data::Tuple(v) => Ok(v),
             other => Err(Error::new(format!("literal is not a tuple: {other:?}"))),
         }
@@ -224,6 +309,15 @@ impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
     }
+
+    /// Download into an existing literal **in place** (shape/type must
+    /// match what [`PjRtBuffer::to_literal_sync`] would have produced) —
+    /// the no-alloc download the runtime's output cache relies on. The
+    /// real crate must satisfy this contract when swapped in (e.g. via
+    /// `copy_raw_to_host` / a preallocated literal transfer).
+    pub fn to_literal_sync_into(&self, _out: &mut Literal) -> Result<()> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync_into"))
+    }
 }
 
 #[cfg(test)]
@@ -261,5 +355,44 @@ mod tests {
         let e = PjRtClient::cpu().err().unwrap();
         assert!(e.to_string().contains("stub"));
         assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn copy_from_host_rewrites_in_place() {
+        let mut l = Literal::vec1(&[0.0f32; 4]).reshape(&[2, 2]).unwrap();
+        l.copy_from_host(&[1.0f32, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[2, 2], "shape survives the rewrite");
+        // length and type mismatches are clean errors, not silent resizes
+        assert!(l.copy_from_host(&[1.0f32; 3]).is_err());
+        assert!(l.copy_from_host(&[1i32; 4]).is_err());
+    }
+
+    #[test]
+    fn write_from_matches_shapes_and_recurses_tuples() {
+        let src = Literal::vec1(&[5.0f32, 6.0]);
+        let mut dst = Literal::vec1(&[0.0f32, 0.0]);
+        dst.write_from(&src).unwrap();
+        assert_eq!(dst.to_vec::<f32>().unwrap(), vec![5.0, 6.0]);
+        let mut wrong = Literal::vec1(&[0.0f32; 3]);
+        assert!(wrong.write_from(&src).is_err());
+
+        let src_t =
+            Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[7i32, 8])]);
+        let mut dst_t =
+            Literal::tuple(vec![Literal::vec1(&[0.0f32]), Literal::vec1(&[0i32, 0])]);
+        dst_t.write_from(&src_t).unwrap();
+        let elems = dst_t.as_tuple().unwrap();
+        assert_eq!(elems[0].to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(elems[1].to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn as_tuple_borrows_without_consuming() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2.0f32])]);
+        assert_eq!(t.as_tuple().unwrap().len(), 2);
+        // still usable afterwards (to_tuple would have consumed it)
+        assert_eq!(t.as_tuple().unwrap()[1].to_vec::<f32>().unwrap(), vec![2.0]);
+        assert!(Literal::vec1(&[1.0f32]).as_tuple().is_err());
     }
 }

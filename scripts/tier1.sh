@@ -35,8 +35,25 @@ echo "== dist smoke: 2-worker bucketed-reduce + sharded-state path =="
 # `cargo test -q` above (tests/integration_dist.rs); this block adds the
 # end-to-end 2-worker Trainer run when PJRT artifacts are available
 if [ -f rust/artifacts/test.train.hlo.txt ]; then
+  # run the smoke twice — param cache on (default) and off — and pin that
+  # the trajectories are bit-identical (caching moves memory, never
+  # arithmetic); the loaders are seed-deterministic so the final line of
+  # two equivalent runs matches exactly
   (cd rust && cargo run --release --quiet -- train \
-     --config "$REPO_ROOT/configs/dist-smoke.toml")
+     --config "$REPO_ROOT/configs/dist-smoke.toml" \
+     | tee /tmp/sara_dist_smoke_cache_on.log)
+  (cd rust && cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/dist-smoke.toml" --param-cache off \
+     | tee /tmp/sara_dist_smoke_cache_off.log)
+  on_final=$(grep '^final:' /tmp/sara_dist_smoke_cache_on.log || true)
+  off_final=$(grep '^final:' /tmp/sara_dist_smoke_cache_off.log || true)
+  if [ -z "$on_final" ] || [ "$on_final" != "$off_final" ]; then
+    echo "FAIL: param-cache on/off dist-smoke trajectories diverged"
+    echo "  on:  $on_final"
+    echo "  off: $off_final"
+    exit 1
+  fi
+  echo "param-cache on/off equivalence OK: $on_final"
 else
   echo "(no PJRT artifacts; skipped the end-to-end 2-worker train run)"
 fi
@@ -51,6 +68,8 @@ echo "== perf smoke: hotpath + allreduce benches (fast mode) =="
     cargo bench --bench allreduce
   SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_gemm.json" \
     cargo bench --bench gemm
+  SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_engine.json" \
+    cargo bench --bench engine
 )
 
 echo
@@ -78,6 +97,7 @@ diff_against_baseline() {
 diff_against_baseline "$REPO_ROOT/BENCH_hotpath.json" "$REPO_ROOT/BENCH_baseline.json"
 diff_against_baseline "$REPO_ROOT/BENCH_allreduce.json" "$REPO_ROOT/BENCH_allreduce_baseline.json"
 diff_against_baseline "$REPO_ROOT/BENCH_gemm.json" "$REPO_ROOT/BENCH_gemm_baseline.json"
+diff_against_baseline "$REPO_ROOT/BENCH_engine.json" "$REPO_ROOT/BENCH_engine_baseline.json"
 
 echo
 echo "tier-1 OK; perf trajectories at $REPO_ROOT/BENCH_hotpath.json and $REPO_ROOT/BENCH_allreduce.json"

@@ -154,11 +154,12 @@ fn main() {
                     samples.push(dt);
                 }
                 if let Some(job) = opt.take_scheduled_refresh() {
+                    let retry = job.clone();
                     let handle = pool.spawn_background(move || job.run());
                     while !handle.is_finished() {
                         std::thread::yield_now();
                     }
-                    opt.set_in_flight(handle);
+                    opt.set_in_flight(handle, retry);
                 }
             }
             samples.sort_unstable();

@@ -74,6 +74,17 @@ pub struct OptimConfig {
     pub momentum_reproject: bool,
     /// Fira residual limiter threshold.
     pub fira_limiter: f32,
+    /// Refresh-watchdog deadline for a background refresh join, in
+    /// milliseconds (`0` = wait forever, i.e. timeouts never fire; panics
+    /// are still supervised). When the deadline passes the trainer falls
+    /// back to an inline retry instead of stalling on a wedged worker.
+    pub refresh_timeout_ms: u64,
+    /// Inline retry attempts after a panicked/timed-out background
+    /// refresh (each retry re-runs the *identical* captured job, so a
+    /// successful retry masks the fault bit-for-bit). After the retries
+    /// are exhausted the projector keeps its previous basis and a
+    /// fallback counter increments.
+    pub refresh_retries: usize,
 }
 
 impl Default for OptimConfig {
@@ -92,8 +103,78 @@ impl Default for OptimConfig {
             weight_decay: 0.0,
             momentum_reproject: true,
             fira_limiter: 1.01,
+            refresh_timeout_ms: 0,
+            refresh_retries: 2,
         }
     }
+}
+
+/// Fault-tolerance policy for the training loop (`[resilience]` in TOML).
+/// The defaults keep every recovery path armed but checkpointing off, so
+/// plain runs behave exactly as before while still surviving a NaN spike
+/// or a panicked refresh.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResilienceConfig {
+    /// Consecutive anomalous (skipped) steps that trigger an automatic
+    /// rollback to the last good checkpoint. `0` disables rollback (the
+    /// guard then skips indefinitely).
+    pub max_consecutive_skips: usize,
+    /// Cap on automatic rollbacks per run; exceeding it is a clean error
+    /// (a run that cannot make progress should die loudly, not loop).
+    pub max_rollbacks: usize,
+    /// Snapshot directory for periodic checkpoints + auto-resume
+    /// (empty = periodic checkpointing off).
+    pub ckpt_dir: String,
+    /// Save a snapshot every N steps (`0` = off; the final `--save`
+    /// checkpoint is independent of this).
+    pub ckpt_every: usize,
+    /// Keep-last-N retention for periodic snapshots.
+    pub keep_last: usize,
+    /// Resume from the newest valid snapshot in `ckpt_dir` at startup
+    /// (torn/corrupt files are skipped, not fatal).
+    pub resume: bool,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            max_consecutive_skips: 3,
+            max_rollbacks: 2,
+            ckpt_dir: String::new(),
+            ckpt_every: 0,
+            keep_last: 3,
+            resume: false,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.ckpt_every > 0 && self.ckpt_dir.is_empty() {
+            bail!("resilience.ckpt_every requires resilience.ckpt_dir");
+        }
+        if self.resume && self.ckpt_dir.is_empty() {
+            bail!("resilience.resume requires resilience.ckpt_dir");
+        }
+        if self.keep_last == 0 {
+            bail!("resilience.keep_last must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic fault-injection harness configuration (`[fault]` in TOML,
+/// `SARA_FAULT=` in the environment taking precedence). Default **off**:
+/// an empty spec means no fault code runs anywhere near the hot path.
+/// Spec grammar: comma-separated `kind@arg[:ms]`, e.g.
+/// `"nan_grad@7,panic_refresh@2,slow_refresh@1:50,torn_ckpt@1,crash_ckpt@2"`
+/// — see `resilience::inject` for the kinds.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultConfig {
+    pub spec: String,
+    /// Seed for deterministic fault realizations (which gradient element a
+    /// `nan_grad` poisons).
+    pub seed: u64,
 }
 
 /// Data-parallel sharding substrate configuration (`rust/src/dist/`).
@@ -200,6 +281,10 @@ pub struct RunConfig {
     pub eval_batches: usize,
     /// Probe subspace overlap / spectra every N steps (0 = off).
     pub probe_every: usize,
+    /// Fault-tolerance policy (`[resilience]` in TOML).
+    pub resilience: ResilienceConfig,
+    /// Fault-injection harness (`[fault]` in TOML, `SARA_FAULT=` env).
+    pub fault: FaultConfig,
 }
 
 impl Default for RunConfig {
@@ -221,6 +306,8 @@ impl Default for RunConfig {
             eval_every: 0,
             eval_batches: 8,
             probe_every: 0,
+            resilience: ResilienceConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -345,6 +432,29 @@ impl RunConfig {
         if let Some(s) = args.get("inner") {
             self.optim.inner = parse_inner(s)?;
         }
+        self.optim.refresh_timeout_ms =
+            args.get_u64("refresh-timeout-ms", self.optim.refresh_timeout_ms)?;
+        self.optim.refresh_retries =
+            args.get_usize("refresh-retries", self.optim.refresh_retries)?;
+        if let Some(d) = args.get("ckpt-dir") {
+            self.resilience.ckpt_dir = d.to_string();
+        }
+        self.resilience.ckpt_every =
+            args.get_usize("ckpt-every", self.resilience.ckpt_every)?;
+        self.resilience.keep_last =
+            args.get_usize("keep-last", self.resilience.keep_last)?;
+        if args.flag("resume") {
+            self.resilience.resume = true;
+        }
+        self.resilience.max_consecutive_skips = args
+            .get_usize("max-skips", self.resilience.max_consecutive_skips)?;
+        self.resilience.max_rollbacks =
+            args.get_usize("max-rollbacks", self.resilience.max_rollbacks)?;
+        self.resilience.validate()?;
+        if let Some(s) = args.get("fault") {
+            self.fault.spec = s.to_string();
+        }
+        self.fault.seed = args.get_u64("fault-seed", self.fault.seed)?;
         Ok(())
     }
 
@@ -413,6 +523,37 @@ impl RunConfig {
         if let Some(b) = doc.get_bool("optim", "momentum_reproject") {
             cfg.optim.momentum_reproject = b;
         }
+        cfg.optim.refresh_timeout_ms = doc
+            .get_usize("optim", "refresh_timeout_ms")
+            .unwrap_or(cfg.optim.refresh_timeout_ms as usize)
+            as u64;
+        cfg.optim.refresh_retries = doc
+            .get_usize("optim", "refresh_retries")
+            .unwrap_or(cfg.optim.refresh_retries);
+        if let Some(v) = doc.get_str("resilience", "ckpt_dir") {
+            cfg.resilience.ckpt_dir = v.to_string();
+        }
+        cfg.resilience.ckpt_every = doc
+            .get_usize("resilience", "ckpt_every")
+            .unwrap_or(cfg.resilience.ckpt_every);
+        cfg.resilience.keep_last = doc
+            .get_usize("resilience", "keep_last")
+            .unwrap_or(cfg.resilience.keep_last);
+        if let Some(b) = doc.get_bool("resilience", "resume") {
+            cfg.resilience.resume = b;
+        }
+        cfg.resilience.max_consecutive_skips = doc
+            .get_usize("resilience", "max_consecutive_skips")
+            .unwrap_or(cfg.resilience.max_consecutive_skips);
+        cfg.resilience.max_rollbacks = doc
+            .get_usize("resilience", "max_rollbacks")
+            .unwrap_or(cfg.resilience.max_rollbacks);
+        cfg.resilience.validate()?;
+        if let Some(v) = doc.get_str("fault", "spec") {
+            cfg.fault.spec = v.to_string();
+        }
+        cfg.fault.seed =
+            doc.get_usize("fault", "seed").unwrap_or(cfg.fault.seed as usize) as u64;
         Ok(cfg)
     }
 }
@@ -575,6 +716,91 @@ mod tests {
             "train --gemm-kernel turbo".split_whitespace().map(|s| s.to_string()),
         );
         assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn resilience_and_fault_knobs_parse_and_validate() {
+        // defaults: recovery armed, checkpointing and fault injection off
+        let c = RunConfig::default();
+        assert_eq!(c.resilience.max_consecutive_skips, 3);
+        assert_eq!(c.resilience.ckpt_every, 0);
+        assert!(!c.resilience.resume);
+        assert!(c.fault.spec.is_empty());
+        assert_eq!(c.optim.refresh_retries, 2);
+        assert_eq!(c.optim.refresh_timeout_ms, 0);
+
+        let args = Args::parse(
+            "train --ckpt-dir /tmp/ck --ckpt-every 25 --keep-last 2 --resume \
+             --max-skips 5 --max-rollbacks 1 --refresh-timeout-ms 500 \
+             --refresh-retries 4 --fault nan_grad@3 --fault-seed 9"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.resilience.ckpt_dir, "/tmp/ck");
+        assert_eq!(c.resilience.ckpt_every, 25);
+        assert_eq!(c.resilience.keep_last, 2);
+        assert!(c.resilience.resume);
+        assert_eq!(c.resilience.max_consecutive_skips, 5);
+        assert_eq!(c.resilience.max_rollbacks, 1);
+        assert_eq!(c.optim.refresh_timeout_ms, 500);
+        assert_eq!(c.optim.refresh_retries, 4);
+        assert_eq!(c.fault.spec, "nan_grad@3");
+        assert_eq!(c.fault.seed, 9);
+
+        // checkpoint knobs without a directory are rejected
+        let bad = Args::parse(
+            "train --ckpt-every 10".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+        let bad = Args::parse(
+            "train --resume".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+        let bad = Args::parse(
+            "train --ckpt-dir /tmp/ck --keep-last 0"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+
+        // TOML sections
+        let dir = std::env::temp_dir().join("sara_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resilience.toml");
+        std::fs::write(
+            &path,
+            r#"
+[resilience]
+ckpt_dir = "/tmp/sara-ck"
+ckpt_every = 50
+keep_last = 4
+resume = true
+max_consecutive_skips = 2
+max_rollbacks = 3
+
+[optim]
+refresh_timeout_ms = 250
+refresh_retries = 1
+
+[fault]
+spec = "panic_refresh@1,slow_refresh@2:40"
+seed = 17
+"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.resilience.ckpt_dir, "/tmp/sara-ck");
+        assert_eq!(c.resilience.ckpt_every, 50);
+        assert_eq!(c.resilience.keep_last, 4);
+        assert!(c.resilience.resume);
+        assert_eq!(c.resilience.max_consecutive_skips, 2);
+        assert_eq!(c.resilience.max_rollbacks, 3);
+        assert_eq!(c.optim.refresh_timeout_ms, 250);
+        assert_eq!(c.optim.refresh_retries, 1);
+        assert_eq!(c.fault.spec, "panic_refresh@1,slow_refresh@2:40");
+        assert_eq!(c.fault.seed, 17);
     }
 
     #[test]

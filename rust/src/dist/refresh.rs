@@ -14,6 +14,7 @@
 
 use super::topology::Topology;
 use crate::optim::ParamOptimizer;
+use crate::resilience::inject::RefreshFault;
 use crate::util::pool::WorkerPool;
 
 /// Move every refresh job scheduled by the optimizer pass that just ran
@@ -29,10 +30,25 @@ pub fn launch_owned_refreshes(
     topo: &Topology,
     launched: &mut [u64],
 ) {
+    launch_owned_refreshes_with(pool, opts, topo, launched, &mut || None);
+}
+
+/// [`launch_owned_refreshes`] with a fault hook, forwarded to
+/// `train::launch_refresh_with`: consulted exactly once per actual launch,
+/// in parameter order, so the trainer can number launches globally — the
+/// deterministic index space `panic_refresh@N` / `slow_refresh@N`
+/// fault-injection specs address.
+pub fn launch_owned_refreshes_with(
+    pool: &WorkerPool,
+    opts: &mut [ParamOptimizer],
+    topo: &Topology,
+    launched: &mut [u64],
+    fault: &mut dyn FnMut() -> Option<RefreshFault>,
+) {
     assert_eq!(opts.len(), topo.params(), "topology/param count mismatch");
     assert_eq!(launched.len(), topo.world(), "one counter per rank");
     for (i, opt) in opts.iter_mut().enumerate() {
-        if crate::train::launch_refresh(pool, opt) {
+        if crate::train::launch_refresh_with(pool, opt, fault) {
             launched[topo.owner_of(i)] += 1;
         }
     }

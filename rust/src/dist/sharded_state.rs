@@ -90,12 +90,31 @@ impl ShardedState {
     /// instead of duplicating it on every rank); the installed `P` is
     /// broadcast at the install step.
     pub fn launch_owned_refreshes(&mut self, pool: &WorkerPool) {
-        refresh::launch_owned_refreshes(
+        self.launch_owned_refreshes_with(pool, &mut || None);
+    }
+
+    /// [`ShardedState::launch_owned_refreshes`] with a fault-injection
+    /// hook (see `dist::refresh::launch_owned_refreshes_with`); the
+    /// healthy path above is this with a hook that never fires.
+    pub fn launch_owned_refreshes_with(
+        &mut self,
+        pool: &WorkerPool,
+        fault: &mut dyn FnMut() -> Option<crate::resilience::inject::RefreshFault>,
+    ) {
+        refresh::launch_owned_refreshes_with(
             pool,
             &mut self.opts,
             &self.topo,
             &mut self.launched,
+            fault,
         );
+    }
+
+    /// Watchdog fallbacks (panicked/timed-out background refreshes
+    /// recovered inline or degraded to the previous basis) summed across
+    /// all shards — merged into the trainer's resilience report.
+    pub fn refresh_fallback_total(&self) -> u64 {
+        self.opts.iter().map(|o| o.refresh_fallbacks()).sum()
     }
 
     /// Background refresh jobs launched so far, per owning rank.

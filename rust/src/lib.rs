@@ -30,6 +30,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod optim;
 pub mod quant;
+pub mod resilience;
 pub mod rng;
 pub mod runtime;
 pub mod selector;

@@ -36,6 +36,10 @@ fn usage() -> &'static str {
      \u{20}          [--gemm-kernel auto|simd|scalar] [--param-cache on|off]\n\
      \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
      \u{20}          [--save ckpt.bin]\n\
+     \u{20}          [--ckpt-dir DIR] [--ckpt-every N] [--keep-last N] [--resume]\n\
+     \u{20}          [--max-skips K] [--max-rollbacks N]\n\
+     \u{20}          [--refresh-timeout-ms MS] [--refresh-retries N]\n\
+     \u{20}          [--fault SPEC] [--fault-seed S]   (e.g. nan_grad@7,crash_ckpt@1)\n\
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
      \u{20}          [--steps N] [--rank R] [--tau T] [--anchor N] [--per-layer]\n\
      sara eval --model <name> --ckpt ckpt.bin\n\
@@ -93,6 +97,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if result.dist.world > 1 {
         println!("{}", result.dist.row());
+    }
+    // any recovery-path activity (or periodic snapshots) gets a report
+    // row; a healthy un-checkpointed run prints nothing extra
+    if !result.resilience.is_clean() || result.resilience.checkpoints_saved > 0
+    {
+        println!("{}", result.resilience.row());
     }
     if let Some(path) = args.get("save") {
         let ck = Checkpoint {

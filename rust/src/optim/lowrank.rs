@@ -42,12 +42,29 @@
 //! the classic inline refresh (pinned by the equivalence tests below). A
 //! scheduled job the caller never moves off-thread is simply run inline at
 //! install time, so pool-less callers stay correct.
+//!
+//! ## Refresh watchdog (resilience contract)
+//!
+//! The install step's join is supervised: a background job that panicked,
+//! or one that misses the `optim.refresh_timeout_ms` deadline
+//! (0 = wait forever; panics are still caught), no longer unwinds the
+//! trainer. The launch path retains a [`Clone`] of the job
+//! ([`LowRankState::set_in_flight`]'s `retry`), and the watchdog re-runs
+//! that identical captured state inline — up to `optim.refresh_retries`
+//! attempts with a short backoff — so a successful retry produces the
+//! exact output the healthy job would have and the fault is bit-for-bit
+//! invisible. If every attempt fails, the layer keeps its previous
+//! projector (the selector's RNG is not advanced, keeping recovery
+//! deterministic) and [`LowRankState::refresh_fallbacks`] increments; the
+//! bootstrap refresh is always inline, so a previous projector exists
+//! whenever a job can be in flight.
 
 use super::{make_state, FiraResidual, OptState};
 use crate::config::{OptimConfig, WrapperKind};
 use crate::linalg::{matmul_into, t_matmul_into, Matrix};
 use crate::selector::{RefreshJob, RefreshOutput, Selector};
-use crate::util::pool::JobHandle;
+use crate::util::pool::{JobHandle, JoinOutcome};
+use std::time::Duration;
 
 /// Preallocated per-matrix scratch for the steady-state step. All buffers
 /// are sized at construction and reused for the lifetime of the state.
@@ -83,8 +100,10 @@ enum PendingRefresh {
     /// moves it to a background worker; left here, it runs inline at
     /// install time (the pool-less fallback).
     Scheduled(RefreshJob),
-    /// Running (or finished) on a background pool worker.
-    InFlight(JobHandle<RefreshOutput>),
+    /// Running (or finished) on a background pool worker. `retry` is a
+    /// clone of the launched job, retained so the watchdog can re-run the
+    /// identical captured state inline if the worker panics or times out.
+    InFlight { handle: JobHandle<RefreshOutput>, retry: RefreshJob },
 }
 
 /// Low-rank optimizer state for one weight matrix.
@@ -111,6 +130,10 @@ pub struct LowRankState {
     /// cumulative wall time spent in refresh compute (inline or on a
     /// background worker), for the trainer's periodic log line
     refresh_nanos: u64,
+    /// background refreshes the watchdog had to recover from a panic or
+    /// timeout (successful inline retries *and* kept-previous-basis
+    /// fallbacks) — rolled into the trainer's resilience report
+    refresh_fallbacks: u64,
 }
 
 impl LowRankState {
@@ -143,6 +166,7 @@ impl LowRankState {
             t: 0,
             refresh_count: 0,
             refresh_nanos: 0,
+            refresh_fallbacks: 0,
         }
     }
 
@@ -187,12 +211,15 @@ impl LowRankState {
         self.t += 1;
 
         // projector install every tau steps (Algorithm 2, line 2): join the
-        // pipelined job if one is pending, else refresh inline from the
-        // current gradient (lookahead 0 and the very first refresh)
+        // pipelined job if one is pending (watchdog-supervised — see the
+        // module docs), else refresh inline from the current gradient
+        // (lookahead 0 and the very first refresh)
         if (self.t - 1) % self.cfg.update_period == 0 {
-            let mut refreshed = match self.pending.take() {
-                Some(PendingRefresh::InFlight(handle)) => handle.join(),
-                Some(PendingRefresh::Scheduled(job)) => job.run(),
+            let joined = match self.pending.take() {
+                Some(PendingRefresh::InFlight { handle, retry }) => {
+                    self.watchdog_join(handle, retry)
+                }
+                Some(PendingRefresh::Scheduled(job)) => Some(job.run()),
                 None => {
                     let rank = self.cfg.rank.min(work.rows);
                     let snap = if self.selector.wants_gradient() {
@@ -202,24 +229,30 @@ impl LowRankState {
                         // gradient-independent selector: shape-only stub
                         Matrix::zeros(work.rows, 0)
                     };
-                    self.selector.begin_refresh(snap, rank).run()
+                    Some(self.selector.begin_refresh(snap, rank).run())
                 }
             };
-            self.refresh_nanos += refreshed.compute_nanos();
-            if let Some(snap) = refreshed.take_gradient() {
-                // recycle the snapshot buffer for the next schedule step
-                self.grad_snap = snap;
-            }
-            let p_new = self.selector.install(refreshed);
-            if self.cfg.momentum_reproject {
-                if let Some(p_old) = &self.p {
-                    // C = P_new^T P_old maps old-subspace coords to new
-                    let c = p_new.t_matmul(p_old);
-                    self.state.reproject(&c);
+            if let Some(mut refreshed) = joined {
+                self.refresh_nanos += refreshed.compute_nanos();
+                if let Some(snap) = refreshed.take_gradient() {
+                    // recycle the snapshot buffer for the next schedule step
+                    self.grad_snap = snap;
                 }
+                let p_new = self.selector.install(refreshed);
+                if self.cfg.momentum_reproject {
+                    if let Some(p_old) = &self.p {
+                        // C = P_new^T P_old maps old-subspace coords to new
+                        let c = p_new.t_matmul(p_old);
+                        self.state.reproject(&c);
+                    }
+                }
+                self.p = Some(p_new);
+                self.refresh_count += 1;
             }
-            self.p = Some(p_new);
-            self.refresh_count += 1;
+            // None: every watchdog retry failed — keep the previous
+            // projector (set by the always-inline bootstrap refresh) and
+            // leave the selector's RNG untouched so recovery stays
+            // deterministic; the next scheduled refresh proceeds normally
         }
 
         let p = self.p.as_ref().expect("projector set on first step");
@@ -276,6 +309,67 @@ impl LowRankState {
         true
     }
 
+    /// Supervised join of an in-flight refresh. A healthy completion is
+    /// returned as-is (the common case — zero overhead beyond the enum
+    /// match). A panicked or timed-out job is recovered by re-running the
+    /// retained `retry` clone inline, up to `refresh_retries` attempts
+    /// with a short backoff: the clone captured the same gradient snapshot
+    /// and RNG state, so a successful retry is bit-identical to what the
+    /// healthy job would have produced. Returns `None` only when every
+    /// attempt failed — the caller then keeps the previous projector.
+    fn watchdog_join(
+        &mut self,
+        handle: JobHandle<RefreshOutput>,
+        retry: RefreshJob,
+    ) -> Option<RefreshOutput> {
+        let timeout = match self.cfg.refresh_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+        match handle.join_outcome(timeout) {
+            JoinOutcome::Completed(out) => return Some(out),
+            JoinOutcome::Panicked => {
+                crate::warn_log!("refresh", "background refresh panicked; retrying inline");
+            }
+            JoinOutcome::TimedOut(_) => {
+                // the abandoned handle is dropped; if the wedged job ever
+                // finishes, its output lands in a dead slot and is freed
+                crate::warn_log!(
+                    "refresh",
+                    "background refresh missed its {}ms deadline; retrying inline",
+                    self.cfg.refresh_timeout_ms
+                );
+            }
+        }
+        self.refresh_fallbacks += 1;
+        for attempt in 0..self.cfg.refresh_retries {
+            let job = retry.clone();
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                move || job.run(),
+            )) {
+                Ok(out) => return Some(out),
+                Err(_) => {
+                    crate::warn_log!(
+                        "refresh",
+                        "inline refresh retry {} panicked",
+                        attempt + 1
+                    );
+                    // brief, bounded backoff before the next attempt —
+                    // correctness never depends on this sleep
+                    std::thread::sleep(Duration::from_millis(
+                        5 << attempt.min(6),
+                    ));
+                }
+            }
+        }
+        crate::warn_log!(
+            "refresh",
+            "refresh unrecoverable after {} retries; keeping previous projector",
+            self.cfg.refresh_retries
+        );
+        None
+    }
+
     /// A refresh scheduled by the step that just ran, if any. The trainer
     /// moves it onto the worker pool's background lane and parks the
     /// completion handle via [`LowRankState::set_in_flight`]; a job never
@@ -293,20 +387,37 @@ impl LowRankState {
     }
 
     /// Park the completion handle of a refresh job obtained from
-    /// [`LowRankState::take_scheduled_refresh`] and launched off-thread.
-    /// The install step joins it.
-    pub fn set_in_flight(&mut self, handle: JobHandle<RefreshOutput>) {
+    /// [`LowRankState::take_scheduled_refresh`] and launched off-thread,
+    /// along with a clone of the launched job (`retry`) for the watchdog's
+    /// inline recovery path. The install step joins it.
+    pub fn set_in_flight(
+        &mut self,
+        handle: JobHandle<RefreshOutput>,
+        retry: RefreshJob,
+    ) {
         debug_assert!(
             self.pending.is_none(),
             "a refresh is already pending for this layer"
         );
-        self.pending = Some(PendingRefresh::InFlight(handle));
+        self.pending = Some(PendingRefresh::InFlight { handle, retry });
+    }
+
+    /// Whether a refresh is scheduled or in flight for this layer (the
+    /// trainer defers periodic checkpoints past such steps).
+    pub fn has_pending_refresh(&self) -> bool {
+        self.pending.is_some()
     }
 
     /// `(refresh_count, cumulative refresh-compute nanos)` — surfaced in
     /// the trainer's periodic log line so overlap wins are visible.
     pub fn refresh_stats(&self) -> (usize, u64) {
         (self.refresh_count, self.refresh_nanos)
+    }
+
+    /// Background refreshes the watchdog recovered from a panic/timeout
+    /// (see the module docs' resilience section).
+    pub fn refresh_fallbacks(&self) -> u64 {
+        self.refresh_fallbacks
     }
 
     /// Allocating wrapper over [`LowRankState::step_into`]; returns the
@@ -395,12 +506,25 @@ impl ParamOptimizer {
     }
 
     /// See [`LowRankState::set_in_flight`].
-    pub fn set_in_flight(&mut self, handle: JobHandle<RefreshOutput>) {
+    pub fn set_in_flight(
+        &mut self,
+        handle: JobHandle<RefreshOutput>,
+        retry: RefreshJob,
+    ) {
         match self {
             ParamOptimizer::Full { .. } => {
                 panic!("set_in_flight on a full-rank optimizer")
             }
-            ParamOptimizer::LowRank(s) => s.set_in_flight(handle),
+            ParamOptimizer::LowRank(s) => s.set_in_flight(handle, retry),
+        }
+    }
+
+    /// See [`LowRankState::has_pending_refresh`] (full-rank params never
+    /// have one).
+    pub fn has_pending_refresh(&self) -> bool {
+        match self {
+            ParamOptimizer::Full { .. } => false,
+            ParamOptimizer::LowRank(s) => s.has_pending_refresh(),
         }
     }
 
@@ -409,6 +533,14 @@ impl ParamOptimizer {
         match self {
             ParamOptimizer::Full { .. } => (0, 0),
             ParamOptimizer::LowRank(s) => s.refresh_stats(),
+        }
+    }
+
+    /// See [`LowRankState::refresh_fallbacks`].
+    pub fn refresh_fallbacks(&self) -> u64 {
+        match self {
+            ParamOptimizer::Full { .. } => 0,
+            ParamOptimizer::LowRank(s) => s.refresh_fallbacks(),
         }
     }
 }
@@ -751,7 +883,11 @@ mod tests {
                 assert_eq!(a.data, b.data, "{selector:?} L={lookahead} step {step}");
                 assert!(inline_opt.take_scheduled_refresh().is_none());
                 if let Some(job) = pipe.take_scheduled_refresh() {
-                    pipe.set_in_flight(pool.spawn_background(move || job.run()));
+                    let retry = job.clone();
+                    pipe.set_in_flight(
+                        pool.spawn_background(move || job.run()),
+                        retry,
+                    );
                 }
             }
             assert_eq!(inline_opt.refresh_count, pipe.refresh_count);
@@ -779,12 +915,13 @@ mod tests {
             let g = Matrix::randn(10, 16, 1.0, &mut rng);
             opt.step_into(&g, 0.05, &mut out);
             if let Some(job) = opt.take_scheduled_refresh() {
+                let retry = job.clone();
                 let handle = pool.spawn_background(move || job.run());
                 while !handle.is_finished() {
                     std::thread::yield_now();
                 }
                 ran_on.push(handle.executed_on().unwrap());
-                opt.set_in_flight(handle);
+                opt.set_in_flight(handle, retry);
             }
         }
         assert_eq!(opt.refresh_count, 3);
@@ -821,6 +958,146 @@ mod tests {
             opt.step_into(&g, 0.01, &mut out);
         }
         assert_eq!(thread_alloc_count() - before, 0);
+    }
+
+    /// Resilience contract: a background refresh that panics on its worker
+    /// is recovered by the watchdog's inline retry of the retained job
+    /// clone — and because the clone captured identical state, the whole
+    /// trajectory stays bit-identical to a healthy pipelined run.
+    #[test]
+    fn watchdog_masks_panicked_refresh_bit_identically() {
+        use crate::util::pool::WorkerPool;
+        let pool = WorkerPool::new(2);
+        let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Sara, 4);
+        cfg.update_period = 3;
+        cfg.refresh_lookahead = 1;
+        cfg.refresh_retries = 2;
+        let mut healthy =
+            LowRankState::new(12, 18, &cfg, make_selector(cfg.selector, 3, 0));
+        let mut faulty =
+            LowRankState::new(12, 18, &cfg, make_selector(cfg.selector, 3, 0));
+        let g = Matrix::randn(12, 18, 1.0, &mut Pcg64::new(8));
+        let mut a = Matrix::zeros(12, 18);
+        let mut b = Matrix::zeros(12, 18);
+        let mut injected = 0u64;
+        for step in 0..10 {
+            healthy.step_into(&g, 0.05, &mut a);
+            faulty.step_into(&g, 0.05, &mut b);
+            assert_eq!(a.data, b.data, "step {step}: fault not masked");
+            if let Some(job) = healthy.take_scheduled_refresh() {
+                let retry = job.clone();
+                healthy
+                    .set_in_flight(pool.spawn_background(move || job.run()), retry);
+            }
+            if let Some(job) = faulty.take_scheduled_refresh() {
+                // every launch panics on the worker; the retained clone is
+                // what the watchdog recovers with
+                let retry = job.clone();
+                let handle =
+                    pool.spawn_background(move || -> RefreshOutput {
+                        drop(job);
+                        panic!("injected refresh fault");
+                    });
+                faulty.set_in_flight(handle, retry);
+                injected += 1;
+            }
+        }
+        assert_eq!(healthy.refresh_count, faulty.refresh_count);
+        assert!(injected >= 2, "test must actually inject faults");
+        assert_eq!(faulty.refresh_fallbacks(), injected);
+        assert_eq!(healthy.refresh_fallbacks(), 0);
+    }
+
+    /// A wedged background job (misses `refresh_timeout_ms`) is abandoned
+    /// and recovered inline, again bit-identically.
+    #[test]
+    fn watchdog_recovers_timed_out_refresh() {
+        use crate::util::pool::WorkerPool;
+        let pool = WorkerPool::new(2);
+        let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Dominant, 4);
+        cfg.update_period = 4;
+        cfg.refresh_lookahead = 1;
+        cfg.refresh_timeout_ms = 5;
+        cfg.refresh_retries = 1;
+        let mut inline_cfg = cfg.clone();
+        inline_cfg.refresh_lookahead = 0;
+        let mut slow =
+            LowRankState::new(10, 16, &cfg, make_selector(cfg.selector, 1, 0));
+        let mut oracle = LowRankState::new(
+            10,
+            16,
+            &inline_cfg,
+            make_selector(inline_cfg.selector, 1, 0),
+        );
+        let g = Matrix::randn(10, 16, 1.0, &mut Pcg64::new(4));
+        let mut a = Matrix::zeros(10, 16);
+        let mut b = Matrix::zeros(10, 16);
+        let mut wedged = 0u64;
+        for step in 0..9 {
+            oracle.step_into(&g, 0.05, &mut a);
+            slow.step_into(&g, 0.05, &mut b);
+            assert_eq!(a.data, b.data, "step {step}: timeout not masked");
+            if let Some(job) = slow.take_scheduled_refresh() {
+                let retry = job.clone();
+                let handle = pool.spawn_background(move || {
+                    std::thread::sleep(Duration::from_millis(250));
+                    job.run()
+                });
+                slow.set_in_flight(handle, retry);
+                wedged += 1;
+            }
+        }
+        assert!(wedged >= 1);
+        assert_eq!(slow.refresh_fallbacks(), wedged);
+        assert_eq!(slow.refresh_count, oracle.refresh_count);
+    }
+
+    /// When every retry is exhausted (`refresh_retries = 0` goes straight
+    /// to the fallback), the layer keeps its previous projector and keeps
+    /// training — no unwind, and later refreshes proceed normally.
+    #[test]
+    fn watchdog_exhaustion_keeps_previous_projector() {
+        use crate::util::pool::WorkerPool;
+        let pool = WorkerPool::new(1);
+        let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Sara, 4);
+        cfg.update_period = 3;
+        cfg.refresh_lookahead = 1;
+        cfg.refresh_retries = 0;
+        let mut opt =
+            LowRankState::new(10, 16, &cfg, make_selector(cfg.selector, 2, 0));
+        let mut rng = Pcg64::new(6);
+        let mut out = Matrix::zeros(10, 16);
+        let mut p_before_install = None;
+        let mut poisoned_once = false;
+        for t in 1..=7 {
+            let g = Matrix::randn(10, 16, 1.0, &mut rng);
+            opt.step_into(&g, 0.05, &mut out);
+            if t == 3 {
+                // the job installing at t=4 — poison it with no retries
+                let job = opt.take_scheduled_refresh().expect("scheduled at t=3");
+                let retry = job.clone();
+                let handle = pool.spawn_background(move || -> RefreshOutput {
+                    drop(job);
+                    panic!("injected refresh fault");
+                });
+                opt.set_in_flight(handle, retry);
+                p_before_install = Some(opt.projector().unwrap().clone());
+                poisoned_once = true;
+            } else if let Some(job) = opt.take_scheduled_refresh() {
+                let retry = job.clone();
+                opt.set_in_flight(pool.spawn_background(move || job.run()), retry);
+            }
+            if t == 4 {
+                // install failed: previous basis kept, count not bumped
+                let kept = opt.projector().unwrap();
+                assert_eq!(kept.data, p_before_install.as_ref().unwrap().data);
+                assert_eq!(opt.refresh_count, 1, "only the bootstrap installed");
+            }
+        }
+        assert!(poisoned_once);
+        assert_eq!(opt.refresh_fallbacks(), 1);
+        // the t=7 install (scheduled at t=6) recovered the refresh cadence
+        assert_eq!(opt.refresh_count, 2);
     }
 
     /// 8-bit Adam inner state requantizes in place — the full low-rank

@@ -1,0 +1,292 @@
+//! Deterministic, seeded fault-injection harness (default **off**).
+//!
+//! The recovery paths in the resilience contract are only trustworthy if
+//! something exercises them; this module is that something. A
+//! [`FaultPlan`] is parsed from a compact spec string (the `[fault]` TOML
+//! section, overridden by the `SARA_FAULT=` environment variable) and the
+//! trainer consults it at the three places failures happen:
+//!
+//! | kind            | spec              | injected where                        |
+//! |-----------------|-------------------|---------------------------------------|
+//! | NaN gradient    | `nan_grad@K`      | one gradient element at step `K`      |
+//! | panicking job   | `panic_refresh@N` | the `N`-th background refresh launch  |
+//! | wedged job      | `slow_refresh@N:MS`| same, sleeps `MS` ms before running  |
+//! | torn snapshot   | `torn_ckpt@N`     | the `N`-th periodic checkpoint save   |
+//! | crash mid-write | `crash_ckpt@N`    | same, aborts the process mid-temp-file|
+//!
+//! Everything is deterministic: indices are fixed at parse time, each
+//! fault fires exactly once (one-shot arming), and the `nan_grad` element
+//! choice derives from `fold_seed(fault.seed, step)` — two runs with the
+//! same spec and seed inject byte-identical faults. With an empty spec no
+//! fault code runs at all.
+
+use crate::config::FaultConfig;
+use crate::rng::fold_seed;
+use crate::runtime::Tensor;
+use crate::train::SaveFault;
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// One armed fault (one-shot: taken exactly once, then spent).
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Fault {
+    /// Poison one gradient element with NaN at trainer step `step`.
+    NanGrad { step: usize },
+    /// Panic the `launch`-th background refresh job (0-based, counted
+    /// across all layers/ranks in launch order).
+    PanicRefresh { launch: usize },
+    /// Delay the `launch`-th background refresh job by `millis` before
+    /// running it (drives the watchdog's timeout path).
+    SlowRefresh { launch: usize, millis: u64 },
+    /// Write the `save`-th periodic checkpoint (0-based) torn at its
+    /// final path.
+    TornCkpt { save: usize },
+    /// Abort the process midway through the `save`-th periodic
+    /// checkpoint's temp-file write (deterministic `kill -9` stand-in).
+    CrashCkpt { save: usize },
+}
+
+/// What the refresh launch path should do to a job (see
+/// `train::launch_refresh_with`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshFault {
+    /// Panic on the background worker instead of running the job.
+    Panic,
+    /// Sleep before running the job (the job still completes — whether
+    /// its result is used depends on the watchdog deadline).
+    Slow(Duration),
+}
+
+/// Parsed, armed fault schedule. Owns one-shot entries plus the seed used
+/// for deterministic fault realizations.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs for the grammar). Empty spec
+    /// parses to an empty plan.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let mut faults = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, arg) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault '{part}': expected kind@index"))?;
+            let (idx_str, ms_str) = match arg.split_once(':') {
+                Some((i, m)) => (i, Some(m)),
+                None => (arg, None),
+            };
+            let idx: usize = idx_str
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault '{part}': bad index '{idx_str}'"))?;
+            let millis = match ms_str {
+                Some(m) => Some(m.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("fault '{part}': bad millis '{m}'")
+                })?),
+                None => None,
+            };
+            let fault = match (kind, millis) {
+                ("nan_grad", None) => Fault::NanGrad { step: idx },
+                ("panic_refresh", None) => Fault::PanicRefresh { launch: idx },
+                ("slow_refresh", Some(ms)) => {
+                    Fault::SlowRefresh { launch: idx, millis: ms }
+                }
+                ("slow_refresh", None) => {
+                    bail!("fault '{part}': slow_refresh needs @index:millis")
+                }
+                ("torn_ckpt", None) => Fault::TornCkpt { save: idx },
+                ("crash_ckpt", None) => Fault::CrashCkpt { save: idx },
+                _ => bail!(
+                    "unknown fault '{part}' (nan_grad@K | panic_refresh@N | \
+                     slow_refresh@N:MS | torn_ckpt@N | crash_ckpt@N)"
+                ),
+            };
+            faults.push(fault);
+        }
+        Ok(Self { faults, seed })
+    }
+
+    /// Resolve the effective plan: `SARA_FAULT` in the environment wins
+    /// over the `[fault]` config section; an empty spec means no plan.
+    pub fn resolve(cfg: &FaultConfig) -> Result<Option<Self>> {
+        let spec = match std::env::var("SARA_FAULT") {
+            Ok(s) => s,
+            Err(_) => cfg.spec.clone(),
+        };
+        if spec.trim().is_empty() {
+            return Ok(None);
+        }
+        let plan = Self::parse(&spec, cfg.seed)?;
+        Ok(if plan.is_empty() { None } else { Some(plan) })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Faults still armed (observability/tests: a finished matrix run
+    /// should have consumed every planned fault).
+    pub fn remaining(&self) -> usize {
+        self.faults.len()
+    }
+
+    fn take(&mut self, pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+        let i = self.faults.iter().position(pred)?;
+        Some(self.faults.remove(i))
+    }
+
+    /// One-shot: is a NaN-gradient fault due at this trainer step?
+    /// On hit, poisons a deterministically chosen element of `grads`.
+    pub fn apply_nan_grad(&mut self, step: usize, grads: &mut [Tensor]) -> bool {
+        if self
+            .take(|f| matches!(f, Fault::NanGrad { step: s } if *s == step))
+            .is_none()
+        {
+            return false;
+        }
+        poison_one_element(grads, self.seed, step);
+        true
+    }
+
+    /// One-shot: fault for the `launch`-th background refresh launch.
+    pub fn take_refresh_fault(&mut self, launch: usize) -> Option<RefreshFault> {
+        match self.take(|f| {
+            matches!(f, Fault::PanicRefresh { launch: l } if *l == launch)
+                || matches!(f, Fault::SlowRefresh { launch: l, .. } if *l == launch)
+        })? {
+            Fault::PanicRefresh { .. } => Some(RefreshFault::Panic),
+            Fault::SlowRefresh { millis, .. } => {
+                Some(RefreshFault::Slow(Duration::from_millis(millis)))
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// One-shot: fault for the `save`-th periodic checkpoint save.
+    pub fn take_ckpt_fault(&mut self, save: usize) -> Option<SaveFault> {
+        match self.take(|f| {
+            matches!(f, Fault::TornCkpt { save: s } if *s == save)
+                || matches!(f, Fault::CrashCkpt { save: s } if *s == save)
+        })? {
+            Fault::TornCkpt { .. } => Some(SaveFault::TornFinal),
+            Fault::CrashCkpt { .. } => Some(SaveFault::CrashMidWrite),
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Overwrite one deterministically chosen gradient element with NaN. The
+/// (tensor, element) choice derives from `fold_seed(seed, step)`, so the
+/// same spec+seed poisons the same element in every run.
+fn poison_one_element(grads: &mut [Tensor], seed: u64, step: usize) {
+    let nonempty: Vec<usize> = grads
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| !g.data.is_empty())
+        .map(|(i, _)| i)
+        .collect();
+    if nonempty.is_empty() {
+        return;
+    }
+    let h = fold_seed(seed, step as u64);
+    let ti = nonempty[(h % nonempty.len() as u64) as usize];
+    let g = &mut grads[ti];
+    let ei = (fold_seed(h, 0x6e61_6e) % g.data.len() as u64) as usize;
+    g.data[ei] = f32::NAN;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let plan = FaultPlan::parse(
+            "nan_grad@7, panic_refresh@2,slow_refresh@1:50,torn_ckpt@1,crash_ckpt@2",
+            5,
+        )
+        .unwrap();
+        assert_eq!(plan.remaining(), 5);
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "nan_grad",          // no index
+            "nan_grad@x",        // bad index
+            "slow_refresh@1",    // missing millis
+            "slow_refresh@1:ms", // bad millis
+            "explode@3",         // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn nan_grad_is_one_shot_and_deterministic() {
+        let grads = || {
+            vec![
+                Tensor::from_vec(&[2, 3], vec![1.0; 6]),
+                Tensor::from_vec(&[4], vec![2.0; 4]),
+            ]
+        };
+        let mut a = FaultPlan::parse("nan_grad@3", 11).unwrap();
+        let mut b = FaultPlan::parse("nan_grad@3", 11).unwrap();
+        let (mut ga, mut gb) = (grads(), grads());
+        assert!(!a.apply_nan_grad(2, &mut ga), "wrong step must not fire");
+        assert!(a.apply_nan_grad(3, &mut ga));
+        assert!(b.apply_nan_grad(3, &mut gb));
+        // identical seed/step -> identical poisoned element
+        let nan_pos = |gs: &[Tensor]| {
+            gs.iter()
+                .enumerate()
+                .flat_map(|(ti, g)| {
+                    g.data.iter().enumerate().filter_map(move |(ei, v)| {
+                        v.is_nan().then_some((ti, ei))
+                    })
+                })
+                .collect::<Vec<_>>()
+        };
+        let (pa, pb) = (nan_pos(&ga), nan_pos(&gb));
+        assert_eq!(pa.len(), 1, "exactly one element poisoned");
+        assert_eq!(pa, pb, "fault realization must be deterministic");
+        // spent: firing again does nothing
+        assert!(!a.apply_nan_grad(3, &mut ga));
+        assert_eq!(a.remaining(), 0);
+    }
+
+    #[test]
+    fn refresh_and_ckpt_faults_match_their_indices_once() {
+        let mut p = FaultPlan::parse(
+            "panic_refresh@1,slow_refresh@3:25,torn_ckpt@0,crash_ckpt@2",
+            0,
+        )
+        .unwrap();
+        assert_eq!(p.take_refresh_fault(0), None);
+        assert_eq!(p.take_refresh_fault(1), Some(RefreshFault::Panic));
+        assert_eq!(p.take_refresh_fault(1), None, "one-shot");
+        assert_eq!(
+            p.take_refresh_fault(3),
+            Some(RefreshFault::Slow(Duration::from_millis(25)))
+        );
+        assert_eq!(p.take_ckpt_fault(0), Some(SaveFault::TornFinal));
+        assert_eq!(p.take_ckpt_fault(1), None);
+        assert_eq!(p.take_ckpt_fault(2), Some(SaveFault::CrashMidWrite));
+        assert_eq!(p.remaining(), 0);
+    }
+
+    #[test]
+    fn resolve_is_off_by_default() {
+        // (no SARA_FAULT in the test environment; an empty config spec
+        // must resolve to no plan at all)
+        if std::env::var("SARA_FAULT").is_ok() {
+            return; // externally armed — skip
+        }
+        assert!(FaultPlan::resolve(&FaultConfig::default()).unwrap().is_none());
+        let cfg = FaultConfig { spec: "nan_grad@1".into(), seed: 0 };
+        assert!(FaultPlan::resolve(&cfg).unwrap().is_some());
+    }
+}

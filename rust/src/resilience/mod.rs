@@ -1,0 +1,192 @@
+//! Fault-tolerance layer for the training loop — the resilience contract.
+//!
+//! Long pretraining runs hit three families of failure the trainer must
+//! survive rather than die from: numeric anomalies (NaN/Inf loss or
+//! gradient-norm spikes), crashes across a checkpoint write, and wedged or
+//! panicking background subspace-refresh jobs. This module holds the
+//! policy pieces; the mechanisms live where the failures do (checkpoint
+//! atomicity/CRC in `train::checkpoint`, the timeout-aware join in
+//! `util::pool`, the watchdog join in `optim::lowrank`).
+//!
+//! ## The contract
+//!
+//! **Skip-step** ([`AnomalyGuard`]): each step the trainer checks the loss
+//! and the *pre-clip* gradient norm for non-finites. An anomalous step is
+//! *skipped*: the optimizer pass and the weight update are discarded
+//! entirely, but the trainer's step counter, LR schedule, and data-stream
+//! position advance exactly as usual, so the recovery is deterministic —
+//! two runs hitting the same anomaly skip identically. The optimizer's
+//! internal refresh clock counts only *applied* steps, so a projector is
+//! never refreshed from (or scheduled on) a poisoned gradient.
+//!
+//! **Rollback**: after `max_consecutive_skips` consecutive skips the guard
+//! escalates ([`StepVerdict::Rollback`]): the trainer restores the newest
+//! valid snapshot (`Checkpoint::load_latest_valid` — torn files are
+//! skipped), rebuilds its optimizer/loader state cold, and replays forward
+//! from the snapshot step. At most `max_rollbacks` per run; past that the
+//! run fails cleanly.
+//!
+//! **Refresh watchdog** (in `optim::lowrank`): a background refresh that
+//! panics or misses `optim.refresh_timeout_ms` no longer unwinds the
+//! trainer at join. The watchdog re-runs a retained copy of the identical
+//! job inline (up to `optim.refresh_retries` attempts, with backoff) — a
+//! successful retry makes the fault bit-for-bit invisible. If every retry
+//! fails, the projector keeps its previous basis and the fallback counter
+//! increments.
+//!
+//! **Fault injection** ([`inject`]): a deterministic, seeded harness
+//! (`[fault]` TOML / `SARA_FAULT=` env, default off) injects each failure
+//! mode on demand — NaN gradient at step k, panicking/slow refresh at the
+//! n-th launch, torn or crashing checkpoint writes — so every recovery
+//! path above is exercised by tests and the tier-1 crash smoke, not just
+//! believed in.
+//!
+//! All counters roll up in [`ResilienceReport`], printed as a report row
+//! at the end of a run.
+
+pub mod inject;
+
+/// Verdict of the per-step anomaly check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepVerdict {
+    /// Finite loss and gradient norm: apply the update normally.
+    Proceed,
+    /// Non-finite anomaly: discard this update, keep schedule/stream
+    /// bookkeeping, continue.
+    Skip,
+    /// Too many consecutive anomalies: restore the last good checkpoint.
+    Rollback,
+}
+
+/// Per-step anomaly detector with skip/rollback escalation policy.
+///
+/// The guard is intentionally tiny and deterministic: its only state is
+/// the consecutive-skip counter, so a rolled-back-and-replayed run makes
+/// identical decisions given identical inputs.
+pub struct AnomalyGuard {
+    /// Consecutive skips that trigger rollback (`0` = never escalate).
+    max_consecutive_skips: usize,
+    consecutive: usize,
+}
+
+impl AnomalyGuard {
+    pub fn new(max_consecutive_skips: usize) -> Self {
+        Self { max_consecutive_skips, consecutive: 0 }
+    }
+
+    /// Classify one step from its loss and pre-clip gradient norm.
+    pub fn inspect(&mut self, loss: f32, grad_norm: f64) -> StepVerdict {
+        if loss.is_finite() && grad_norm.is_finite() {
+            self.consecutive = 0;
+            return StepVerdict::Proceed;
+        }
+        self.consecutive += 1;
+        if self.max_consecutive_skips > 0
+            && self.consecutive >= self.max_consecutive_skips
+        {
+            // the rollback rebuilds state from a snapshot; start the
+            // escalation window fresh afterwards
+            self.consecutive = 0;
+            return StepVerdict::Rollback;
+        }
+        StepVerdict::Skip
+    }
+
+    /// Current consecutive-skip streak (observability/tests).
+    pub fn consecutive_skips(&self) -> usize {
+        self.consecutive
+    }
+}
+
+/// Recovery counters for one run, surfaced in the trainer's final report
+/// row (`resilience: ...`). All-zero in a healthy run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResilienceReport {
+    /// Steps discarded by the anomaly guard.
+    pub skipped_steps: u64,
+    /// Automatic rollbacks to a checkpoint.
+    pub rollbacks: u64,
+    /// Background refreshes recovered inline after a panic/timeout
+    /// (successful retries *and* kept-previous-basis fallbacks).
+    pub refresh_fallbacks: u64,
+    /// Periodic snapshots written.
+    pub checkpoints_saved: u64,
+    /// Torn/corrupt snapshots skipped while resuming or rolling back.
+    pub checkpoints_skipped: u64,
+}
+
+impl ResilienceReport {
+    /// True when every recovery path stayed quiet (healthy run).
+    pub fn is_clean(&self) -> bool {
+        self.skipped_steps == 0
+            && self.rollbacks == 0
+            && self.refresh_fallbacks == 0
+            && self.checkpoints_skipped == 0
+    }
+
+    /// One-line summary for the end-of-run report.
+    pub fn row(&self) -> String {
+        format!(
+            "resilience: skipped {}  rollbacks {}  refresh fallbacks {}  \
+             ckpts saved {}  ckpts skipped {}",
+            self.skipped_steps,
+            self.rollbacks,
+            self.refresh_fallbacks,
+            self.checkpoints_saved,
+            self.checkpoints_skipped
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_steps_proceed_and_reset_the_streak() {
+        let mut g = AnomalyGuard::new(3);
+        assert_eq!(g.inspect(2.5, 1.0), StepVerdict::Proceed);
+        assert_eq!(g.inspect(f32::NAN, 1.0), StepVerdict::Skip);
+        assert_eq!(g.inspect(1.9, f32::INFINITY as f64), StepVerdict::Skip);
+        assert_eq!(g.consecutive_skips(), 2);
+        // one healthy step resets the escalation window
+        assert_eq!(g.inspect(1.8, 0.9), StepVerdict::Proceed);
+        assert_eq!(g.consecutive_skips(), 0);
+        assert_eq!(g.inspect(f32::NAN, 1.0), StepVerdict::Skip);
+        assert_eq!(g.inspect(f32::NAN, 1.0), StepVerdict::Skip);
+        assert_eq!(g.inspect(f32::NAN, 1.0), StepVerdict::Rollback);
+        // post-rollback the streak starts fresh
+        assert_eq!(g.consecutive_skips(), 0);
+        assert_eq!(g.inspect(f32::NAN, 1.0), StepVerdict::Skip);
+    }
+
+    #[test]
+    fn nan_grad_norm_alone_is_anomalous() {
+        let mut g = AnomalyGuard::new(2);
+        assert_eq!(g.inspect(1.0, f64::NAN), StepVerdict::Skip);
+        assert_eq!(g.inspect(1.0, f64::NAN), StepVerdict::Rollback);
+    }
+
+    #[test]
+    fn zero_threshold_never_escalates() {
+        let mut g = AnomalyGuard::new(0);
+        for _ in 0..100 {
+            assert_eq!(g.inspect(f32::NAN, 1.0), StepVerdict::Skip);
+        }
+    }
+
+    #[test]
+    fn report_row_and_cleanliness() {
+        let mut r = ResilienceReport::default();
+        assert!(r.is_clean());
+        r.skipped_steps = 2;
+        r.refresh_fallbacks = 1;
+        assert!(!r.is_clean());
+        let row = r.row();
+        assert!(row.contains("skipped 2"), "{row}");
+        assert!(row.contains("refresh fallbacks 1"), "{row}");
+        // saved checkpoints alone don't make a run unhealthy
+        let r = ResilienceReport { checkpoints_saved: 5, ..Default::default() };
+        assert!(r.is_clean());
+    }
+}

@@ -24,6 +24,7 @@ impl GoLore {
 /// Captured state for one scheduled GoLore refresh: the RNG clone. The
 /// gradient snapshot rides along only for shape (the sketch is
 /// gradient-independent by construction).
+#[derive(Clone)]
 pub(super) struct GoLoreJob {
     rng: Pcg64,
 }

@@ -54,6 +54,12 @@ use std::time::Instant;
 /// `Send`, it owns the gradient snapshot plus whatever per-refresh state
 /// the selector captured (RNG clone, online-PCA basis). Created by
 /// [`Selector::begin_refresh`]; consumed by [`RefreshJob::run`].
+/// `Clone` exists for supervision: the refresh watchdog keeps a copy of
+/// every job it sends to a background worker so a panicked or timed-out
+/// run can be retried inline from the *identical* captured state (same
+/// gradient snapshot, same RNG clone) — a masked fault is then bit-for-bit
+/// invisible in the training trajectory.
+#[derive(Clone)]
 pub struct RefreshJob {
     grad: Matrix,
     rank: usize,
@@ -65,6 +71,7 @@ pub struct RefreshJob {
 /// what the selector itself must copy, and `install` dispatch stays
 /// compile-checked). Module-private: child selector modules construct it,
 /// the rest of the crate sees [`RefreshJob`] opaquely.
+#[derive(Clone)]
 enum JobKind {
     Dominant,
     Sara(sara::SaraJob),

@@ -29,6 +29,7 @@ impl OnlinePca {
 /// basis (re)initialization) and a copy of the running basis. Sound to
 /// defer because at most one job per layer is in flight — the basis the
 /// job evolves is installed before the next one is captured.
+#[derive(Clone)]
 pub(super) struct OnlinePcaJob {
     rng: Pcg64,
     basis: Option<Matrix>,

@@ -35,6 +35,7 @@ impl Sara {
 /// RNG stream, taken in schedule order. The job draws from the clone and
 /// hands the advanced stream back via [`SaraUpdate`], so deferred execution
 /// consumes the stream exactly as the classic inline refresh did.
+#[derive(Clone)]
 pub(super) struct SaraJob {
     rng: Pcg64,
 }

@@ -6,21 +6,73 @@
 //! Format v2 (`SARACKP2`) adds a dist-worker-count header field so sharded
 //! runs restore onto the same topology (mismatch is a clean error via
 //! [`Checkpoint::ensure_world`]), and the f32 payload is written/read as
-//! chunked little-endian byte slices (one buffered syscall-sized write per
-//! ~64 KiB instead of one `write_all` per value — the old encoding's
-//! dominant cost). The payload byte layout is unchanged, so v1 files
-//! (`SARACKP1`, no dist field) still load.
+//! chunked little-endian byte slices. v1 files (`SARACKP1`) still load.
+//!
+//! ## Format v3 (`SARACKP3`) — crash-consistent snapshots
+//!
+//! v3 is what [`Checkpoint::save`] now writes; v1/v2 still load. Three
+//! properties make a v3 snapshot safe to auto-resume from:
+//!
+//! * **Atomic writes**: the file is written to `<name>.tmp` in the target
+//!   directory, fsync'd, then renamed over the final path (and the
+//!   directory fsync'd). A crash at any point leaves either the previous
+//!   snapshot or a stray `.tmp` — never a half-written file at a `.ckpt`
+//!   path.
+//! * **Integrity**: the run header, every tensor header, and every 64 KiB
+//!   payload chunk carry a CRC-32 ([`crate::util::crc32`], vendored), and
+//!   the file ends with a `SARAEND3` trailer. Torn tails, bit flips, and
+//!   truncations are detected at load as clean `Err`s.
+//! * **Retention + fallback**: [`CheckpointManager`] keeps the last N
+//!   snapshots (`step-XXXXXXXX.ckpt`) and [`Checkpoint::load_latest_valid`]
+//!   walks them newest-first, skipping any file that fails validation, so
+//!   a torn newest snapshot degrades to the previous good one instead of
+//!   killing the resume.
+//!
+//! Headers are treated as untrusted on *every* version: shape products use
+//! checked arithmetic, the total payload is capped, and per-tensor
+//! preallocation is bounded, so a corrupt file errors instead of aborting
+//! on OOM.
+
+use crate::util::crc32::crc32;
+use crate::warn_log;
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::path::{Path, PathBuf};
 
 use crate::runtime::Tensor;
-use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
-use std::path::Path;
 
 const MAGIC_V1: &[u8; 8] = b"SARACKP1";
 const MAGIC_V2: &[u8; 8] = b"SARACKP2";
+const MAGIC_V3: &[u8; 8] = b"SARACKP3";
+const TRAILER_V3: &[u8; 8] = b"SARAEND3";
 
 /// Payload chunk size in f32 elements (64 KiB of bytes per chunk).
 const CHUNK_ELEMS: usize = 16 * 1024;
+
+/// Cap on the total f32 payload a single checkpoint may declare (2 GiB of
+/// bytes). Headers are untrusted; anything larger is corrupt, not data.
+const MAX_PAYLOAD_ELEMS: u64 = 1 << 29;
+
+/// Cap on the per-tensor `Vec` preallocation (4 MiB of f32s). A corrupt
+/// header under the payload cap still only preallocates this much; the
+/// vector grows amortized past it, and a truncated file fails `read_exact`
+/// long before memory becomes a problem.
+const PREALLOC_CAP_ELEMS: usize = 1 << 20;
+
+/// Fault-injection hook for the save path (driven by
+/// `resilience::inject`; never constructed in production configs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SaveFault {
+    /// Abort the process partway through writing the temp file — a
+    /// deterministic stand-in for `kill -9` mid-checkpoint. The atomic
+    /// rename never happens, so the final path keeps its previous content
+    /// (or stays absent).
+    CrashMidWrite,
+    /// Write a truncated copy directly at the final path, simulating a
+    /// torn write on a filesystem without atomic-rename semantics. The
+    /// call reports success; detection is the loader's job.
+    TornFinal,
+}
 
 /// Saved training state.
 pub struct Checkpoint {
@@ -28,6 +80,14 @@ pub struct Checkpoint {
     /// Data-parallel world size of the producing run (v1 files: 1).
     pub dist_workers: u32,
     pub params: Vec<Tensor>,
+}
+
+/// Result of [`Checkpoint::load_latest_valid`]: the newest snapshot that
+/// passed validation, plus how many newer corrupt/torn files were skipped.
+pub struct LatestValid {
+    pub checkpoint: Checkpoint,
+    pub path: PathBuf,
+    pub skipped: usize,
 }
 
 impl Checkpoint {
@@ -51,28 +111,91 @@ impl Checkpoint {
         Ok(())
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = std::io::BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("{path:?}"))?,
-        );
-        w.write_all(MAGIC_V2)?;
-        w.write_all(&(self.step as u64).to_le_bytes())?;
-        w.write_all(&self.dist_workers.to_le_bytes())?;
-        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+    /// Serialize as format v3 (header/tensor/chunk CRCs + trailer).
+    fn encode(&self) -> Vec<u8> {
+        let payload: usize = self.params.iter().map(|t| t.data.len()).sum();
+        let mut out = Vec::with_capacity(payload * 4 + 256);
+        out.extend_from_slice(MAGIC_V3);
+        let hdr_start = out.len();
+        out.extend_from_slice(&(self.step as u64).to_le_bytes());
+        out.extend_from_slice(&self.dist_workers.to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        let hdr_crc = crc32(&out[hdr_start..]);
+        out.extend_from_slice(&hdr_crc.to_le_bytes());
         let mut buf = vec![0u8; CHUNK_ELEMS * 4];
         for t in &self.params {
-            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            let th_start = out.len();
+            out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
             for &d in &t.shape {
-                w.write_all(&(d as u64).to_le_bytes())?;
+                out.extend_from_slice(&(d as u64).to_le_bytes());
             }
+            let th_crc = crc32(&out[th_start..]);
+            out.extend_from_slice(&th_crc.to_le_bytes());
             for chunk in t.data.chunks(CHUNK_ELEMS) {
                 for (i, &v) in chunk.iter().enumerate() {
                     buf[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
                 }
-                w.write_all(&buf[..chunk.len() * 4])?;
+                let bytes = &buf[..chunk.len() * 4];
+                out.extend_from_slice(bytes);
+                out.extend_from_slice(&crc32(bytes).to_le_bytes());
+            }
+        }
+        out.extend_from_slice(TRAILER_V3);
+        out
+    }
+
+    /// Crash-consistent save: encode, write to a sibling `.tmp`, fsync,
+    /// rename over `path`, fsync the directory. Readers never observe a
+    /// partially written `.ckpt`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_with_fault(path, None)
+    }
+
+    /// [`Checkpoint::save`] with an optional injected fault (test/smoke
+    /// harness only — see [`SaveFault`]).
+    pub fn save_with_fault(&self, path: &Path, fault: Option<SaveFault>) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let bytes = self.encode();
+        match fault {
+            Some(SaveFault::TornFinal) => {
+                // torn write at the final path: most of the file, no tail
+                let cut = bytes.len() - bytes.len() / 3;
+                std::fs::write(path, &bytes[..cut])
+                    .with_context(|| format!("{path:?}"))?;
+                return Ok(());
+            }
+            Some(SaveFault::CrashMidWrite) => {
+                // half the temp file hits disk, then the process dies; the
+                // rename below is never reached
+                let tmp = tmp_path(path);
+                let mut f = std::fs::File::create(&tmp)
+                    .with_context(|| format!("{tmp:?}"))?;
+                f.write_all(&bytes[..bytes.len() / 2])?;
+                let _ = f.sync_all();
+                std::process::abort();
+            }
+            None => {}
+        }
+        let tmp = tmp_path(path);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("{tmp:?}"))?;
+            f.write_all(&bytes)?;
+            f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        // fsync the directory so the rename itself is durable (best-effort:
+        // not every platform allows opening a directory)
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
             }
         }
         Ok(())
@@ -84,33 +207,34 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        let versioned = match &magic {
-            m if m == MAGIC_V1 => false,
-            m if m == MAGIC_V2 => true,
+        match &magic {
+            m if m == MAGIC_V1 => Self::load_legacy(&mut r, false),
+            m if m == MAGIC_V2 => Self::load_legacy(&mut r, true),
+            m if m == MAGIC_V3 => Self::load_v3(&mut r),
             _ => bail!("{path:?} is not a SARA checkpoint"),
-        };
-        let step = read_u64(&mut r)? as usize;
-        let dist_workers = if versioned { read_u32(&mut r)? } else { 1 };
+        }
+        .with_context(|| format!("{path:?}"))
+    }
+
+    /// v1/v2 reader: no integrity data, but headers are still untrusted
+    /// (checked shape products, payload cap, bounded preallocation).
+    fn load_legacy<R: Read>(r: &mut R, versioned: bool) -> Result<Self> {
+        let step = read_u64(r)? as usize;
+        let dist_workers = if versioned { read_u32(r)? } else { 1 };
         if dist_workers == 0 || dist_workers > 1 << 20 {
             bail!("implausible dist worker count {dist_workers}");
         }
-        let nparams = read_u32(&mut r)? as usize;
+        let nparams = read_u32(r)? as usize;
         if nparams > 1_000_000 {
             bail!("implausible param count {nparams}");
         }
         let mut buf = vec![0u8; CHUNK_ELEMS * 4];
-        let mut params = Vec::with_capacity(nparams);
+        let mut params = Vec::with_capacity(nparams.min(4096));
+        let mut total_elems = 0u64;
         for _ in 0..nparams {
-            let rank = read_u32(&mut r)? as usize;
-            if rank > 8 {
-                bail!("implausible tensor rank {rank}");
-            }
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(read_u64(&mut r)? as usize);
-            }
-            let numel: usize = shape.iter().product();
-            let mut data = Vec::with_capacity(numel);
+            let shape = read_shape(r)?;
+            let numel = checked_numel(&shape, &mut total_elems)?;
+            let mut data = Vec::with_capacity(numel.min(PREALLOC_CAP_ELEMS));
             let mut remaining = numel;
             while remaining > 0 {
                 let n = remaining.min(CHUNK_ELEMS);
@@ -124,6 +248,205 @@ impl Checkpoint {
         }
         Ok(Self { step, dist_workers, params })
     }
+
+    /// v3 reader: verify the header CRC, every tensor-header CRC, every
+    /// chunk CRC, and the trailer. Any mismatch or short read is a clean
+    /// `Err` — this is what makes [`Checkpoint::load_latest_valid`] able
+    /// to tell a torn file from a good one.
+    fn load_v3<R: Read>(r: &mut R) -> Result<Self> {
+        let mut hdr = [0u8; 16];
+        r.read_exact(&mut hdr)?;
+        if read_u32(r)? != crc32(&hdr) {
+            bail!("checkpoint header CRC mismatch (torn or corrupt file)");
+        }
+        let step = u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize;
+        let dist_workers = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        let nparams = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+        if dist_workers == 0 || dist_workers > 1 << 20 {
+            bail!("implausible dist worker count {dist_workers}");
+        }
+        if nparams > 1_000_000 {
+            bail!("implausible param count {nparams}");
+        }
+        let mut buf = vec![0u8; CHUNK_ELEMS * 4];
+        let mut params = Vec::with_capacity(nparams.min(4096));
+        let mut total_elems = 0u64;
+        for pi in 0..nparams {
+            // re-serialize the tensor header to checksum it
+            let mut th = Vec::with_capacity(4 + 8 * 8);
+            let rank = read_u32(r)?;
+            th.extend_from_slice(&rank.to_le_bytes());
+            if rank > 8 {
+                bail!("implausible tensor rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank as usize);
+            for _ in 0..rank {
+                let d = read_u64(r)?;
+                th.extend_from_slice(&d.to_le_bytes());
+                shape.push(d as usize);
+            }
+            if read_u32(r)? != crc32(&th) {
+                bail!("tensor {pi} header CRC mismatch");
+            }
+            let numel = checked_numel(&shape, &mut total_elems)?;
+            let mut data = Vec::with_capacity(numel.min(PREALLOC_CAP_ELEMS));
+            let mut remaining = numel;
+            while remaining > 0 {
+                let n = remaining.min(CHUNK_ELEMS);
+                r.read_exact(&mut buf[..n * 4])?;
+                if read_u32(r)? != crc32(&buf[..n * 4]) {
+                    bail!("tensor {pi} payload chunk CRC mismatch");
+                }
+                data.extend(buf[..n * 4].chunks_exact(4).map(|c| {
+                    f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                }));
+                remaining -= n;
+            }
+            params.push(Tensor::from_vec(&shape, data));
+        }
+        let mut trailer = [0u8; 8];
+        r.read_exact(&mut trailer)?;
+        if &trailer != TRAILER_V3 {
+            bail!("checkpoint trailer missing (truncated file)");
+        }
+        Ok(Self { step, dist_workers, params })
+    }
+
+    /// Walk `dir`'s `*.ckpt` files newest-first (the
+    /// [`CheckpointManager`] naming embeds the step, so lexicographic
+    /// order is step order) and return the first that validates, counting
+    /// the torn/corrupt files skipped on the way. `Ok(None)` when the
+    /// directory is missing or holds no loadable snapshot.
+    pub fn load_latest_valid(dir: &Path) -> Result<Option<LatestValid>> {
+        let entries = match std::fs::read_dir(dir) {
+            Err(e) if e.kind() == ErrorKind::NotFound => return Ok(None),
+            other => other.with_context(|| format!("{dir:?}"))?,
+        };
+        let mut files: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "ckpt").unwrap_or(false))
+            .collect();
+        files.sort();
+        let mut skipped = 0usize;
+        for path in files.into_iter().rev() {
+            match Self::load(&path) {
+                Ok(checkpoint) => {
+                    return Ok(Some(LatestValid { checkpoint, path, skipped }))
+                }
+                Err(e) => {
+                    warn_log!(
+                        "ckpt",
+                        "skipping invalid snapshot {path:?}: {e:#}"
+                    );
+                    skipped += 1;
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// Periodic-snapshot policy: step-stamped filenames in one directory,
+/// atomic saves, keep-last-N pruning (plus stray `.tmp` cleanup from
+/// crashed writers). The write path accepts an injected [`SaveFault`] so
+/// the crash-recovery smoke and the fault-injection tests drive the exact
+/// production code.
+pub struct CheckpointManager {
+    dir: PathBuf,
+    keep_last: usize,
+}
+
+impl CheckpointManager {
+    /// Manage snapshots under `dir`, retaining the newest `keep_last`
+    /// (minimum 1 — retention keeping zero snapshots would make every
+    /// rollback impossible).
+    pub fn new(dir: impl Into<PathBuf>, keep_last: usize) -> Self {
+        Self { dir: dir.into(), keep_last: keep_last.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// `<dir>/step-XXXXXXXX.ckpt` — zero-padded so lexicographic order is
+    /// step order (what `load_latest_valid` relies on).
+    pub fn path_for_step(&self, step: usize) -> PathBuf {
+        self.dir.join(format!("step-{step:08}.ckpt"))
+    }
+
+    /// Atomically save `ck` (at its step-stamped path) and prune old
+    /// snapshots beyond the retention window.
+    pub fn save(&self, ck: &Checkpoint, fault: Option<SaveFault>) -> Result<PathBuf> {
+        let path = self.path_for_step(ck.step);
+        ck.save_with_fault(&path, fault)?;
+        self.prune()?;
+        Ok(path)
+    }
+
+    fn prune(&self) -> Result<()> {
+        let entries = match std::fs::read_dir(&self.dir) {
+            Err(e) if e.kind() == ErrorKind::NotFound => return Ok(()),
+            other => other?,
+        };
+        let mut ckpts = Vec::new();
+        for e in entries.filter_map(|e| e.ok()) {
+            let p = e.path();
+            match p.extension() {
+                Some(x) if x == "ckpt" => ckpts.push(p),
+                // a stray temp file is a crashed writer's leftover
+                Some(x) if x == "tmp" => {
+                    let _ = std::fs::remove_file(&p);
+                }
+                _ => {}
+            }
+        }
+        ckpts.sort();
+        let n = ckpts.len();
+        for old in ckpts.into_iter().take(n.saturating_sub(self.keep_last)) {
+            std::fs::remove_file(&old)
+                .with_context(|| format!("prune {old:?}"))?;
+        }
+        Ok(())
+    }
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Read a tensor shape header (rank + dims) with the rank cap applied.
+fn read_shape<R: Read>(r: &mut R) -> Result<Vec<usize>> {
+    let rank = read_u32(r)? as usize;
+    if rank > 8 {
+        bail!("implausible tensor rank {rank}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u64(r)? as usize);
+    }
+    Ok(shape)
+}
+
+/// Element count of an untrusted shape: checked product, and a running
+/// whole-file payload cap so a corrupt header can't demand gigabytes.
+fn checked_numel(shape: &[usize], total: &mut u64) -> Result<usize> {
+    let numel = shape
+        .iter()
+        .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+        .filter(|&n| n <= MAX_PAYLOAD_ELEMS)
+        .ok_or_else(|| {
+            anyhow::anyhow!("implausible tensor shape {shape:?} (overflow)")
+        })?;
+    *total = total
+        .checked_add(numel)
+        .filter(|&t| t <= MAX_PAYLOAD_ELEMS)
+        .ok_or_else(|| {
+            anyhow::anyhow!("checkpoint payload exceeds {MAX_PAYLOAD_ELEMS} elements")
+        })?;
+    Ok(numel as usize)
 }
 
 fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
@@ -148,6 +471,13 @@ mod tests {
         dir.join(name)
     }
 
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sara_ckpt_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     fn big_params() -> Vec<Tensor> {
         // > CHUNK_ELEMS elements so the chunked path splits the payload
         let n = CHUNK_ELEMS + 123;
@@ -169,12 +499,14 @@ mod tests {
         assert_eq!(back.step, 1234);
         assert_eq!(back.dist_workers, 2);
         assert_eq!(back.params, params);
+        // atomic save leaves no temp file behind
+        assert!(!tmp_path(&p).exists());
     }
 
     #[test]
     fn v1_files_still_load_with_implied_single_worker() {
         // hand-write the legacy encoding: magic v1, step, nparams, then
-        // per tensor rank/dims/payload (same payload byte layout as v2)
+        // per tensor rank/dims/payload
         let p = tmp("legacy.ckpt");
         let mut bytes = Vec::new();
         bytes.extend_from_slice(MAGIC_V1);
@@ -192,6 +524,26 @@ mod tests {
         assert_eq!(ck.dist_workers, 1);
         assert_eq!(ck.params[0].data, vec![1.0, 2.0, 3.0, 4.0]);
         assert!(ck.ensure_world(1).is_ok());
+    }
+
+    #[test]
+    fn v2_files_still_load() {
+        // hand-write the v2 encoding (magic v2 + dist field, no CRCs)
+        let p = tmp("v2.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&10u64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // dist_workers
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // nparams
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        for v in [5.0f32, 6.0, 7.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let ck = Checkpoint::load(&p).unwrap();
+        assert_eq!((ck.step, ck.dist_workers), (10, 2));
+        assert_eq!(ck.params[0].data, vec![5.0, 6.0, 7.0]);
     }
 
     #[test]
@@ -219,5 +571,117 @@ mod tests {
     #[test]
     fn missing_file_is_error() {
         assert!(Checkpoint::load(Path::new("/nonexistent/x.ckpt")).is_err());
+    }
+
+    #[test]
+    fn legacy_header_with_overflowing_shape_errors_cleanly() {
+        // satellite bugfix: `shape.iter().product()` used to trust this
+        // header and ask the allocator for usize::MAX-ish elements
+        let p = tmp("overflow.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("implausible tensor shape"), "{err}");
+    }
+
+    #[test]
+    fn legacy_header_exceeding_payload_cap_errors_cleanly() {
+        let p = tmp("hugedim.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        bytes.extend_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn v3_detects_payload_bit_flip() {
+        let ck = Checkpoint::new(3, big_params());
+        let p = tmp("bitflip.ckpt");
+        ck.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&p, bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn v3_detects_truncation() {
+        let ck = Checkpoint::new(4, big_params());
+        let p = tmp("truncated.ckpt");
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn torn_final_fault_writes_an_invalid_file() {
+        let ck = Checkpoint::new(9, big_params());
+        let p = tmp("torn.ckpt");
+        ck.save_with_fault(&p, Some(SaveFault::TornFinal)).unwrap();
+        assert!(p.exists());
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn load_latest_valid_picks_newest_good_snapshot() {
+        let dir = tmp_dir("latest_valid");
+        let mgr = CheckpointManager::new(&dir, 10);
+        let small = vec![Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0])];
+        mgr.save(&Checkpoint::new(10, small.clone()), None).unwrap();
+        mgr.save(&Checkpoint::new(20, small.clone()), None).unwrap();
+        // the newest snapshot is torn — resume must fall back to step 20
+        mgr.save(&Checkpoint::new(30, small), Some(SaveFault::TornFinal))
+            .unwrap();
+        let got = Checkpoint::load_latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(got.checkpoint.step, 20);
+        assert_eq!(got.skipped, 1);
+        assert!(got.path.ends_with("step-00000020.ckpt"));
+    }
+
+    #[test]
+    fn load_latest_valid_handles_missing_and_empty_dirs() {
+        assert!(Checkpoint::load_latest_valid(Path::new(
+            "/nonexistent/ckpt-dir"
+        ))
+        .unwrap()
+        .is_none());
+        let dir = tmp_dir("empty");
+        assert!(Checkpoint::load_latest_valid(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn retention_keeps_last_n_and_sweeps_tmp_files() {
+        let dir = tmp_dir("retention");
+        let mgr = CheckpointManager::new(&dir, 2);
+        let small = vec![Tensor::from_vec(&[2], vec![1.0, 2.0])];
+        // a stray temp file from a "crashed" writer
+        std::fs::write(dir.join("step-00000001.ckpt.tmp"), b"junk").unwrap();
+        for step in [1usize, 2, 3, 4] {
+            mgr.save(&Checkpoint::new(step, small.clone()), None).unwrap();
+        }
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["step-00000003.ckpt", "step-00000004.ckpt"]);
+        let got = Checkpoint::load_latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(got.checkpoint.step, 4);
     }
 }

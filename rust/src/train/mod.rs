@@ -49,12 +49,31 @@
 //! of Algorithm 1 is unchanged and `L = 0` reproduces the classic inline
 //! refresh bit-for-bit. Per-layer refresh counts and cumulative refresh
 //! compute time are surfaced in the periodic log line.
+//!
+//! ## Fault tolerance
+//!
+//! The loop implements the resilience contract of [`crate::resilience`]:
+//! each step's loss and pre-clip gradient norm pass through an
+//! [`AnomalyGuard`] (non-finite ⇒ the update is discarded but step/LR/
+//! stream bookkeeping advances; `K` consecutive skips ⇒ automatic rollback
+//! to the newest valid snapshot, at most `max_rollbacks` per run);
+//! periodic checkpoints are crash-consistent v3 snapshots managed by a
+//! [`CheckpointManager`] (`[resilience] ckpt_dir` / `ckpt_every`), with
+//! `--resume` auto-restoring from [`Checkpoint::load_latest_valid`] and
+//! fast-forwarding the data streams so a resumed trajectory is
+//! bit-identical to an uninterrupted one (weights + step + streams are
+//! restored exactly; optimizer/projector state restarts cold — subspace
+//! refreshes are restartable by construction); and background refresh
+//! joins are watchdog-supervised inside [`crate::optim::LowRankState`].
+//! The deterministic fault-injection harness
+//! ([`crate::resilience::inject`], default off) drives every one of these
+//! paths in tests and the tier-1 crash smoke.
 
 pub mod checkpoint;
 pub mod probe;
 pub mod schedule;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointManager, LatestValid, SaveFault};
 pub use probe::{DeltaSpectrumProbe, SubspaceProbe};
 pub use schedule::CosineSchedule;
 
@@ -63,10 +82,12 @@ use crate::data::{CorpusProfile, StreamingLoader};
 use crate::dist::{BucketedAllReduce, DistReport, ShardedState, Topology};
 use crate::linalg::Matrix;
 use crate::optim::ParamOptimizer;
-use crate::runtime::{Engine, ParamKind, Tensor};
+use crate::resilience::inject::{FaultPlan, RefreshFault};
+use crate::resilience::{AnomalyGuard, ResilienceReport, StepVerdict};
+use crate::runtime::{Engine, Manifest, ParamKind, Tensor};
 use crate::selector::make_selector;
 use crate::util::pool::{SendPtr, WorkerPool};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::OnceLock;
 
 /// Final result of a training run.
@@ -83,6 +104,9 @@ pub struct TrainResult {
     /// Dist-substrate observability (world size, per-rank state bytes,
     /// reduce time, refreshes owned).
     pub dist: DistReport,
+    /// Recovery counters (skips, rollbacks, watchdog fallbacks, snapshot
+    /// saves/skips). All-zero except `checkpoints_saved` in a healthy run.
+    pub resilience: ResilienceReport,
 }
 
 /// Optional probe bundle threaded into [`Trainer::train`].
@@ -130,6 +154,27 @@ pub struct Trainer {
     /// Pre-clip global gradient norm of the most recent step.
     last_grad_norm: f64,
     step: usize,
+    /// Per-step non-finite sentinel with skip/rollback escalation.
+    guard: AnomalyGuard,
+    /// Trainer-side resilience counters (watchdog fallbacks are merged in
+    /// from the optimizers by [`Trainer::resilience_report`]).
+    report: ResilienceReport,
+    /// Armed fault-injection plan (`[fault]` / `SARA_FAULT=`; None = off,
+    /// in which case no fault code runs at all).
+    fault: Option<FaultPlan>,
+    /// Crash-consistent snapshot writer (None without `ckpt_dir`).
+    ckpt_mgr: Option<CheckpointManager>,
+    /// Background refresh launches so far — the index space
+    /// `panic_refresh@N` / `slow_refresh@N` faults address.
+    refresh_launches: usize,
+    /// Periodic checkpoint saves so far — the index space `torn_ckpt@N` /
+    /// `crash_ckpt@N` faults address.
+    ckpt_saves: usize,
+    /// A periodic snapshot is due but was deferred past an in-flight
+    /// background refresh; caught up on the next step.
+    ckpt_due: bool,
+    /// Rollbacks performed this run (bounded by `max_rollbacks`).
+    rollbacks_done: usize,
 }
 
 impl Trainer {
@@ -139,23 +184,14 @@ impl Trainer {
         crate::linalg::set_kernel(cfg.linalg.kernel);
         let params = engine.init_params(cfg.seed);
         let man = &engine.manifest;
-        let mut opts = Vec::with_capacity(man.params.len());
-        let mut deltas = Vec::with_capacity(man.params.len());
-        for (i, info) in man.params.iter().enumerate() {
-            let (rows, cols) = matrix_dims(&info.shape);
-            let use_lowrank = cfg.optim.wrapper != WrapperKind::FullRank
-                && info.kind == ParamKind::Matrix;
-            let opt = if use_lowrank {
-                let sel = make_selector(cfg.optim.selector, cfg.seed, i);
-                ParamOptimizer::low_rank(rows, cols, &cfg.optim, sel)
-            } else {
-                // norms/embeddings (and the full-rank baseline) use the
-                // inner optimizer directly, per GaLore's convention
-                ParamOptimizer::full(rows, cols, &cfg.optim)
-            };
-            opts.push(opt);
-            deltas.push(Matrix::zeros(rows, cols));
-        }
+        let deltas: Vec<Matrix> = man
+            .params
+            .iter()
+            .map(|info| {
+                let (rows, cols) = matrix_dims(&info.shape);
+                Matrix::zeros(rows, cols)
+            })
+            .collect();
         let schedule = CosineSchedule::new(
             cfg.lr,
             cfg.warmup_steps,
@@ -179,9 +215,7 @@ impl Trainer {
             profile, man.vocab, cfg.seed, 1_000_000, batch, seqp1, 2,
         );
         let pool = WorkerPool::with_default_threads();
-        let weights: Vec<usize> =
-            opts.iter().map(|o| o.state_bytes()).collect();
-        let sharded = ShardedState::new(opts, Topology::new(world, &weights));
+        let sharded = build_sharded(man, &cfg);
         let sizes: Vec<usize> =
             man.params.iter().map(|p| p.shape.iter().product()).collect();
         let reducer =
@@ -195,6 +229,18 @@ impl Trainer {
         // previous trainer left behind on a reused engine, so this
         // trainer's fresh init_params can never be shadowed by stale ones.
         engine.set_param_cache(cfg.runtime.param_cache);
+        // resilience wiring: fault plan (env > config, default none),
+        // checkpoint policy, anomaly guard
+        let fault = FaultPlan::resolve(&cfg.fault)?;
+        let ckpt_mgr = if cfg.resilience.ckpt_dir.is_empty() {
+            None
+        } else {
+            Some(CheckpointManager::new(
+                cfg.resilience.ckpt_dir.clone(),
+                cfg.resilience.keep_last,
+            ))
+        };
+        let guard = AnomalyGuard::new(cfg.resilience.max_consecutive_skips);
         Ok(Self {
             engine,
             cfg,
@@ -213,6 +259,14 @@ impl Trainer {
             touched: vec![true; n_params],
             last_grad_norm: 0.0,
             step: 0,
+            guard,
+            report: ResilienceReport::default(),
+            fault,
+            ckpt_mgr,
+            refresh_launches: 0,
+            ckpt_saves: 0,
+            ckpt_due: false,
+            rollbacks_done: 0,
         })
     }
 
@@ -244,10 +298,52 @@ impl Trainer {
     }
 
     /// One full optimizer step; returns the train loss.
+    ///
+    /// The anomaly guard inspects every step's loss and pre-clip gradient
+    /// norm: a non-finite step is *skipped* (update discarded; step/LR/
+    /// stream bookkeeping advances as usual) and a long enough skip streak
+    /// rolls the run back to the newest valid snapshot — after which
+    /// `self.step` has moved *backwards* and the caller replays forward.
     pub fn step_once(&mut self) -> Result<f32> {
         let loss = self.compute_gradients()?;
+        if let Some(plan) = self.fault.as_mut() {
+            if plan.apply_nan_grad(self.step, &mut self.reduced) {
+                crate::warn_log!(
+                    "train",
+                    "fault: NaN gradient injected at step {}",
+                    self.step
+                );
+            }
+        }
         self.last_grad_norm =
             clip_gradients(self.cfg.grad_clip, &mut self.reduced);
+        match self.guard.inspect(loss, self.last_grad_norm) {
+            StepVerdict::Proceed => {}
+            StepVerdict::Skip => {
+                self.report.skipped_steps += 1;
+                crate::warn_log!(
+                    "train",
+                    "step {}: non-finite loss/grad (loss {}, gnorm {}) — \
+                     update skipped ({} consecutive)",
+                    self.step,
+                    loss,
+                    self.last_grad_norm,
+                    self.guard.consecutive_skips()
+                );
+                self.step += 1;
+                return Ok(loss);
+            }
+            StepVerdict::Rollback => {
+                self.report.skipped_steps += 1;
+                crate::warn_log!(
+                    "train",
+                    "step {}: anomaly streak hit the rollback threshold",
+                    self.step
+                );
+                self.rollback()?;
+                return Ok(loss);
+            }
+        }
         let lr = self.schedule.lr(self.step) as f32;
 
         // per-parameter optimizer updates on the persistent pool, applied
@@ -264,8 +360,17 @@ impl Trainer {
         // refreshes due `refresh_lookahead` steps from now were scheduled
         // during the pass; the owning rank launches them on the pool's
         // background lane so their SVDs overlap with the next step's
-        // engine.train_step
-        self.sharded.launch_owned_refreshes(&self.pool);
+        // engine.train_step. The fault hook fires once per actual launch,
+        // numbering launches globally in parameter order — the index space
+        // `panic_refresh@N` / `slow_refresh@N` address.
+        let mut plan = self.fault.take();
+        let launches = &mut self.refresh_launches;
+        self.sharded.launch_owned_refreshes_with(&self.pool, &mut || {
+            let idx = *launches;
+            *launches += 1;
+            plan.as_mut().and_then(|p| p.take_refresh_fault(idx))
+        });
+        self.fault = plan;
         for (i, (p, d)) in
             self.params.iter_mut().zip(&self.deltas).enumerate()
         {
@@ -353,6 +458,167 @@ impl Trainer {
         self.engine.invalidate_param_cache();
     }
 
+    /// Roll the run back to the newest valid snapshot (the anomaly guard's
+    /// escalation). Bounded by `max_rollbacks`; fails cleanly when no
+    /// checkpointing is configured or no valid snapshot exists — dying
+    /// with a clear message beats silently training on poisoned weights.
+    fn rollback(&mut self) -> Result<()> {
+        self.report.rollbacks += 1;
+        self.rollbacks_done += 1;
+        if self.rollbacks_done > self.cfg.resilience.max_rollbacks {
+            bail!(
+                "anomaly guard requested rollback #{} but max_rollbacks = \
+                 {} — aborting run at step {}",
+                self.rollbacks_done,
+                self.cfg.resilience.max_rollbacks,
+                self.step
+            );
+        }
+        let Some(mgr) = self.ckpt_mgr.as_ref() else {
+            bail!(
+                "anomaly guard requested a rollback at step {} but no \
+                 checkpoint dir is configured ([resilience] ckpt_dir)",
+                self.step
+            );
+        };
+        let latest = Checkpoint::load_latest_valid(mgr.dir())?.ok_or_else(
+            || {
+                anyhow::anyhow!(
+                    "rollback at step {}: no valid snapshot in {:?}",
+                    self.step,
+                    mgr.dir()
+                )
+            },
+        )?;
+        self.report.checkpoints_skipped += latest.skipped as u64;
+        crate::info!(
+            "train",
+            "rolling back: step {} -> {} ({:?})",
+            self.step,
+            latest.checkpoint.step,
+            latest.path
+        );
+        self.restore_snapshot(latest.checkpoint)
+    }
+
+    /// Install a snapshot: exact weights + step; the sharded optimizer
+    /// bank is rebuilt cold (projectors re-bootstrap from the next
+    /// gradient — subspace refreshes are restartable by construction) and
+    /// the data streams are recreated and fast-forwarded so the replayed
+    /// trajectory consumes exactly the batches an uninterrupted run would.
+    fn restore_snapshot(&mut self, ck: Checkpoint) -> Result<()> {
+        ck.ensure_world(self.cfg.world())?;
+        let step = ck.step;
+        self.restore_params(ck.params);
+        self.sharded = build_sharded(&self.engine.manifest, &self.cfg);
+        self.reset_streams(step);
+        self.step = step;
+        Ok(())
+    }
+
+    /// Recreate the train/val loaders exactly as [`Trainer::new`] does and
+    /// fast-forward them to `step`: each train stream skips the `step`
+    /// batches already consumed, the val stream skips one eval's worth of
+    /// batches per completed eval point.
+    fn reset_streams(&mut self, step: usize) {
+        let man = &self.engine.manifest;
+        let profile = CorpusProfile::from_name(&self.cfg.dataset);
+        let (batch, seqp1) = (man.tokens_shape[0], man.tokens_shape[1]);
+        let (vocab, seed) = (man.vocab, self.cfg.seed);
+        let world = self.cfg.world();
+        self.loaders = (0..world)
+            .map(|w| {
+                StreamingLoader::new(
+                    profile, vocab, seed, w as u64, batch, seqp1, 4,
+                )
+            })
+            .collect();
+        self.val_loader = StreamingLoader::new(
+            profile, vocab, seed, 1_000_000, batch, seqp1, 2,
+        );
+        for loader in &self.loaders {
+            for _ in 0..step {
+                let _ = loader.next_batch();
+            }
+        }
+        let evals = match self.cfg.eval_every {
+            0 => 0,
+            every => step / every,
+        };
+        for _ in 0..evals * self.cfg.eval_batches.max(1) {
+            let _ = self.val_loader.next_batch();
+        }
+    }
+
+    /// Periodic crash-consistent snapshot. A due save is deferred while
+    /// any background refresh is in flight — the projector install first,
+    /// then the snapshot on the next step — so a snapshot never races a
+    /// refresh and the save index space stays deterministic.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let every = self.cfg.resilience.ckpt_every;
+        if every > 0 && self.step % every == 0 {
+            self.ckpt_due = true;
+        }
+        if !self.ckpt_due || self.ckpt_mgr.is_none() {
+            return Ok(());
+        }
+        if self.sharded.opts().iter().any(|o| o.has_pending_refresh()) {
+            return Ok(()); // defer past the in-flight refresh
+        }
+        self.ckpt_due = false;
+        let ck = Checkpoint {
+            step: self.step,
+            dist_workers: self.cfg.world() as u32,
+            params: self.params.clone(),
+        };
+        let fault = self
+            .fault
+            .as_mut()
+            .and_then(|p| p.take_ckpt_fault(self.ckpt_saves));
+        self.ckpt_saves += 1;
+        let mgr = self.ckpt_mgr.as_ref().expect("checked above");
+        let path = mgr.save(&ck, fault)?;
+        self.report.checkpoints_saved += 1;
+        crate::info!("train", "checkpoint: step {} -> {:?}", self.step, path);
+        Ok(())
+    }
+
+    /// `--resume`: before the first step, restore the newest valid
+    /// snapshot from the checkpoint dir. No-op when resume is off, the
+    /// run already started, or no snapshot exists yet (fresh start).
+    fn maybe_resume(&mut self) -> Result<()> {
+        if !self.cfg.resilience.resume || self.step != 0 {
+            return Ok(());
+        }
+        let Some(mgr) = self.ckpt_mgr.as_ref() else { return Ok(()) };
+        let Some(latest) = Checkpoint::load_latest_valid(mgr.dir())? else {
+            return Ok(());
+        };
+        self.report.checkpoints_skipped += latest.skipped as u64;
+        crate::info!(
+            "train",
+            "resume: step {} from {:?} ({} torn/corrupt snapshot(s) skipped)",
+            latest.checkpoint.step,
+            latest.path,
+            latest.skipped
+        );
+        self.restore_snapshot(latest.checkpoint)
+    }
+
+    /// Resilience counters for the final report: the trainer-side counts
+    /// plus the watchdog fallbacks accumulated inside the optimizers.
+    pub fn resilience_report(&self) -> ResilienceReport {
+        let mut r = self.report;
+        r.refresh_fallbacks = self.sharded.refresh_fallback_total();
+        r
+    }
+
+    /// Injected faults still armed (tests: a finished fault-matrix run
+    /// must have consumed every planned fault).
+    pub fn fault_remaining(&self) -> usize {
+        self.fault.as_ref().map_or(0, FaultPlan::remaining)
+    }
+
     /// Recover the engine (compiled executables) for reuse by the next run
     /// in a sweep — avoids recompiling the HLO per table row. The
     /// parameter cache is disabled on the way out: a raw engine has no one
@@ -385,18 +651,27 @@ impl Trainer {
             .map(|p| p.name.clone())
             .collect();
 
-        for t in 0..self.cfg.total_steps {
+        self.maybe_resume()?;
+        // `while` instead of `for`: a rollback rewinds `self.step` and the
+        // loop replays forward from the snapshot (a resume starts past 0)
+        while self.step < self.cfg.total_steps {
+            let step_before = self.step;
             let loss = self.step_once()?;
+            if self.step <= step_before {
+                continue; // rolled back — replay from the snapshot step
+            }
             losses.push(loss);
+            let t1 = self.step; // 1-based index of the step just taken
+            let t = t1 - 1;
 
-            if self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0 {
+            if self.cfg.eval_every > 0 && t1 % self.cfg.eval_every == 0 {
                 let vl = self.validate()?;
-                val_history.push((t + 1, vl));
+                val_history.push((t1, vl));
                 let (refreshes, refresh_ms) = self.refresh_totals();
                 crate::info!(
                     "train",
                     "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  gnorm {:.3}  lr {:.2e}  refr {}/layer {:.1}ms",
-                    t + 1,
+                    t1,
                     loss,
                     vl,
                     vl.exp(),
@@ -405,12 +680,12 @@ impl Trainer {
                     refreshes,
                     refresh_ms
                 );
-            } else if (t + 1) % 50 == 0 {
+            } else if t1 % 50 == 0 {
                 let (refreshes, refresh_ms) = self.refresh_totals();
                 crate::info!(
                     "train",
                     "step {:>6}  loss {:.4}  gnorm {:.3}  lr {:.2e}  refr {}/layer {:.1}ms",
-                    t + 1,
+                    t1,
                     loss,
                     self.last_grad_norm,
                     self.schedule.lr(t),
@@ -436,6 +711,8 @@ impl Trainer {
                     probes.delta_spectra_out = spectra;
                 }
             }
+
+            self.maybe_checkpoint()?;
         }
 
         let final_val = self.validate()?;
@@ -449,25 +726,56 @@ impl Trainer {
             wall_secs: t0.elapsed().as_secs_f64(),
             execute_secs: self.engine.execute_secs.get() - execute_at_start,
             dist: self.dist_report(),
+            resilience: self.resilience_report(),
         })
     }
 }
 
 /// Global-norm gradient clipping (in place). Returns the pre-clip norm.
 /// Free function so callers can clip a field they hold `&mut` to.
+///
+/// A non-finite norm (one NaN/Inf gradient element) leaves the gradients
+/// untouched: scaling by `clip / NaN` would turn *every* element of
+/// *every* gradient into NaN, converting a one-element glitch into
+/// whole-model poisoning. The caller's anomaly guard sees the returned
+/// norm and skips the step instead.
 pub fn clip_gradients(clip: f64, grads: &mut [Tensor]) -> f64 {
     let norm: f64 = grads
         .iter()
         .map(|g| g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>())
         .sum::<f64>()
         .sqrt();
-    if clip > 0.0 && norm > clip {
+    if norm.is_finite() && clip > 0.0 && norm > clip {
         let s = (clip / norm) as f32;
         for g in grads.iter_mut() {
             g.scale(s);
         }
     }
     norm
+}
+
+/// Build the sharded per-parameter optimizer bank for `cfg` — fresh, cold
+/// state. Used at construction and by [`Trainer::restore_snapshot`] when a
+/// rollback/resume reinstalls a snapshot (optimizer state restarts cold;
+/// projectors re-bootstrap from the next gradient).
+fn build_sharded(man: &Manifest, cfg: &RunConfig) -> ShardedState {
+    let mut opts = Vec::with_capacity(man.params.len());
+    for (i, info) in man.params.iter().enumerate() {
+        let (rows, cols) = matrix_dims(&info.shape);
+        let use_lowrank = cfg.optim.wrapper != WrapperKind::FullRank
+            && info.kind == ParamKind::Matrix;
+        let opt = if use_lowrank {
+            let sel = make_selector(cfg.optim.selector, cfg.seed, i);
+            ParamOptimizer::low_rank(rows, cols, &cfg.optim, sel)
+        } else {
+            // norms/embeddings (and the full-rank baseline) use the
+            // inner optimizer directly, per GaLore's convention
+            ParamOptimizer::full(rows, cols, &cfg.optim)
+        };
+        opts.push(opt);
+    }
+    let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+    ShardedState::new(opts, Topology::new(cfg.world(), &weights))
 }
 
 /// Matrix view dims for a tensor shape: 2-D as-is, anything else flattened
@@ -555,13 +863,41 @@ pub fn parallel_optimizer_step_marked(
 /// substrate's owner-attributed `dist::refresh::launch_owned_refreshes`
 /// delegate here, so the legacy and sharded paths cannot diverge.
 pub fn launch_refresh(pool: &WorkerPool, opt: &mut ParamOptimizer) -> bool {
-    if let Some(job) = opt.take_scheduled_refresh() {
-        let handle = pool.spawn_background(move || job.run());
-        opt.set_in_flight(handle);
-        true
-    } else {
-        false
-    }
+    launch_refresh_with(pool, opt, &mut || None)
+}
+
+/// [`launch_refresh`] with a fault hook: `fault()` is consulted exactly
+/// once per *actual* launch (so the trainer's closure can number launches
+/// globally and deterministically) and may turn the background job into a
+/// panicking or delayed one — the raw material the refresh watchdog in
+/// [`crate::optim::LowRankState`] recovers from. A clone of the job is
+/// parked alongside the handle as the watchdog's inline-retry copy; since
+/// `RefreshJob::run` is deterministic, a successful retry reproduces the
+/// faulted job's output bit-for-bit.
+pub fn launch_refresh_with(
+    pool: &WorkerPool,
+    opt: &mut ParamOptimizer,
+    fault: &mut dyn FnMut() -> Option<RefreshFault>,
+) -> bool {
+    let Some(job) = opt.take_scheduled_refresh() else {
+        return false;
+    };
+    let retry = job.clone();
+    let handle = match fault() {
+        Some(RefreshFault::Panic) => pool.spawn_background(
+            move || -> crate::selector::RefreshOutput {
+                drop(job);
+                panic!("injected refresh fault")
+            },
+        ),
+        Some(RefreshFault::Slow(delay)) => pool.spawn_background(move || {
+            std::thread::sleep(delay);
+            job.run()
+        }),
+        None => pool.spawn_background(move || job.run()),
+    };
+    opt.set_in_flight(handle, retry);
+    true
 }
 
 /// Move every refresh job scheduled by the optimizer pass that just ran

@@ -6,6 +6,7 @@
 pub mod alloc_count;
 pub mod bench;
 pub mod cli;
+pub mod crc32;
 pub mod json;
 pub mod log;
 pub mod pool;

@@ -45,6 +45,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{JoinHandle, ThreadId};
+use std::time::{Duration, Instant};
 
 thread_local! {
     /// True while this thread is executing inside a pool job (workers:
@@ -138,6 +139,22 @@ pub struct JobHandle<T> {
     slot: Arc<JobSlot<T>>,
 }
 
+/// Result of a timeout-aware join ([`JobHandle::join_outcome`]). Unlike
+/// [`JobHandle::join`], none of these variants unwind the caller — this is
+/// the supervision-friendly API the refresh watchdog is built on.
+pub enum JoinOutcome<T> {
+    /// The job finished normally.
+    Completed(T),
+    /// The job panicked; the panic payload is discarded rather than
+    /// re-raised, leaving recovery policy to the caller.
+    Panicked,
+    /// The deadline passed with the job still running. The handle is
+    /// handed back so the caller can keep waiting, poll later, or abandon
+    /// it (the job itself keeps running to completion on its worker — the
+    /// pool has no preemption, by design).
+    TimedOut(JobHandle<T>),
+}
+
 impl<T> JobHandle<T> {
     /// Has the job finished (successfully or by panicking)?
     pub fn is_finished(&self) -> bool {
@@ -167,6 +184,37 @@ impl<T> JobHandle<T> {
                     }
                 }
                 JobState::Pending => st = self.slot.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Wait up to `timeout` (forever when `None`) for the job, reporting
+    /// the outcome instead of unwinding: a panicked job yields
+    /// [`JoinOutcome::Panicked`], a missed deadline yields
+    /// [`JoinOutcome::TimedOut`] with the handle returned for reuse.
+    pub fn join_outcome(self, timeout: Option<Duration>) -> JoinOutcome<T> {
+        let deadline = timeout.map(|d| Instant::now() + d);
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, JobState::Pending) {
+                JobState::Done { result, .. } => {
+                    drop(st);
+                    return match result {
+                        Ok(v) => JoinOutcome::Completed(v),
+                        Err(_) => JoinOutcome::Panicked,
+                    };
+                }
+                JobState::Pending => match deadline {
+                    None => st = self.slot.cv.wait(st).unwrap(),
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            drop(st);
+                            return JoinOutcome::TimedOut(self);
+                        }
+                        st = self.slot.cv.wait_timeout(st, dl - now).unwrap().0;
+                    }
+                },
             }
         }
     }
@@ -664,6 +712,49 @@ mod tests {
         assert!(joined.is_err());
         // the background worker survives a panicking job
         assert_eq!(pool.spawn_background(|| 5).join(), 5);
+    }
+
+    #[test]
+    fn join_outcome_times_out_and_then_completes() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let handle = pool.spawn_background(move || {
+            rx.recv().unwrap();
+            "slow result"
+        });
+        // deadline passes while the job is blocked: handle comes back
+        let handle = match handle.join_outcome(Some(Duration::from_millis(20))) {
+            JoinOutcome::TimedOut(h) => h,
+            _ => panic!("expected a timeout"),
+        };
+        tx.send(()).unwrap();
+        // the returned handle still resolves to the job's value
+        match handle.join_outcome(Some(Duration::from_secs(10))) {
+            JoinOutcome::Completed(v) => assert_eq!(v, "slow result"),
+            _ => panic!("expected completion after unblocking"),
+        }
+    }
+
+    #[test]
+    fn join_outcome_reports_panic_without_unwinding() {
+        let pool = WorkerPool::new(2);
+        let handle = pool.spawn_background(|| -> u32 {
+            panic!("deliberate watchdog-test panic")
+        });
+        // no catch_unwind needed: the outcome API absorbs the panic
+        assert!(matches!(handle.join_outcome(None), JoinOutcome::Panicked));
+        // the background worker survives
+        assert_eq!(pool.spawn_background(|| 5).join(), 5);
+    }
+
+    #[test]
+    fn join_outcome_without_deadline_waits_for_completion() {
+        let pool = WorkerPool::new(2);
+        let handle = pool.spawn_background(|| 6 * 7);
+        match handle.join_outcome(None) {
+            JoinOutcome::Completed(v) => assert_eq!(v, 42),
+            _ => panic!("expected completion"),
+        }
     }
 
     #[test]

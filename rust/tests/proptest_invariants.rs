@@ -723,3 +723,120 @@ fn prop_overlap_invariant_under_basis_rotation() {
         assert!((a - b).abs() < 1e-4, "seed {seed}: {a} vs {b}");
     }
 }
+
+// ------------------------------------------------------------- checkpoint
+
+/// Encode a small random checkpoint to v3 bytes on disk and return them.
+fn random_ckpt_bytes(
+    rng: &mut Pcg64,
+    path: &std::path::Path,
+) -> (sara::train::Checkpoint, Vec<u8>) {
+    use sara::train::Checkpoint;
+    let nparams = rand_dims(rng, 1, 4);
+    let params: Vec<Tensor> = (0..nparams)
+        .map(|_| {
+            let r = rand_dims(rng, 1, 6);
+            let c = rand_dims(rng, 1, 40);
+            let data: Vec<f32> =
+                (0..r * c).map(|_| rng.next_normal() as f32).collect();
+            Tensor::from_vec(&[r, c], data)
+        })
+        .collect();
+    let ck = Checkpoint::new(rng.next_bounded(100_000) as usize, params);
+    ck.save(path).unwrap();
+    (ck, std::fs::read(path).unwrap())
+}
+
+fn proptest_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("sara_proptest_ckpt").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn prop_corrupted_v3_checkpoint_always_errs_cleanly() {
+    // any truncation, bit flip, or garbage prefix of a valid v3 file must
+    // load as a clean Err — never a panic, never silently wrong data
+    use sara::train::Checkpoint;
+    let dir = proptest_dir("corrupt");
+    let path = dir.join("victim.ckpt");
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4000 + seed);
+        let (ck, bytes) = random_ckpt_bytes(&mut rng, &path);
+        // sanity: the pristine file round-trips
+        let back = Checkpoint::load(&path).unwrap_or_else(|e| {
+            panic!("seed {seed}: pristine file failed to load: {e:#}")
+        });
+        assert_eq!(back.params, ck.params, "seed {seed}");
+
+        for case in 0..3u64 {
+            let mutated = match case {
+                // truncate at a random point (including zero-length)
+                0 => bytes[..rng.next_bounded(bytes.len() as u64) as usize]
+                    .to_vec(),
+                // flip one random bit somewhere in the file
+                1 => {
+                    let mut b = bytes.clone();
+                    let i = rng.next_bounded(b.len() as u64) as usize;
+                    b[i] ^= 1 << rng.next_bounded(8);
+                    b
+                }
+                // garbage prefix: random bytes where the magic should be
+                _ => {
+                    let mut b = bytes.clone();
+                    for x in b.iter_mut().take(8) {
+                        *x = rng.next_bounded(256) as u8;
+                    }
+                    b
+                }
+            };
+            if mutated == bytes {
+                continue; // the mutation landed on identical bytes
+            }
+            std::fs::write(&path, &mutated).unwrap();
+            assert!(
+                Checkpoint::load(&path).is_err(),
+                "seed {seed} case {case}: corrupt file loaded successfully"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_load_latest_valid_survives_corrupt_newest() {
+    // corrupt the newest snapshot arbitrarily: load_latest_valid must fall
+    // back to the previous good one (and count the skip), never error out
+    use sara::train::{Checkpoint, CheckpointManager};
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg64::new(4200 + seed);
+        let dir = proptest_dir("fallback");
+        let mgr = CheckpointManager::new(&dir, 8);
+        let data: Vec<f32> =
+            (0..32).map(|_| rng.next_normal() as f32).collect();
+        let params = vec![Tensor::from_vec(&[4, 8], data)];
+        mgr.save(&Checkpoint::new(10, params.clone()), None).unwrap();
+        mgr.save(&Checkpoint::new(20, params.clone()), None).unwrap();
+        mgr.save(&Checkpoint::new(30, params), None).unwrap();
+        // mangle the newest file: truncate or bit-flip at a random spot
+        let newest = mgr.path_for_step(30);
+        let bytes = std::fs::read(&newest).unwrap();
+        let mutated = if rng.next_bounded(2) == 0 {
+            bytes[..rng.next_bounded(bytes.len() as u64) as usize].to_vec()
+        } else {
+            let mut b = bytes.clone();
+            let i = rng.next_bounded(b.len() as u64) as usize;
+            b[i] ^= 1 << rng.next_bounded(8);
+            b
+        };
+        if mutated == bytes {
+            continue;
+        }
+        std::fs::write(&newest, &mutated).unwrap();
+        let got = Checkpoint::load_latest_valid(&dir)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"))
+            .unwrap_or_else(|| panic!("seed {seed}: no fallback found"));
+        assert_eq!(got.checkpoint.step, 20, "seed {seed}");
+        assert_eq!(got.skipped, 1, "seed {seed}");
+    }
+}

@@ -3,19 +3,41 @@
 #
 #   scripts/tier1.sh
 #
-# 1. release build + full test suite (the tier-1 verify)
+# 1. release build + full test suite (the tier-1 verify); failing
+#    property-test seeds are harvested into the committed regressions
+#    ledger rust/tests/regressions_proptest_seeds.txt before the gate
+#    surfaces the failure.
 # 2. fast hotpath bench smoke (SARA_BENCH_FAST=1) emitting the
 #    machine-readable perf trajectory to BENCH_hotpath.json at repo root.
 # 3. if a committed BENCH_baseline.json exists, diff medians against it
 #    and warn on >25% regressions (advisory; set TIER1_STRICT_PERF=1 to
 #    make regressions fail the gate).
+# 4. crash-recovery smoke (needs PJRT artifacts): kill a run mid-
+#    checkpoint via the fault harness, auto-resume, and require the
+#    resumed `final:` line to match an uninterrupted run bit-for-bit.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 REPO_ROOT="$(pwd)"
 
 echo "== tier-1: cargo build --release && cargo test -q =="
-(cd rust && cargo build --release && cargo test -q)
+(cd rust && cargo build --release)
+# every hand-rolled property test prints its generator seed in the panic
+# message; on failure, append the matching lines to the committed ledger
+# so the exact failing cases stay replayable after the CI host is gone
+SEEDS_FILE="$REPO_ROOT/rust/tests/regressions_proptest_seeds.txt"
+test_log=/tmp/sara_tier1_tests.log
+if ! (cd rust && cargo test -q 2>&1 | tee "$test_log"); then
+  seed_lines=$(grep -E 'seed [0-9]+' "$test_log" | sort -u || true)
+  if [ -n "$seed_lines" ]; then
+    {
+      echo "$(date -u +%Y-%m-%dT%H:%M:%SZ) tier1 failure:"
+      echo "$seed_lines" | sed 's/^/  /'
+    } >> "$SEEDS_FILE"
+    echo "recorded failing proptest seeds to $SEEDS_FILE"
+  fi
+  exit 1
+fi
 
 echo
 echo "== linalg dual-path: scalar oracle vs forced-SIMD dispatch =="
@@ -56,6 +78,51 @@ if [ -f rust/artifacts/test.train.hlo.txt ]; then
   echo "param-cache on/off equivalence OK: $on_final"
 else
   echo "(no PJRT artifacts; skipped the end-to-end 2-worker train run)"
+fi
+
+echo
+echo "== crash-recovery smoke: kill mid-checkpoint, auto-resume =="
+# configs/crash-smoke.toml pins a stateless optimizer (full-rank MSGD,
+# beta1=0) so a snapshot restores the complete training state and an
+# interrupted+resumed run must reproduce the uninterrupted one exactly
+if [ -f rust/artifacts/test.train.hlo.txt ]; then
+  ck_oracle=$(mktemp -d /tmp/sara_crash_oracle.XXXXXX)
+  ck_crash=$(mktemp -d /tmp/sara_crash_resume.XXXXXX)
+  # uninterrupted oracle run (own snapshot dir; checkpointing is
+  # bit-transparent, so its periodic saves cannot perturb the trajectory)
+  (cd rust && cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke.toml" --ckpt-dir "$ck_oracle" \
+     | tee /tmp/sara_crash_oracle.log)
+  # interrupted run: crash_ckpt@1 aborts the process halfway through the
+  # *temp file* of the second periodic save (step 20), after the step-10
+  # snapshot already landed atomically — the exit code must be nonzero
+  set +e
+  (cd rust && SARA_FAULT=crash_ckpt@1 cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke.toml" --ckpt-dir "$ck_crash" \
+     > /tmp/sara_crash_interrupted.log 2>&1)
+  rc=$?
+  set -e
+  if [ "$rc" -eq 0 ]; then
+    echo "FAIL: crash_ckpt fault did not kill the interrupted run"
+    exit 1
+  fi
+  # auto-resume: load_latest_valid must pick the step-10 snapshot (the
+  # torn tmp file is swept, never loaded) and replay through step 40
+  (cd rust && cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke.toml" --ckpt-dir "$ck_crash" \
+     --resume | tee /tmp/sara_crash_resumed.log)
+  oracle_final=$(grep '^final:' /tmp/sara_crash_oracle.log || true)
+  resumed_final=$(grep '^final:' /tmp/sara_crash_resumed.log || true)
+  if [ -z "$oracle_final" ] || [ "$oracle_final" != "$resumed_final" ]; then
+    echo "FAIL: resumed run diverged from the uninterrupted oracle"
+    echo "  oracle:  $oracle_final"
+    echo "  resumed: $resumed_final"
+    exit 1
+  fi
+  echo "crash-recovery equivalence OK: $resumed_final"
+  rm -rf "$ck_oracle" "$ck_crash"
+else
+  echo "(no PJRT artifacts; skipped the crash-recovery smoke)"
 fi
 
 echo

@@ -9,9 +9,10 @@
 
 use sara::linalg::{
     available_kernels, detect_native, gram_into_with, matmul_into_with,
-    matmul_t_into_with, qr_thin, resolve, t_matmul_into_with, Kernel,
-    KernelChoice, Matrix,
+    matmul_q8_into, matmul_t_into_with, qr_thin, resolve, t_matmul_into_with,
+    t_matmul_q8_into, Kernel, KernelChoice, Matrix,
 };
+use sara::quant::QuantizedTensor;
 use sara::rng::Pcg64;
 use sara::util::bench::{section, Bencher};
 
@@ -78,6 +79,23 @@ fn main() {
             gram_into_with(k, &g, &mut g_ws)
         });
     }
+
+    section(&format!(
+        "int8 projector GEMM (P quantized once per refresh, {m}x{r})"
+    ));
+    // quantize outside the timed region: the optimizer pays this once per
+    // tau-step refresh, not per step
+    let pq = QuantizedTensor::quantize(&p.data);
+    b.run(&format!("matmul {m}x{r}x{n} [q8]"), || {
+        matmul_q8_into(&pq, m, r, &rproj, &mut u_ws)
+    });
+    b.run(&format!("t_matmul {m}x{r}x{n} [q8]"), || {
+        t_matmul_q8_into(&pq, m, r, &g, &mut r_ws)
+    });
+    let mut q_re = pq.clone();
+    b.run(&format!("requantize {m}x{r} (per-refresh cost)"), || {
+        q_re.quantize_into(&p.data)
+    });
 
     println!();
     b.finish_or("gemm", "BENCH_gemm.json");

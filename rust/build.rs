@@ -1,0 +1,25 @@
+// Toolchain probe for the AVX-512 lane backend.
+//
+// The `_mm512_*` f32 intrinsics stabilized in Rust 1.89; on older
+// compilers the `linalg::simd::avx512` module must not even parse.
+// Runtime CPU detection (`is_x86_feature_detected!("avx512f")`) is a
+// separate, always-available gate — this cfg only reflects what the
+// *compiler* can build, never what the host CPU supports.
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-08-01)" -> 89
+    let ver = text.split_whitespace().nth(1)?;
+    ver.split('.').nth(1)?.parse().ok()
+}
+
+fn main() {
+    println!("cargo:rustc-check-cfg=cfg(sara_avx512)");
+    if rustc_minor().is_some_and(|minor| minor >= 89) {
+        println!("cargo:rustc-cfg=sara_avx512");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -72,6 +72,11 @@ pub struct OptimConfig {
     /// Re-project the first moment into the new subspace on refresh
     /// (the variant the convergence analysis assumes).
     pub momentum_reproject: bool,
+    /// Run the project → inner-Adam → un-project chain as one tiled fused
+    /// pass (`linalg::fused_lowrank_update`) when the scalar kernel is
+    /// active. Bit-identical to the unfused chain by construction — this
+    /// knob exists to A/B the schedules and to pin that claim in tests.
+    pub fused_update: bool,
     /// Fira residual limiter threshold.
     pub fira_limiter: f32,
     /// Refresh-watchdog deadline for a background refresh join, in
@@ -102,6 +107,7 @@ impl Default for OptimConfig {
             eps: 1e-8,
             weight_decay: 0.0,
             momentum_reproject: true,
+            fused_update: true,
             fira_limiter: 1.01,
             refresh_timeout_ms: 0,
             refresh_retries: 2,
@@ -333,8 +339,9 @@ pub fn parse_inner(s: &str) -> Result<InnerOpt> {
 }
 
 pub fn parse_kernel(s: &str) -> Result<KernelChoice> {
-    KernelChoice::parse(s)
-        .ok_or_else(|| anyhow::anyhow!("unknown kernel '{s}' (auto|simd|scalar)"))
+    KernelChoice::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("unknown kernel '{s}' (auto|simd|scalar|avx512|q8)")
+    })
 }
 
 /// `on|off` toggle values (`--param-cache`, `[runtime] param_cache`);
@@ -432,6 +439,9 @@ impl RunConfig {
         if let Some(s) = args.get("inner") {
             self.optim.inner = parse_inner(s)?;
         }
+        if let Some(s) = args.get("fused-update") {
+            self.optim.fused_update = parse_onoff(s)?;
+        }
         self.optim.refresh_timeout_ms =
             args.get_u64("refresh-timeout-ms", self.optim.refresh_timeout_ms)?;
         self.optim.refresh_retries =
@@ -522,6 +532,9 @@ impl RunConfig {
             doc.get_f64("optim", "beta2").unwrap_or(cfg.optim.beta2 as f64) as f32;
         if let Some(b) = doc.get_bool("optim", "momentum_reproject") {
             cfg.optim.momentum_reproject = b;
+        }
+        if let Some(b) = doc.get_bool("optim", "fused_update") {
+            cfg.optim.fused_update = b;
         }
         cfg.optim.refresh_timeout_ms = doc
             .get_usize("optim", "refresh_timeout_ms")
@@ -638,8 +651,11 @@ mod tests {
         assert!(parse_selector("frobnicate").is_err());
         assert!(parse_inner("adamw9000").is_err());
         assert!(parse_wrapper("lora").is_err());
-        assert!(parse_kernel("avx512").is_err());
+        assert!(parse_kernel("sse2").is_err());
         assert!(parse_onoff("maybe").is_err());
+        // once-rejected names that the kernel campaign made real
+        assert_eq!(parse_kernel("avx512").unwrap(), KernelChoice::Avx512);
+        assert_eq!(parse_kernel("q8").unwrap(), KernelChoice::Q8);
     }
 
     #[test]
@@ -712,8 +728,46 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert_eq!(c.linalg.kernel, KernelChoice::Simd);
 
+        for (name, want) in
+            [("avx512", KernelChoice::Avx512), ("q8", KernelChoice::Q8)]
+        {
+            let args = Args::parse(
+                format!("train --gemm-kernel {name}")
+                    .split_whitespace()
+                    .map(|s| s.to_string()),
+            );
+            let mut c = RunConfig::default();
+            c.apply_args(&args).unwrap();
+            assert_eq!(c.linalg.kernel, want);
+        }
+
         let bad = Args::parse(
             "train --gemm-kernel turbo".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn fused_update_knob_defaults_on_and_parses() {
+        // default on: the fused chain is bit-identical to the unfused one,
+        // so it is safe as the normal path
+        assert!(RunConfig::default().optim.fused_update);
+
+        let args = Args::parse(
+            "train --fused-update off".split_whitespace().map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert!(!c.optim.fused_update);
+        let args = Args::parse(
+            "train --fused-update on".split_whitespace().map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert!(c.optim.fused_update);
+        let bad = Args::parse(
+            "train --fused-update perhaps"
+                .split_whitespace()
+                .map(|s| s.to_string()),
         );
         assert!(RunConfig::default().apply_args(&bad).is_err());
     }
@@ -825,6 +879,7 @@ rank = 16
 tau = 40
 refresh_lookahead = 1
 momentum_reproject = false
+fused_update = false
 
 [dist]
 workers = 2
@@ -843,6 +898,7 @@ kernel = "auto"
         assert_eq!(c.optim.rank, 16);
         assert_eq!(c.optim.refresh_lookahead, 1);
         assert!(!c.optim.momentum_reproject);
+        assert!(!c.optim.fused_update);
         assert_eq!(c.dist.workers, 2);
         assert_eq!(c.dist.bucket_kib, 64);
         assert_eq!(c.world(), 2);

@@ -1,0 +1,282 @@
+//! Startup shape autotuner: pick the fastest GEMM kernel per layer shape.
+//!
+//! The model spec is static at `Trainer::new` — every projection product
+//! the optimizer will ever run has a shape known before step 1 — so
+//! instead of guessing one kernel for the whole run ("is AVX-512 a win on
+//! this part's frequency licensing?"), [`TuneCache::tune`] times each
+//! available kernel (see [`super::simd::available_kernels`]) on each
+//! recorded shape once at startup and records the winners. The result is
+//! persisted as JSON next to the bench baselines (`SARA_TUNE_CACHE=path`)
+//! and reloaded on subsequent runs, so the tuning cost is paid once per
+//! host x model, not once per run.
+//!
+//! A loaded cache is trusted only when it provably matches this run and
+//! host: wrong version, unparseable file, a shape set that differs from
+//! the model's, or a winner kernel the current host/compiler cannot
+//! execute all make [`TuneCache::load`] return `None` and the tuner
+//! re-measure (graceful fallback — a stale cache can cost a re-tune,
+//! never a wrong kernel).
+//!
+//! Scope note: the trainer applies the tuned choice at run granularity
+//! ([`TuneCache::majority_kernel`] — the process-global kernel knob is one
+//! value) and only when the user asked for `kernel = auto` with a tune
+//! cache armed; per-call per-shape dispatch via [`TuneCache::kernel_for`]
+//! is wired for the bench harness and a ROADMAP follow-up.
+
+use super::simd::{available_kernels, Kernel};
+use super::{matmul_into_with, Matrix};
+use crate::rng::Pcg64;
+use crate::util::json::{Json, JsonObj};
+use std::time::Instant;
+
+/// Cache format version — bump when the entry schema or timing protocol
+/// changes so old files re-tune instead of mis-loading.
+const VERSION: usize = 1;
+
+/// Timed reps per (shape, kernel); the median is recorded.
+const REPS: usize = 3;
+
+/// One tuned shape: the winning kernel for an `m x k @ k x n` product.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub kernel: Kernel,
+    pub median_ns: u64,
+}
+
+/// Per-shape kernel winners (see module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuneCache {
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuneCache {
+    /// Time every available kernel on every shape (1 warmup + [`REPS`]
+    /// timed reps each, median-of-reps) and keep the per-shape winner.
+    /// Deterministic operand contents so re-tunes on the same host measure
+    /// the same work.
+    pub fn tune(shapes: &[(usize, usize, usize)]) -> TuneCache {
+        let kernels = available_kernels();
+        let mut rng = Pcg64::new(0x7ae5);
+        let entries = shapes
+            .iter()
+            .map(|&(m, k, n)| {
+                let a = Matrix::randn(m, k, 1.0, &mut rng);
+                let b = Matrix::randn(k, n, 1.0, &mut rng);
+                let mut c = Matrix::zeros(m, n);
+                let (mut best, mut best_ns) = (Kernel::Scalar, u64::MAX);
+                for &kernel in &kernels {
+                    matmul_into_with(kernel, &a, &b, &mut c); // warmup
+                    let mut ns = [0u64; REPS];
+                    for slot in ns.iter_mut() {
+                        let t0 = Instant::now();
+                        matmul_into_with(kernel, &a, &b, &mut c);
+                        *slot = t0.elapsed().as_nanos() as u64;
+                    }
+                    ns.sort_unstable();
+                    if ns[REPS / 2] < best_ns {
+                        best_ns = ns[REPS / 2];
+                        best = kernel;
+                    }
+                }
+                TuneEntry { m, k, n, kernel: best, median_ns: best_ns }
+            })
+            .collect();
+        TuneCache { entries }
+    }
+
+    /// The tuned kernel for one shape, if it was recorded.
+    pub fn kernel_for(&self, m: usize, k: usize, n: usize) -> Option<Kernel> {
+        self.entries
+            .iter()
+            .find(|e| (e.m, e.k, e.n) == (m, k, n))
+            .map(|e| e.kernel)
+    }
+
+    /// The most frequent winner across shapes — what the trainer installs
+    /// as the process-global kernel (ties break toward the kernel that won
+    /// the most total measured time, i.e. the biggest shapes).
+    pub fn majority_kernel(&self) -> Option<Kernel> {
+        let mut tally: Vec<(Kernel, usize, u64)> = Vec::new();
+        for e in &self.entries {
+            match tally.iter_mut().find(|(k, _, _)| *k == e.kernel) {
+                Some(t) => {
+                    t.1 += 1;
+                    t.2 += e.median_ns;
+                }
+                None => tally.push((e.kernel, 1, e.median_ns)),
+            }
+        }
+        tally
+            .into_iter()
+            .max_by_key(|&(_, count, ns)| (count, ns))
+            .map(|(k, _, _)| k)
+    }
+
+    /// Serialize to the JSON cache format:
+    /// `{"version":1,"entries":[{"m":..,"k":..,"n":..,"kernel":"name","median_ns":..}]}`.
+    pub fn to_json(&self) -> String {
+        let mut root = JsonObj::new();
+        root.insert("version", Json::Num(VERSION as f64));
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = JsonObj::new();
+                o.insert("m", Json::Num(e.m as f64));
+                o.insert("k", Json::Num(e.k as f64));
+                o.insert("n", Json::Num(e.n as f64));
+                o.insert("kernel", Json::Str(e.kernel.name().to_string()));
+                o.insert("median_ns", Json::Num(e.median_ns as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("entries", Json::Arr(entries));
+        Json::Obj(root).dump()
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Load a cache and validate it against this run: `None` (re-tune) on
+    /// a missing/unreadable/corrupt file, a version mismatch, a shape set
+    /// differing from `shapes` (order-insensitive), or a recorded winner
+    /// this host/compiler cannot execute.
+    pub fn load(path: &str, shapes: &[(usize, usize, usize)]) -> Option<TuneCache> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let cache = Self::parse(&text)?;
+        // stale-shape check: the cache must cover exactly this model's
+        // shape set (a changed model spec silently reusing old winners
+        // would defeat the whole point)
+        if cache.entries.len() != shapes.len() {
+            return None;
+        }
+        for &(m, k, n) in shapes {
+            cache.kernel_for(m, k, n)?;
+        }
+        // host check: every winner must be executable here
+        let avail = available_kernels();
+        if cache.entries.iter().any(|e| !avail.contains(&e.kernel)) {
+            return None;
+        }
+        Some(cache)
+    }
+
+    fn parse(text: &str) -> Option<TuneCache> {
+        let root = Json::parse(text).ok()?;
+        if root.field("version").ok()?.as_usize().ok()? != VERSION {
+            return None;
+        }
+        let mut entries = Vec::new();
+        for e in root.field("entries").ok()?.as_arr().ok()? {
+            entries.push(TuneEntry {
+                m: e.field("m").ok()?.as_usize().ok()?,
+                k: e.field("k").ok()?.as_usize().ok()?,
+                n: e.field("n").ok()?.as_usize().ok()?,
+                kernel: Kernel::from_name(e.field("kernel").ok()?.as_str().ok()?)?,
+                median_ns: e.field("median_ns").ok()?.as_f64().ok()? as u64,
+            });
+        }
+        Some(TuneCache { entries })
+    }
+
+    /// The startup entry point: reuse a valid cache at `path`, otherwise
+    /// tune now and persist (a failed write warns and continues — the
+    /// tuning result is still used for this run).
+    pub fn load_or_tune(path: &str, shapes: &[(usize, usize, usize)]) -> TuneCache {
+        if let Some(cache) = Self::load(path, shapes) {
+            return cache;
+        }
+        let cache = Self::tune(shapes);
+        if let Err(e) = cache.save(path) {
+            eprintln!("warning: could not write tune cache '{path}': {e}");
+        }
+        cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sara_tune_{tag}_{}.json", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    const SHAPES: [(usize, usize, usize); 3] =
+        [(16, 48, 64), (8, 30, 33), (48, 16, 64)];
+
+    #[test]
+    fn tune_records_every_shape_with_an_available_kernel() {
+        let cache = TuneCache::tune(&SHAPES);
+        assert_eq!(cache.entries.len(), SHAPES.len());
+        let avail = available_kernels();
+        for &(m, k, n) in &SHAPES {
+            let kernel = cache.kernel_for(m, k, n).expect("shape tuned");
+            assert!(avail.contains(&kernel), "{kernel} not available");
+        }
+        assert!(cache.majority_kernel().is_some());
+        assert_eq!(cache.kernel_for(1, 2, 3), None);
+    }
+
+    #[test]
+    fn cache_round_trips_to_identical_choices() {
+        let path = tmp_path("roundtrip");
+        let cache = TuneCache::tune(&SHAPES);
+        cache.save(&path).unwrap();
+        let loaded = TuneCache::load(&path, &SHAPES).expect("valid cache");
+        assert_eq!(loaded, cache, "persist -> load must be lossless");
+        for &(m, k, n) in &SHAPES {
+            assert_eq!(loaded.kernel_for(m, k, n), cache.kernel_for(m, k, n));
+        }
+        // load_or_tune must take the cached path (same choices, no retune
+        // drift)
+        let again = TuneCache::load_or_tune(&path, &SHAPES);
+        assert_eq!(again, cache);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_and_stale_caches_fall_back_to_retune() {
+        // missing file
+        assert!(TuneCache::load(&tmp_path("missing"), &SHAPES).is_none());
+
+        // corrupt JSON
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(TuneCache::load(&path, &SHAPES).is_none());
+
+        // wrong version
+        std::fs::write(&path, r#"{"version":999,"entries":[]}"#).unwrap();
+        assert!(TuneCache::load(&path, &SHAPES).is_none());
+
+        // unknown kernel name (e.g. a cache written by a newer build)
+        std::fs::write(
+            &path,
+            r#"{"version":1,"entries":[
+                {"m":16,"k":48,"n":64,"kernel":"warp-drive","median_ns":1},
+                {"m":8,"k":30,"n":33,"kernel":"scalar","median_ns":1},
+                {"m":48,"k":16,"n":64,"kernel":"scalar","median_ns":1}]}"#,
+        )
+        .unwrap();
+        assert!(TuneCache::load(&path, &SHAPES).is_none());
+
+        // stale shape set (model changed since the cache was written)
+        let cache = TuneCache::tune(&SHAPES);
+        cache.save(&path).unwrap();
+        assert!(TuneCache::load(&path, &[(9, 9, 9); 3]).is_none());
+        assert!(TuneCache::load(&path, &SHAPES[..2]).is_none());
+
+        // load_or_tune on the stale file overwrites it with a valid one
+        let other = [(9usize, 9usize, 9usize)];
+        let retuned = TuneCache::load_or_tune(&path, &other);
+        assert_eq!(retuned.entries.len(), 1);
+        assert_eq!(TuneCache::load(&path, &other), Some(retuned));
+        let _ = std::fs::remove_file(&path);
+    }
+}

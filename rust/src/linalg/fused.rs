@@ -1,0 +1,356 @@
+//! Fused Algorithm-1 update chain: R = PᵀG → inner-Adam → U = PN in one
+//! tiled pass.
+//!
+//! The unfused hot path in [`crate::optim::LowRankState::step_into`] makes
+//! three full sweeps over rank x n data per step: project
+//! ([`super::matmul::t_matmul_into`]), moment update
+//! (`OptState::direction_into`), un-project
+//! ([`super::matmul::matmul_into`]). Between the sweeps, R and N fall out
+//! of L1/L2 for real layer widths (rank x n at rank 128, n 1376 is ~700 KiB
+//! each), so the chain is memory-bound on traffic the fusion below never
+//! pays: [`fused_lowrank_update`] walks the n dimension in column tiles of
+//! [`NB`], and per tile computes the R tile, applies the Adam moment
+//! update while the tile is cache-hot, and accumulates the U tile into the
+//! delta workspace — R and N are each touched once per step instead of
+//! being produced and re-read a sweep apart.
+//!
+//! ## The bit-identity contract
+//!
+//! The default configuration must stay bit-identical to the unfused
+//! scalar oracle (the repo-wide trajectory-exactness rule), so this is a
+//! *schedule* change, never an *arithmetic* change:
+//!
+//! * Each per-element f32 operation sequence is byte-for-byte the scalar
+//!   kernels': the R tile runs `t_matmul_into`'s KC-panel / 4x-unrolled /
+//!   j-innermost loops, the U tile runs `matmul_into`'s, and the moment
+//!   update runs `optim/adam.rs::direction_into`'s expression verbatim.
+//!   Column-tiling only restricts the (independent, innermost) j loop —
+//!   per-element association order is untouched.
+//! * The fused chain is deliberately **kernel-independent**: it always
+//!   runs the scalar association order, whatever the active GEMM kernel,
+//!   because its value is cache locality, not vectorization. SIMD kernels
+//!   compose with it by *disabling* it (`LowRankState` falls back to the
+//!   three-pass path when a SIMD/q8 kernel is active).
+//!
+//! Pinned by `tests/proptest_invariants.rs::prop_fused_*` (bitwise vs the
+//! three-pass oracle over random shapes/hyperparameters) and the W=1/W=2
+//! distributed trajectory test in `tests/integration_dist.rs`.
+
+use super::Matrix;
+
+/// Column-tile width: 128 f32 columns = 512 B per row slice; at rank 128
+/// the live set per tile (R tile + N tile + moment tiles + B rows) stays
+/// comfortably inside L2.
+const NB: usize = 128;
+
+/// k-panel depth, matching the scalar kernels' L1 blocking (must equal
+/// `matmul.rs::KC` for bit-identity with the unfused chain).
+const KC: usize = 256;
+
+/// Borrowed view of an inner-Adam state for one fused step, handed out by
+/// `OptState::begin_fused_update`. The bias corrections `c1`/`c2` are
+/// computed by the owner (who advances its step counter exactly as the
+/// unfused `direction_into` would), so the fused kernel reproduces the
+/// unfused update bit-for-bit:
+///
+/// ```text
+///   m' = beta1 m + (1 - beta1) g
+///   v' = beta2 v + (1 - beta2) g g
+///   n  = (m' c1) / (sqrt(v' c2) + eps)
+/// ```
+pub struct FusedAdam<'a> {
+    /// First-moment buffer (rank x n, row-major — same layout as R).
+    pub m: &'a mut [f32],
+    /// Second-moment buffer (rank x n).
+    pub v: &'a mut [f32],
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// First-moment bias correction `1 / (1 - beta1^t)`.
+    pub c1: f32,
+    /// Second-moment bias correction `1 / (1 - beta2^t)`.
+    pub c2: f32,
+}
+
+/// One fused low-rank update: for each column tile, compute
+/// `R[:, tile] = PᵀG[:, tile]`, apply the Adam moment update on the tile,
+/// and accumulate `U[:, tile] = P N[:, tile]` into `out`. R and N are
+/// still written to their workspaces in full (the Fira residual path
+/// reads both afterwards); `out` is fully overwritten and **unscaled**
+/// (the caller applies `alpha` and `lr` exactly as on the unfused path).
+///
+/// Shapes: `p` is m x rank, `g` is m x n, `r`/`n_out` are rank x n and the
+/// moment buffers in `adam` are rank*n flat; `out` is m x n.
+pub fn fused_lowrank_update(
+    p: &Matrix,
+    g: &Matrix,
+    mut adam: FusedAdam<'_>,
+    r: &mut Matrix,
+    n_out: &mut Matrix,
+    out: &mut Matrix,
+) {
+    let m = p.rows;
+    let rank = p.cols;
+    let n = g.cols;
+    debug_assert_eq!(g.rows, m, "fused: G rows");
+    debug_assert_eq!((r.rows, r.cols), (rank, n), "fused: R shape");
+    debug_assert_eq!((n_out.rows, n_out.cols), (rank, n), "fused: N shape");
+    debug_assert_eq!((out.rows, out.cols), (m, n), "fused: U shape");
+    debug_assert_eq!(adam.m.len(), rank * n, "fused: moment m len");
+    debug_assert_eq!(adam.v.len(), rank * n, "fused: moment v len");
+
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + NB).min(n);
+        project_tile(p, g, r, j0, j1);
+        adam_tile(&mut adam, r, n_out, j0, j1);
+        unproject_tile(p, n_out, out, j0, j1);
+        j0 = j1;
+    }
+}
+
+/// `R[:, j0..j1] = PᵀG[:, j0..j1]` — `t_matmul_into`'s scalar loops
+/// (KC k-panels over m, A walked down column i at stride rank, 4x
+/// k-unroll, j-innermost) restricted to the tile.
+fn project_tile(p: &Matrix, g: &Matrix, r: &mut Matrix, j0: usize, j1: usize) {
+    let m = p.rows;
+    let rank = p.cols;
+    let n = g.cols;
+    let tw = j1 - j0;
+    for i in 0..rank {
+        r.data[i * n + j0..i * n + j1].fill(0.0);
+    }
+    for kb in (0..m).step_by(KC) {
+        let kend = (kb + KC).min(m);
+        for i in 0..rank {
+            let crow = &mut r.data[i * n + j0..i * n + j1];
+            let mut kk = kb;
+            while kk + 4 <= kend {
+                let a0 = p.data[kk * rank + i];
+                let a1 = p.data[(kk + 1) * rank + i];
+                let a2 = p.data[(kk + 2) * rank + i];
+                let a3 = p.data[(kk + 3) * rank + i];
+                let b0 = &g.data[kk * n + j0..kk * n + j1];
+                let b1 = &g.data[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                let b2 = &g.data[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                let b3 = &g.data[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                for j in 0..tw {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = p.data[kk * rank + i];
+                let brow = &g.data[kk * n + j0..kk * n + j1];
+                for j in 0..tw {
+                    crow[j] += av * brow[j];
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// `N[:, j0..j1] = Adam(R[:, j0..j1])` — `adam.rs::direction_into`'s
+/// per-element expression verbatim, on the cache-hot tile. Element order
+/// within the tile differs from the flat unfused sweep, but the update is
+/// purely element-wise, so every element's value (and both moments) is
+/// bit-identical.
+fn adam_tile(
+    adam: &mut FusedAdam<'_>,
+    r: &Matrix,
+    n_out: &mut Matrix,
+    j0: usize,
+    j1: usize,
+) {
+    let n = r.cols;
+    for i in 0..r.rows {
+        for idx in i * n + j0..i * n + j1 {
+            let g = r.data[idx];
+            let m = adam.beta1 * adam.m[idx] + (1.0 - adam.beta1) * g;
+            let v = adam.beta2 * adam.v[idx] + (1.0 - adam.beta2) * g * g;
+            adam.m[idx] = m;
+            adam.v[idx] = v;
+            n_out.data[idx] =
+                (m * adam.c1) / ((v * adam.c2).sqrt() + adam.eps);
+        }
+    }
+}
+
+/// `U[:, j0..j1] = P N[:, j0..j1]` — `matmul_into`'s scalar loops (KC
+/// k-panels over rank, contiguous A rows, 4x k-unroll, j-innermost)
+/// restricted to the tile.
+fn unproject_tile(
+    p: &Matrix,
+    n_mat: &Matrix,
+    out: &mut Matrix,
+    j0: usize,
+    j1: usize,
+) {
+    let m = p.rows;
+    let rank = p.cols;
+    let n = n_mat.cols;
+    let tw = j1 - j0;
+    for i in 0..m {
+        out.data[i * n + j0..i * n + j1].fill(0.0);
+    }
+    for kb in (0..rank).step_by(KC) {
+        let kend = (kb + KC).min(rank);
+        for i in 0..m {
+            let arow = &p.data[i * rank..(i + 1) * rank];
+            let crow = &mut out.data[i * n + j0..i * n + j1];
+            let mut kk = kb;
+            while kk + 4 <= kend {
+                let a0 = arow[kk];
+                let a1 = arow[kk + 1];
+                let a2 = arow[kk + 2];
+                let a3 = arow[kk + 3];
+                let b0 = &n_mat.data[kk * n + j0..kk * n + j1];
+                let b1 = &n_mat.data[(kk + 1) * n + j0..(kk + 1) * n + j1];
+                let b2 = &n_mat.data[(kk + 2) * n + j0..(kk + 2) * n + j1];
+                let b3 = &n_mat.data[(kk + 3) * n + j0..(kk + 3) * n + j1];
+                for j in 0..tw {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = arow[kk];
+                let brow = &n_mat.data[kk * n + j0..kk * n + j1];
+                for j in 0..tw {
+                    crow[j] += av * brow[j];
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_into_with, t_matmul_into_with, Kernel};
+    use crate::rng::Pcg64;
+
+    /// Reference: the unfused three-pass chain with a verbatim copy of the
+    /// scalar Adam update, sharing hyperparameters with the fused call.
+    #[allow(clippy::too_many_arguments)]
+    fn three_pass(
+        p: &Matrix,
+        g: &Matrix,
+        m_buf: &mut Matrix,
+        v_buf: &mut Matrix,
+        (beta1, beta2, eps): (f32, f32, f32),
+        t: i32,
+        r: &mut Matrix,
+        n_out: &mut Matrix,
+        out: &mut Matrix,
+    ) {
+        t_matmul_into_with(Kernel::Scalar, p, g, r);
+        let c1 = 1.0 / (1.0 - beta1.powi(t));
+        let c2 = 1.0 / (1.0 - beta2.powi(t));
+        for i in 0..r.data.len() {
+            let gg = r.data[i];
+            let m = beta1 * m_buf.data[i] + (1.0 - beta1) * gg;
+            let v = beta2 * v_buf.data[i] + (1.0 - beta2) * gg * gg;
+            m_buf.data[i] = m;
+            v_buf.data[i] = v;
+            n_out.data[i] = (m * c1) / ((v * c2).sqrt() + eps);
+        }
+        matmul_into_with(Kernel::Scalar, p, n_out, out);
+    }
+
+    /// The fused chain must be bit-identical to the three-pass scalar
+    /// chain — outputs *and* both moment buffers — over shapes crossing
+    /// the NB column tile, the KC k-panel, and the 4x unroll boundaries,
+    /// across multiple consecutive steps (moment state accumulates).
+    #[test]
+    fn fused_chain_is_bitwise_three_pass_scalar_chain() {
+        let mut rng = Pcg64::new(37);
+        let hp = (0.9f32, 0.999f32, 1e-8f32);
+        for &(m, rank, n) in &[
+            (40usize, 8usize, 200usize), // n > NB: multiple tiles
+            (300, 16, 129),              // m > KC, tile tail of 1
+            (12, 5, 128),                // exactly one tile, odd rank
+            (7, 3, 17),                  // everything tiny and odd
+        ] {
+            let p = Matrix::randn(m, rank, 1.0, &mut rng);
+            let mut mf = Matrix::zeros(rank, n);
+            let mut vf = Matrix::zeros(rank, n);
+            let mut m3 = Matrix::zeros(rank, n);
+            let mut v3 = Matrix::zeros(rank, n);
+            let (mut rf, mut nf) = (Matrix::zeros(rank, n), Matrix::zeros(rank, n));
+            let (mut r3, mut n3) = (Matrix::zeros(rank, n), Matrix::zeros(rank, n));
+            let mut uf = Matrix::zeros(m, n);
+            let mut u3 = Matrix::zeros(m, n);
+            for t in 1..=3i32 {
+                let g = Matrix::randn(m, n, 1.0, &mut rng);
+                let c1 = 1.0 / (1.0 - hp.0.powi(t));
+                let c2 = 1.0 / (1.0 - hp.1.powi(t));
+                fused_lowrank_update(
+                    &p,
+                    &g,
+                    FusedAdam {
+                        m: &mut mf.data,
+                        v: &mut vf.data,
+                        beta1: hp.0,
+                        beta2: hp.1,
+                        eps: hp.2,
+                        c1,
+                        c2,
+                    },
+                    &mut rf,
+                    &mut nf,
+                    &mut uf,
+                );
+                three_pass(
+                    &p, &g, &mut m3, &mut v3, hp, t, &mut r3, &mut n3,
+                    &mut u3,
+                );
+                assert_eq!(rf.data, r3.data, "R ({m},{rank},{n}) t={t}");
+                assert_eq!(nf.data, n3.data, "N ({m},{rank},{n}) t={t}");
+                assert_eq!(uf.data, u3.data, "U ({m},{rank},{n}) t={t}");
+                assert_eq!(mf.data, m3.data, "moment m ({m},{rank},{n}) t={t}");
+                assert_eq!(vf.data, v3.data, "moment v ({m},{rank},{n}) t={t}");
+            }
+        }
+    }
+
+    /// Stale workspace / output contents must be fully overwritten (the
+    /// chain runs into reused buffers every step).
+    #[test]
+    fn fused_chain_overwrites_stale_outputs() {
+        let mut rng = Pcg64::new(41);
+        let (m, rank, n) = (9, 4, 150);
+        let p = Matrix::randn(m, rank, 1.0, &mut rng);
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let mut mm = Matrix::zeros(rank, n);
+        let mut vv = Matrix::zeros(rank, n);
+        fn adam<'a>(mm: &'a mut Matrix, vv: &'a mut Matrix) -> FusedAdam<'a> {
+            FusedAdam {
+                m: &mut mm.data,
+                v: &mut vv.data,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                c1: 10.0,
+                c2: 1000.0,
+            }
+        }
+        let mut r = Matrix::zeros(rank, n);
+        let mut nmat = Matrix::zeros(rank, n);
+        let mut u = Matrix::zeros(m, n);
+        fused_lowrank_update(&p, &g, adam(&mut mm, &mut vv), &mut r, &mut nmat, &mut u);
+        let (r1, n1, u1) = (r.data.clone(), nmat.data.clone(), u.data.clone());
+        // poison everything, reset moments, run again: identical bits
+        r.data.fill(f32::NAN);
+        nmat.data.fill(f32::NAN);
+        u.data.fill(f32::NAN);
+        mm.data.fill(0.0);
+        vv.data.fill(0.0);
+        fused_lowrank_update(&p, &g, adam(&mut mm, &mut vv), &mut r, &mut nmat, &mut u);
+        assert_eq!(r.data, r1);
+        assert_eq!(nmat.data, n1);
+        assert_eq!(u.data, u1);
+    }
+}

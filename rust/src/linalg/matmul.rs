@@ -24,12 +24,16 @@
 //!   (`tests/proptest_invariants.rs::prop_simd_*`) and with *each other*
 //!   bit-exactly.
 //!
-//! Selection: `[linalg] kernel = auto|simd|scalar` in TOML,
+//! Selection: `[linalg] kernel = auto|simd|scalar|avx512|q8` in TOML,
 //! `--gemm-kernel` on the CLI, `SARA_GEMM_KERNEL` / `SARA_FORCE_SCALAR=1`
 //! in the environment (env wins, so CI can force either path host-wide).
 //! The `*_with` variants take an explicit [`Kernel`] and skip the global —
 //! tests and benches compare backends through them without racing other
-//! threads.
+//! threads. [`Kernel::Q8`] is an *operand encoding*, not a dense schedule:
+//! it is consumed only by [`matmul_q8_into`] / [`t_matmul_q8_into`] (the
+//! projection products, whose left operand `optim/lowrank.rs` quantizes
+//! once per refresh), and every dense entry point here normalizes it to
+//! the best dense kernel via `Kernel::general` before dispatching.
 //!
 //! Large products (selector-refresh Gram matrices, bench-scale GEMMs) can
 //! additionally be row-partitioned across a persistent
@@ -173,7 +177,7 @@ pub fn matmul_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix) 
         a.rows, a.cols, b.rows, b.cols
     );
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul output shape");
-    matmul_rows_k(kernel, a, b, 0, a.rows, &mut c.data);
+    matmul_rows_k(kernel.general(), a, b, 0, a.rows, &mut c.data);
 }
 
 /// C = A @ B with C's rows partitioned across the pool's work queue.
@@ -207,6 +211,7 @@ pub fn matmul_into_par_with(
 ) {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul output shape");
+    let kernel = kernel.general();
     let (m, n) = (a.rows, b.cols);
     if m * n * a.cols < 64 * 64 * 64 {
         // too small to amortize the broadcast; stay serial
@@ -215,7 +220,10 @@ pub fn matmul_into_par_with(
     }
     let base = SendPtr(c.data.as_mut_ptr());
     let blocks = m.div_ceil(ROW_BLOCK);
-    if kernel.is_simd() && blocks > 1 && n >= 8 {
+    // lane16 kernels skip the shared pack (its layout is 8-column) and run
+    // per-block — the same dispatch as the serial path, so par stays
+    // bit-identical to serial for them too
+    if kernel.is_simd() && !kernel.is_lane16() && blocks > 1 && n >= 8 {
         // shared-pack path: pack B's j-tiles once on the submitting
         // thread, then every row block consumes the same panels instead
         // of re-packing them (the old per-block cost was one full B pack
@@ -264,6 +272,7 @@ pub fn t_matmul_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix
         a.rows, a.cols, b.rows, b.cols
     );
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "t_matmul output shape");
+    let kernel = kernel.general();
     if kernel != Kernel::Scalar {
         simd::t_matmul_simd(kernel, a, b, c);
         return;
@@ -303,6 +312,126 @@ pub fn t_matmul_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix
     }
 }
 
+// ------------------------------------------------------- int8 projections
+
+/// Dequantize one element of a block-quantized operand: `codes` are
+/// symmetric int8 with one f32 scale per [`crate::quant::BLOCK`] flat
+/// elements, so `value = codes[idx] as f32 * scales[idx / BLOCK]` — exact
+/// (one f32 multiply of exactly-representable factors aside, the rounding
+/// already happened at quantization time).
+#[inline(always)]
+fn deq(aq: &crate::quant::QuantizedTensor, idx: usize) -> f32 {
+    aq.codes[idx] as f32 * aq.scales[idx / crate::quant::BLOCK]
+}
+
+/// C = A @ B where A is block-quantized int8 (`m` x `k`, row-major codes)
+/// and accumulation is f32 — the `U = P N` projection with P quantized
+/// once per selector refresh (`[linalg] kernel = q8`).
+///
+/// The loop structure is byte-for-byte the scalar oracle's
+/// ([`matmul_rows`]: KC k-panels, 4x k-unroll, j-innermost), with each A
+/// element dequantized at its single use — so the result is **bit-identical
+/// to the scalar GEMM of the dequantized A**, and the only error vs the
+/// f32 product is the quantization error itself:
+///
+/// `|C[i][j] - C_f32[i][j]| <= sum_k error_bound(block(i*k' + k)) * |B[k][j]|`
+///
+/// with `error_bound(b) = 0.5 * scales[b]` (half an int8 step per
+/// element; see [`crate::quant::QuantizedTensor::error_bound`]). The
+/// property suite pins exactly this bound
+/// (`proptest_invariants.rs::prop_q8_*`).
+pub fn matmul_q8_into(
+    aq: &crate::quant::QuantizedTensor,
+    m: usize,
+    k: usize,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
+    assert_eq!(aq.len, m * k, "q8 matmul: quantized operand is not {m}x{k}");
+    assert_eq!(k, b.rows, "q8 matmul shape mismatch: {m}x{k} @ {}x{}", b.rows, b.cols);
+    let n = b.cols;
+    assert_eq!((c.rows, c.cols), (m, n), "q8 matmul output shape");
+    c.data.fill(0.0);
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            let mut kk = kb;
+            while kk + 4 <= kend {
+                let a0 = deq(aq, i * k + kk);
+                let a1 = deq(aq, i * k + kk + 1);
+                let a2 = deq(aq, i * k + kk + 2);
+                let a3 = deq(aq, i * k + kk + 3);
+                let b0 = &b.data[kk * n..kk * n + n];
+                let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = deq(aq, i * k + kk);
+                let brow = &b.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// C = A^T @ B where A is block-quantized int8 (`m` x `r`, row-major
+/// codes, walked column-wise exactly like the scalar [`t_matmul_into`]) —
+/// the `R = P^T G` projection with P quantized once per refresh. Same
+/// bit-identical-to-dequantized-scalar contract and error bound as
+/// [`matmul_q8_into`] (with the sum running over A's rows:
+/// `error_bound(block(k*r' + i))`).
+pub fn t_matmul_q8_into(
+    aq: &crate::quant::QuantizedTensor,
+    m: usize,
+    r: usize,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
+    assert_eq!(aq.len, m * r, "q8 t_matmul: quantized operand is not {m}x{r}");
+    assert_eq!(m, b.rows, "q8 t_matmul shape mismatch: ({m}x{r})^T @ {}x{}", b.rows, b.cols);
+    let n = b.cols;
+    assert_eq!((c.rows, c.cols), (r, n), "q8 t_matmul output shape");
+    c.data.fill(0.0);
+    for kb in (0..m).step_by(KC) {
+        let kend = (kb + KC).min(m);
+        for i in 0..r {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            let mut kk = kb;
+            while kk + 4 <= kend {
+                let a0 = deq(aq, kk * r + i);
+                let a1 = deq(aq, (kk + 1) * r + i);
+                let a2 = deq(aq, (kk + 2) * r + i);
+                let a3 = deq(aq, (kk + 3) * r + i);
+                let b0 = &b.data[kk * n..kk * n + n];
+                let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = deq(aq, kk * r + i);
+                let brow = &b.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
 /// C = A @ B^T into a preallocated buffer (overwrites C); the scalar
 /// oracle accumulates dot products in f64, matching the Gram/SVD path's
 /// precision (the SIMD backends accumulate in f32 — the one place their
@@ -319,6 +448,7 @@ pub fn matmul_t_into_with(kernel: Kernel, a: &Matrix, b: &Matrix, c: &mut Matrix
         a.rows, a.cols, b.rows, b.cols
     );
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_t output shape");
+    let kernel = kernel.general();
     if kernel != Kernel::Scalar {
         simd::matmul_t_simd(kernel, a, b, c);
         return;
@@ -379,7 +509,7 @@ pub fn gram_into(a: &Matrix, g: &mut Matrix) {
 pub fn gram_into_with(kernel: Kernel, a: &Matrix, g: &mut Matrix) {
     let m = a.rows;
     assert_eq!((g.rows, g.cols), (m, m), "gram output shape");
-    gram_rows_upper_k(kernel, a, 0, m, &mut g.data, m);
+    gram_rows_upper_k(kernel.general(), a, 0, m, &mut g.data, m);
     mirror_upper(g);
 }
 
@@ -397,6 +527,7 @@ pub fn gram_into_par_with(
 ) {
     let m = a.rows;
     assert_eq!((g.rows, g.cols), (m, m), "gram output shape");
+    let kernel = kernel.general();
     if m * m * a.cols < 64 * 64 * 64 {
         gram_rows_upper_k(kernel, a, 0, m, &mut g.data, m);
         mirror_upper(g);
@@ -726,6 +857,56 @@ mod tests {
         let mut c2 = Matrix::zeros(23, 17);
         matmul_rows(&a, &b, 0, a.rows, &mut c2.data);
         assert_eq!(c.data, c2.data);
+    }
+
+    /// The q8 kernels replicate the scalar oracle's loop structure with
+    /// dequantize-at-use, so they must be **bit-identical** to the scalar
+    /// GEMM of the explicitly dequantized operand — the strong form of
+    /// the q8 contract (the tolerance-vs-f32-oracle form lives in the
+    /// property suite). Shapes cross the quant BLOCK boundary and the KC
+    /// k-panel boundary, and include the transposed (R = P^T G) walk.
+    #[test]
+    fn q8_kernels_are_bitwise_scalar_gemm_of_dequantized_operand() {
+        use crate::quant::QuantizedTensor;
+        let mut rng = Pcg64::new(29);
+        for &(m, r, n) in &[(40usize, 8usize, 23usize), (300, 16, 9), (7, 3, 5)] {
+            let p = Matrix::randn(m, r, 1.0, &mut rng);
+            let pq = QuantizedTensor::quantize(&p.data);
+            let pdq = Matrix::from_vec(m, r, pq.dequantize());
+
+            // U = P N (m x r @ r x n)
+            let nmat = Matrix::randn(r, n, 1.0, &mut rng);
+            let mut via_q8 = Matrix::from_vec(m, n, vec![f32::NAN; m * n]);
+            matmul_q8_into(&pq, m, r, &nmat, &mut via_q8);
+            let mut via_scalar = Matrix::zeros(m, n);
+            matmul_into_with(Kernel::Scalar, &pdq, &nmat, &mut via_scalar);
+            assert_eq!(via_q8.data, via_scalar.data, "matmul_q8 ({m},{r},{n})");
+
+            // R = P^T G (r x m @ m x n via the column-wise walk)
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut rq8 = Matrix::from_vec(r, n, vec![f32::NAN; r * n]);
+            t_matmul_q8_into(&pq, m, r, &g, &mut rq8);
+            let mut rscalar = Matrix::zeros(r, n);
+            t_matmul_into_with(Kernel::Scalar, &pdq, &g, &mut rscalar);
+            assert_eq!(rq8.data, rscalar.data, "t_matmul_q8 ({m},{r},{n})");
+        }
+    }
+
+    /// `Kernel::Q8` through the dense entry points must run a real dense
+    /// schedule (the `general()` normalization), not panic or silently
+    /// no-op — it only means "int8" for the projection products that have
+    /// a quantized operand.
+    #[test]
+    fn q8_choice_normalizes_to_dense_kernel_on_dense_entry_points() {
+        let mut rng = Pcg64::new(31);
+        let a = Matrix::randn(9, 33, 1.0, &mut rng);
+        let b = Matrix::randn(33, 17, 1.0, &mut rng);
+        let mut via_q8 = Matrix::zeros(9, 17);
+        matmul_into_with(Kernel::Q8, &a, &b, &mut via_q8);
+        let mut via_dense = Matrix::zeros(9, 17);
+        matmul_into_with(Kernel::Q8.general(), &a, &b, &mut via_dense);
+        assert_eq!(via_q8.data, via_dense.data);
+        assert!(via_q8.max_abs_diff(&naive(&a, &b)) < 1e-3);
     }
 
     #[test]

@@ -8,27 +8,57 @@
 //! simple and fast.
 //!
 //! GEMM runs on runtime-dispatched kernels ([`simd`]): the blocked scalar
-//! path (default; the conformance oracle and paper-exact baseline) or
-//! explicit f32x8 AVX2/NEON microkernels selected by `[linalg] kernel =
-//! auto|simd|scalar` / `--gemm-kernel` / `SARA_GEMM_KERNEL`.
+//! path (default; the conformance oracle and paper-exact baseline),
+//! explicit f32x8 AVX2/NEON microkernels, the opt-in f32x16 AVX-512
+//! backend, or the opt-in int8 projection path, selected by `[linalg]
+//! kernel = auto|simd|scalar|avx512|q8` / `--gemm-kernel` /
+//! `SARA_GEMM_KERNEL`. [`autotune`] can pick the kernel per recorded layer
+//! shape at startup (`SARA_TUNE_CACHE`).
+//!
+//! ## The fused-chain contract ([`fused`])
+//!
+//! The Algorithm-1 hot chain (R = PᵀG → inner-Adam → U = PN) also exists
+//! as a single tiled pass, [`fused::fused_lowrank_update`], dispatched by
+//! `optim/lowrank.rs` behind `[optim] fused_update` (default on). The
+//! precision ladder, from strictest to loosest:
+//!
+//! * **scalar unfused = the oracle**: the blocked scalar kernels are
+//!   byte-for-byte the pre-SIMD kernels; every other path is judged
+//!   against them.
+//! * **fused preserves association order**: the fusion re-tiles the loops
+//!   but keeps each per-element f32 operation sequence identical, so the
+//!   default config (fused on, scalar kernel) is **bit-identical** to the
+//!   unfused oracle — pinned by `prop_fused_*` and the W=1/W=2
+//!   distributed trajectory test.
+//! * **SIMD is tolerance-tested**: FMA re-association, documented bounds
+//!   (`prop_simd_*`); bit-identical *within* each lane-width group.
+//! * **q8 is tolerance-tested**: the int8 projection products are
+//!   bit-identical to the scalar GEMM of the *dequantized* projector, and
+//!   carry the quantization error bound derived from
+//!   `QuantizedTensor::error_bound` vs the f32 oracle (`prop_q8_*`).
 
+mod autotune;
 mod eigh;
+pub mod fused;
 mod matmul;
 mod matrix;
 mod qr;
 pub mod simd;
 mod svd;
 
+pub use autotune::{TuneCache, TuneEntry};
 pub use eigh::{eigh_symmetric, eigh_symmetric_with_threshold};
+pub use fused::{fused_lowrank_update, FusedAdam};
 pub use matmul::{
     gram_into, gram_into_par, gram_into_par_with, gram_into_with, matmul_into,
-    matmul_into_par, matmul_into_par_with, matmul_into_with, matmul_t_into,
-    matmul_t_into_with, t_matmul_into, t_matmul_into_with,
+    matmul_into_par, matmul_into_par_with, matmul_into_with, matmul_q8_into,
+    matmul_t_into, matmul_t_into_with, t_matmul_into, t_matmul_into_with,
+    t_matmul_q8_into,
 };
 pub use matrix::Matrix;
 pub use simd::{
-    active_kernel, available_kernels, detect_native, force_kernel, resolve,
-    set_kernel, Kernel, KernelChoice,
+    active_kernel, available_kernels, detect_avx512, detect_native,
+    force_kernel, resolve, set_kernel, Kernel, KernelChoice,
 };
 pub use qr::{orthogonality_defect, qr_thin};
 pub use svd::{

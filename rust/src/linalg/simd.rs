@@ -33,6 +33,27 @@
 //! and documented in the tests — which is also why trajectory-exactness
 //! tests and paper-exact presets pin `kernel = scalar`.
 //!
+//! ## The 16-lane tier
+//!
+//! [`Lane16`] is the same contract one register wider (f32x16), with two
+//! backends: [`ScalarLanes16`] (`[f32; 16]` + `mul_add`, the portable
+//! conformance twin) and `Avx512` (`__m512`, compiled only when build.rs
+//! probes a compiler with stable AVX-512 intrinsics — `cfg(sara_avx512)` —
+//! and entered only through an `avx512f` `#[target_feature]` shim after
+//! `is_x86_feature_detected!("avx512f")`). The 16-lane GEMM schedule
+//! (`gemm_rows_lanes16`) mirrors the 8-lane one exactly with a 16-wide
+//! panel; the two lane16 backends are bit-identical to each other by the
+//! same construction argument as the 8-lane trio, but the 16-lane schedule
+//! is **not** bit-identical to the 8-lane one (the `n % 16` vs `n % 8`
+//! column-tail split differs), so lane16 is its own conformance group:
+//! tolerance-pinned against the scalar oracle, bit-pinned within the
+//! group. The dot-product shapes (A·Bᵀ, Gram) gain nothing from wider
+//! registers, so lane16 kernels route those through the shared 8-lane
+//! code — keeping A·Bᵀ/Gram bit-identical across *every* SIMD backend.
+//! `kernel = avx512` is opt-in and never comes out of [`detect_native`]
+//! (auto stays avx2/neon); without avx512f hardware it falls back to
+//! [`ScalarLanes16`] so the 16-lane schedule is still the one exercised.
+//!
 //! ## Microkernel shapes
 //!
 //! * `gemm_rows_lanes` (C = A·B and C = Aᵀ·B via strides): k-panels of
@@ -49,15 +70,19 @@
 //!
 //! ## Dispatch
 //!
-//! [`KernelChoice`] (`auto | simd | scalar`) is the config-facing knob
-//! (`[linalg] kernel`, `--gemm-kernel`); [`resolve`] turns it into a
-//! concrete [`Kernel`] via `is_x86_feature_detected!` / aarch64 detection.
-//! The process-global active kernel (set once per run by
-//! `Trainer::new` / [`set_kernel`], read by the `matmul.rs` entry points)
-//! defaults to the scalar oracle; `SARA_GEMM_KERNEL=auto|simd|scalar` or
-//! `SARA_FORCE_SCALAR=1` override any config so CI can exercise both paths
-//! on any host. Kernel-explicit `*_with` entry points in `matmul.rs`
-//! bypass the global entirely (tests/benches).
+//! [`KernelChoice`] (`auto | simd | scalar | avx512 | q8`) is the
+//! config-facing knob (`[linalg] kernel`, `--gemm-kernel`); [`resolve`]
+//! turns it into a concrete [`Kernel`] via `is_x86_feature_detected!` /
+//! aarch64 detection. The process-global active kernel (set once per run
+//! by `Trainer::new` / [`set_kernel`], read by the `matmul.rs` entry
+//! points) defaults to the scalar oracle;
+//! `SARA_GEMM_KERNEL=auto|simd|scalar|avx512|q8` or `SARA_FORCE_SCALAR=1`
+//! override any config so CI can exercise both paths on any host.
+//! Kernel-explicit `*_with` entry points in `matmul.rs` bypass the global
+//! entirely (tests/benches). [`Kernel::Q8`] is not a GEMM schedule of its
+//! own: it arms the int8 projection products in `optim/lowrank.rs`
+//! (`matmul.rs::matmul_q8_into`), and every *dense* entry point
+//! normalizes it to the best dense kernel via [`Kernel::general`].
 
 use super::Matrix;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -323,6 +348,143 @@ mod neon {
     }
 }
 
+// ----------------------------------------------------------- lane16 trait
+
+/// One 16-lane f32 vector register — the AVX-512 tier of the lane
+/// abstraction. Same contract as [`Lane8`] (fused `fma`, unaligned
+/// `load`/`store`), minus the reductions: the 16-lane schedule only runs
+/// the broadcast-FMA GEMM, never the dot-product transpose-reduce.
+pub trait Lane16 {
+    /// The register type (`[f32; 16]` or `__m512`).
+    type V: Copy;
+    /// Human-readable backend name (logs, bench rows, dispatch tests).
+    const NAME: &'static str;
+
+    fn zero() -> Self::V;
+    fn splat(x: f32) -> Self::V;
+    /// # Safety
+    /// `src` must be valid for reads of 16 consecutive `f32`s.
+    unsafe fn load(src: *const f32) -> Self::V;
+    /// # Safety
+    /// `dst` must be valid for writes of 16 consecutive `f32`s.
+    unsafe fn store(dst: *mut f32, v: Self::V);
+    fn add(a: Self::V, b: Self::V) -> Self::V;
+    /// Fused `acc + a * b` — one rounding, never mul-then-add.
+    fn fma(acc: Self::V, a: Self::V, b: Self::V) -> Self::V;
+
+    /// Spill to an array (conformance tests).
+    #[inline(always)]
+    fn to_array(v: Self::V) -> [f32; 16] {
+        let mut out = [0.0f32; 16];
+        // Safety: `out` is exactly 16 f32s.
+        unsafe { Self::store(out.as_mut_ptr(), v) };
+        out
+    }
+
+    #[inline(always)]
+    fn from_array(a: &[f32; 16]) -> Self::V {
+        // Safety: `a` is exactly 16 f32s.
+        unsafe { Self::load(a.as_ptr()) }
+    }
+}
+
+/// Portable 16-lane backend: the AVX-512 algorithm on `[f32; 16]` arrays
+/// with fused `mul_add` — bit-identical to the `__m512` backend, and the
+/// fallback `kernel = avx512` resolves to on hosts without avx512f, so the
+/// 16-lane schedule is conformance-testable anywhere.
+pub struct ScalarLanes16;
+
+impl Lane16 for ScalarLanes16 {
+    type V = [f32; 16];
+    const NAME: &'static str = "simd-portable16";
+
+    #[inline(always)]
+    fn zero() -> [f32; 16] {
+        [0.0; 16]
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> [f32; 16] {
+        [x; 16]
+    }
+
+    #[inline(always)]
+    unsafe fn load(src: *const f32) -> [f32; 16] {
+        let mut v = [0.0f32; 16];
+        std::ptr::copy_nonoverlapping(src, v.as_mut_ptr(), 16);
+        v
+    }
+
+    #[inline(always)]
+    unsafe fn store(dst: *mut f32, v: [f32; 16]) {
+        std::ptr::copy_nonoverlapping(v.as_ptr(), dst, 16);
+    }
+
+    #[inline(always)]
+    fn add(a: [f32; 16], b: [f32; 16]) -> [f32; 16] {
+        let mut out = [0.0f32; 16];
+        for i in 0..16 {
+            out[i] = a[i] + b[i];
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn fma(acc: [f32; 16], a: [f32; 16], b: [f32; 16]) -> [f32; 16] {
+        let mut out = [0.0f32; 16];
+        for i in 0..16 {
+            out[i] = a[i].mul_add(b[i], acc[i]);
+        }
+        out
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", sara_avx512))]
+mod avx512 {
+    use super::Lane16;
+    use core::arch::x86_64::*;
+
+    /// AVX-512F backend. Only entered through the `#[target_feature]`
+    /// wrapper below, after runtime detection; only compiled when build.rs
+    /// found a compiler with stable `_mm512_*` intrinsics.
+    pub struct Avx512;
+
+    impl Lane16 for Avx512 {
+        type V = __m512;
+        const NAME: &'static str = "avx512f";
+
+        #[inline(always)]
+        fn zero() -> __m512 {
+            unsafe { _mm512_setzero_ps() }
+        }
+
+        #[inline(always)]
+        fn splat(x: f32) -> __m512 {
+            unsafe { _mm512_set1_ps(x) }
+        }
+
+        #[inline(always)]
+        unsafe fn load(src: *const f32) -> __m512 {
+            _mm512_loadu_ps(src)
+        }
+
+        #[inline(always)]
+        unsafe fn store(dst: *mut f32, v: __m512) {
+            _mm512_storeu_ps(dst, v);
+        }
+
+        #[inline(always)]
+        fn add(a: __m512, b: __m512) -> __m512 {
+            unsafe { _mm512_add_ps(a, b) }
+        }
+
+        #[inline(always)]
+        fn fma(acc: __m512, a: __m512, b: __m512) -> __m512 {
+            unsafe { _mm512_fmadd_ps(a, b, acc) }
+        }
+    }
+}
+
 // ---------------------------------------------------------------- kernels
 
 /// The 4-row x 8-column FMA microkernel over one packed B panel: rows
@@ -477,6 +639,127 @@ fn gemm_rows_lanes<L: Lane8>(
         if n8 < n {
             scalar_column_tail(
                 a, a_row_stride, a_depth_stride, b, kb, kend, lo, hi, n8,
+                c_rows,
+            );
+        }
+    }
+}
+
+/// The 16-wide twin of [`panel_rows`]: rows `lo..hi` of C columns
+/// `j..j+16` accumulate `A[:, kb..kb+klen] · panel`, where `panel` holds
+/// `klen` rows of 16 packed B values. Same 4-row accumulator schedule,
+/// one register twice as wide.
+///
+/// Safety contract (checked by the caller): `panel` is valid for
+/// `klen * 16` reads, and `c_rows` holds rows `lo..hi` of an `n`-wide C.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn panel_rows16<L: Lane16>(
+    a: &[f32],
+    a_row_stride: usize,
+    a_depth_stride: usize,
+    panel: *const f32,
+    kb: usize,
+    klen: usize,
+    lo: usize,
+    hi: usize,
+    j: usize,
+    n: usize,
+    c_rows: &mut [f32],
+) {
+    let at = |i: usize, kk: usize| -> f32 {
+        a[i * a_row_stride + (kb + kk) * a_depth_stride]
+    };
+    let mut i = lo;
+    while i + 4 <= hi {
+        let mut acc = [L::zero(); 4];
+        for kk in 0..klen {
+            // Safety: panel row kk is 16 floats (caller contract).
+            let bv = unsafe { L::load(panel.add(kk * 16)) };
+            acc[0] = L::fma(acc[0], L::splat(at(i, kk)), bv);
+            acc[1] = L::fma(acc[1], L::splat(at(i + 1, kk)), bv);
+            acc[2] = L::fma(acc[2], L::splat(at(i + 2, kk)), bv);
+            acc[3] = L::fma(acc[3], L::splat(at(i + 3, kk)), bv);
+        }
+        for (r, &av) in acc.iter().enumerate() {
+            let off = (i + r - lo) * n + j;
+            // Safety: [off, off + 16) is inside row i + r of C.
+            unsafe {
+                let cp = c_rows.as_mut_ptr().add(off);
+                L::store(cp, L::add(L::load(cp), av));
+            }
+        }
+        i += 4;
+    }
+    while i < hi {
+        let mut acc = L::zero();
+        for kk in 0..klen {
+            // Safety: panel row kk is 16 floats (caller contract).
+            let bv = unsafe { L::load(panel.add(kk * 16)) };
+            acc = L::fma(acc, L::splat(at(i, kk)), bv);
+        }
+        let off = (i - lo) * n + j;
+        // Safety: [off, off + 16) is inside row i of C.
+        unsafe {
+            let cp = c_rows.as_mut_ptr().add(off);
+            L::store(cp, L::add(L::load(cp), acc));
+        }
+        i += 1;
+    }
+}
+
+/// The 16-wide twin of [`gemm_rows_lanes`]: same k-panel/pack/microkernel
+/// schedule with 16-column j-tiles (16 KiB stack panel) and a shared
+/// scalar `mul_add` tail for `n % 16` columns. Bit-identical across the
+/// two [`Lane16`] backends; *not* bit-identical to the 8-lane schedule
+/// (different column-tail split) — the lane16 group is tolerance-pinned
+/// against the scalar oracle in the property suite instead.
+#[inline(always)]
+fn gemm_rows_lanes16<L: Lane16>(
+    a: &[f32],
+    a_row_stride: usize,
+    a_depth_stride: usize,
+    b: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_rows: &mut [f32],
+) {
+    let (k, n) = (b.rows, b.cols);
+    debug_assert_eq!(c_rows.len(), (hi - lo) * n);
+    c_rows.fill(0.0);
+    if k == 0 || n == 0 || lo >= hi {
+        return;
+    }
+    let n16 = n - n % 16;
+    let mut panel = [0.0f32; KC * 16];
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        let klen = kend - kb;
+        let mut j = 0;
+        while j < n16 {
+            for kk in 0..klen {
+                let src = (kb + kk) * n + j;
+                panel[kk * 16..kk * 16 + 16]
+                    .copy_from_slice(&b.data[src..src + 16]);
+            }
+            panel_rows16::<L>(
+                a,
+                a_row_stride,
+                a_depth_stride,
+                panel.as_ptr(),
+                kb,
+                klen,
+                lo,
+                hi,
+                j,
+                n,
+                c_rows,
+            );
+            j += 16;
+        }
+        if n16 < n {
+            scalar_column_tail(
+                a, a_row_stride, a_depth_stride, b, kb, kend, lo, hi, n16,
                 c_rows,
             );
         }
@@ -755,6 +1038,30 @@ mod entry_avx2 {
     }
 }
 
+#[cfg(all(target_arch = "x86_64", sara_avx512))]
+mod entry_avx512 {
+    use super::avx512::Avx512;
+    use super::Matrix;
+
+    // Safety: caller verified avx512f via runtime detection
+    // (`detect_avx512`). Only the broadcast-FMA GEMM runs 16 lanes wide —
+    // the dot-product shapes route through the shared 8-lane code so
+    // A·Bᵀ/Gram stay bit-identical across every SIMD backend.
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemm_rows(
+        a: &[f32],
+        rs: usize,
+        ds: usize,
+        b: &Matrix,
+        lo: usize,
+        hi: usize,
+        c_rows: &mut [f32],
+    ) {
+        super::gemm_rows_lanes16::<Avx512>(a, rs, ds, b, lo, hi, c_rows);
+    }
+}
+
 // ------------------------------------------------------------- dispatch API
 
 /// Concrete kernel executing the GEMM entry points.
@@ -771,6 +1078,18 @@ pub enum Kernel {
     SimdAvx2,
     /// NEON 2x f32x4 (aarch64).
     SimdNeon,
+    /// The 16-lane schedule on the portable `[f32; 16]` backend
+    /// (`kernel = avx512` fallback on hosts without avx512f; bit-identical
+    /// to the `__m512` backend).
+    SimdPortable16,
+    /// AVX-512F f32x16 (x86_64, runtime-detected, opt-in — never chosen by
+    /// `auto`; requires a compiler with stable `_mm512_*` intrinsics).
+    SimdAvx512,
+    /// Int8 projection products: P is block-quantized once per refresh and
+    /// the R = PᵀG / U = PN GEMMs dequantize on the fly with f32
+    /// accumulation (`matmul.rs::matmul_q8_into`). Not a dense GEMM
+    /// schedule — dense entry points normalize it via [`Kernel::general`].
+    Q8,
 }
 
 impl Kernel {
@@ -780,12 +1099,55 @@ impl Kernel {
             Kernel::SimdPortable => ScalarLanes::NAME,
             Kernel::SimdAvx2 => "avx2+fma",
             Kernel::SimdNeon => "neon",
+            Kernel::SimdPortable16 => ScalarLanes16::NAME,
+            Kernel::SimdAvx512 => "avx512f",
+            Kernel::Q8 => "q8",
         }
     }
 
-    /// True for every kernel running the SIMD schedule (portable included).
+    /// Inverse of [`Kernel::name`] (the autotune cache stores kernels by
+    /// name so the JSON stays human-readable and stable across enum
+    /// reorders).
+    pub fn from_name(s: &str) -> Option<Kernel> {
+        [
+            Kernel::Scalar,
+            Kernel::SimdPortable,
+            Kernel::SimdAvx2,
+            Kernel::SimdNeon,
+            Kernel::SimdPortable16,
+            Kernel::SimdAvx512,
+            Kernel::Q8,
+        ]
+        .into_iter()
+        .find(|k| k.name() == s)
+    }
+
+    /// True for every kernel running a SIMD GEMM schedule (portable
+    /// backends included; `q8` excluded — it is an operand encoding, not a
+    /// schedule, and never reaches the SIMD dispatchers).
     pub fn is_simd(self) -> bool {
-        self != Kernel::Scalar
+        !matches!(self, Kernel::Scalar | Kernel::Q8)
+    }
+
+    /// True for the kernels running the 16-wide schedule (own conformance
+    /// group; excluded from the 8-wide shared-pack `_par` path, whose pack
+    /// layout is 8-column).
+    pub fn is_lane16(self) -> bool {
+        matches!(self, Kernel::SimdPortable16 | Kernel::SimdAvx512)
+    }
+
+    /// The dense GEMM schedule to use when the active kernel is [`Q8`]
+    /// (which only applies to projection products holding a quantized
+    /// operand): the best dense kernel on this host. Every other kernel
+    /// maps to itself. Applied by the public `*_with` funnels in
+    /// `matmul.rs`.
+    ///
+    /// [`Q8`]: Kernel::Q8
+    pub(crate) fn general(self) -> Kernel {
+        match self {
+            Kernel::Q8 => detect_native().unwrap_or(Kernel::SimdPortable),
+            k => k,
+        }
     }
 
     fn to_u8(self) -> u8 {
@@ -794,6 +1156,9 @@ impl Kernel {
             Kernel::SimdPortable => 1,
             Kernel::SimdAvx2 => 2,
             Kernel::SimdNeon => 3,
+            Kernel::SimdPortable16 => 4,
+            Kernel::SimdAvx512 => 5,
+            Kernel::Q8 => 6,
         }
     }
 
@@ -802,6 +1167,9 @@ impl Kernel {
             0 => Kernel::Scalar,
             1 => Kernel::SimdPortable,
             2 => Kernel::SimdAvx2,
+            4 => Kernel::SimdPortable16,
+            5 => Kernel::SimdAvx512,
+            6 => Kernel::Q8,
             _ => Kernel::SimdNeon,
         }
     }
@@ -826,6 +1194,14 @@ pub enum KernelChoice {
     /// Always the SIMD schedule: native backend when available, portable
     /// lanes otherwise (CI conformance on any host).
     Simd,
+    /// The 16-lane schedule: AVX-512 when the CPU (and compiler) support
+    /// it, portable 16-lane emulation otherwise — opt-in, never chosen by
+    /// `auto`.
+    Avx512,
+    /// Int8 projection products (quantize P once per refresh, dequantizing
+    /// f32-accumulation GEMM) — opt-in, tolerance-tested, never chosen by
+    /// `auto`.
+    Q8,
 }
 
 impl KernelChoice {
@@ -834,6 +1210,8 @@ impl KernelChoice {
             "scalar" => Some(KernelChoice::Scalar),
             "auto" => Some(KernelChoice::Auto),
             "simd" => Some(KernelChoice::Simd),
+            "avx512" => Some(KernelChoice::Avx512),
+            "q8" => Some(KernelChoice::Q8),
             _ => None,
         }
     }
@@ -843,19 +1221,26 @@ impl KernelChoice {
             KernelChoice::Scalar => "scalar",
             KernelChoice::Auto => "auto",
             KernelChoice::Simd => "simd",
+            KernelChoice::Avx512 => "avx512",
+            KernelChoice::Q8 => "q8",
         }
     }
 }
 
-/// Every kernel that can execute on this host: the scalar oracle, the
-/// portable lane backend, and the native vector backend when the CPU
-/// reports one. The shared enumeration for conformance tests and benches
-/// — a future backend (e.g. AVX-512) added to [`detect_native`] is then
-/// covered everywhere automatically.
+/// Every dense GEMM kernel that can execute on this host: the scalar
+/// oracle, both portable lane backends, the native vector backend when
+/// the CPU reports one, and AVX-512 when both the CPU and the compiler
+/// support it. The shared enumeration for conformance tests, benches, and
+/// the autotuner. `q8` is excluded — it is an operand encoding for the
+/// projection products, not a dense kernel.
 pub fn available_kernels() -> Vec<Kernel> {
-    let mut ks = vec![Kernel::Scalar, Kernel::SimdPortable];
+    let mut ks =
+        vec![Kernel::Scalar, Kernel::SimdPortable, Kernel::SimdPortable16];
     if let Some(native) = detect_native() {
         ks.push(native);
+    }
+    if detect_avx512() {
+        ks.push(Kernel::SimdAvx512);
     }
     ks
 }
@@ -878,15 +1263,43 @@ pub fn detect_native() -> Option<Kernel> {
     None
 }
 
+/// AVX-512 usability: the CPU reports avx512f (plus the avx2+fma baseline
+/// the lane16 kernels' 8-lane A·Bᵀ/Gram routing assumes) *and* build.rs
+/// probed a compiler with stable `_mm512_*` intrinsics (`sara_avx512`).
+/// Deliberately not part of [`detect_native`]: `auto` stays on avx2/neon
+/// (frequency-licensing on older parts makes 512-bit a per-shape call —
+/// the autotuner's job, not blanket detection), so `avx512` is reached
+/// only by explicit opt-in.
+pub fn detect_avx512() -> bool {
+    #[cfg(all(target_arch = "x86_64", sara_avx512))]
+    {
+        return is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma");
+    }
+    #[cfg(not(all(target_arch = "x86_64", sara_avx512)))]
+    false
+}
+
 /// Resolve a config choice to a concrete kernel on this host.
 pub fn resolve(choice: KernelChoice) -> Kernel {
     match choice {
         KernelChoice::Scalar => Kernel::Scalar,
         // auto falls back to the *oracle* (the fastest scalar path);
         // forced simd falls back to the portable lanes so the SIMD
-        // schedule is always the one exercised
+        // schedule is always the one exercised — likewise forced avx512
+        // lands on the portable 16-lane emulation, never silently on a
+        // different schedule
         KernelChoice::Auto => detect_native().unwrap_or(Kernel::Scalar),
         KernelChoice::Simd => detect_native().unwrap_or(Kernel::SimdPortable),
+        KernelChoice::Avx512 => {
+            if detect_avx512() {
+                Kernel::SimdAvx512
+            } else {
+                Kernel::SimdPortable16
+            }
+        }
+        KernelChoice::Q8 => Kernel::Q8,
     }
 }
 
@@ -897,10 +1310,10 @@ const KERNEL_UNSET: u8 = u8::MAX;
 /// overwrites it from the run config (still subject to the env override).
 static ACTIVE: AtomicU8 = AtomicU8::new(KERNEL_UNSET);
 
-/// `SARA_FORCE_SCALAR=1` / `SARA_GEMM_KERNEL=auto|simd|scalar`: the CI
-/// hook that wins over any config, so one environment variable flips a
-/// whole test/bench run between the oracle and the SIMD path.
-fn env_override() -> Option<KernelChoice> {
+/// `SARA_FORCE_SCALAR=1` / `SARA_GEMM_KERNEL=auto|simd|scalar|avx512|q8`:
+/// the CI hook that wins over any config, so one environment variable
+/// flips a whole test/bench run between the oracle and a SIMD path.
+pub(crate) fn env_override() -> Option<KernelChoice> {
     if std::env::var("SARA_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
         return Some(KernelChoice::Scalar);
     }
@@ -910,7 +1323,7 @@ fn env_override() -> Option<KernelChoice> {
             None => {
                 eprintln!(
                     "warning: SARA_GEMM_KERNEL='{v}' is not \
-                     auto|simd|scalar; ignoring"
+                     auto|simd|scalar|avx512|q8; ignoring"
                 );
                 None
             }
@@ -974,6 +1387,10 @@ pub(crate) fn matmul_rows_prepacked_simd(
     c_rows: &mut [f32],
 ) {
     debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    debug_assert!(
+        !kernel.is_lane16(),
+        "the shared pack is 8-column; matmul.rs gates lane16 off this path"
+    );
     match kernel {
         #[cfg(target_arch = "x86_64")]
         // Safety: SimdAvx2 only comes out of detect_native().
@@ -1024,7 +1441,35 @@ fn gemm_rows_dispatch(
         Kernel::SimdNeon => {
             gemm_rows_lanes::<neon::Neon>(a, rs, ds, b, lo, hi, c_rows)
         }
+        Kernel::SimdPortable16 => {
+            gemm_rows_lanes16::<ScalarLanes16>(a, rs, ds, b, lo, hi, c_rows)
+        }
+        Kernel::SimdAvx512 => {
+            #[cfg(all(target_arch = "x86_64", sara_avx512))]
+            // Safety: SimdAvx512 only comes out of detect_avx512().
+            unsafe {
+                entry_avx512::gemm_rows(a, rs, ds, b, lo, hi, c_rows)
+            };
+            // unreachable in practice without the cfg (resolve() never
+            // yields SimdAvx512 then), but force_kernel could: run the
+            // same 16-lane schedule portably
+            #[cfg(not(all(target_arch = "x86_64", sara_avx512)))]
+            gemm_rows_lanes16::<ScalarLanes16>(a, rs, ds, b, lo, hi, c_rows);
+        }
         _ => gemm_rows_lanes::<ScalarLanes>(a, rs, ds, b, lo, hi, c_rows),
+    }
+}
+
+/// Route the lane16 kernels to their 8-lane siblings for the dot-product
+/// shapes (A·Bᵀ, Gram): wider registers buy nothing on transpose-reduce
+/// work, and sharing the 8-lane code keeps those two products
+/// bit-identical across *every* SIMD backend. Sound because
+/// [`detect_avx512`] requires the avx2+fma baseline.
+fn narrow_for_dot(kernel: Kernel) -> Kernel {
+    match kernel {
+        Kernel::SimdPortable16 => Kernel::SimdPortable,
+        Kernel::SimdAvx512 => Kernel::SimdAvx2,
+        k => k,
     }
 }
 
@@ -1036,6 +1481,7 @@ pub(crate) fn matmul_t_simd(
     c: &mut Matrix,
 ) {
     debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    let kernel = narrow_for_dot(kernel);
     match kernel {
         #[cfg(target_arch = "x86_64")]
         // Safety: SimdAvx2 only comes out of detect_native().
@@ -1057,6 +1503,7 @@ pub(crate) fn gram_rows_upper_simd(
     m: usize,
 ) {
     debug_assert!(kernel.is_simd(), "scalar dispatch is handled in matmul.rs");
+    let kernel = narrow_for_dot(kernel);
     match kernel {
         #[cfg(target_arch = "x86_64")]
         // Safety: SimdAvx2 only comes out of detect_native().
@@ -1184,14 +1631,103 @@ mod tests {
         assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
         assert_eq!(KernelChoice::parse("SIMD"), Some(KernelChoice::Simd));
         assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse("avx512"), Some(KernelChoice::Avx512));
+        assert_eq!(KernelChoice::parse("q8"), Some(KernelChoice::Q8));
         assert_eq!(KernelChoice::parse("fast"), None);
         assert_eq!(KernelChoice::default(), KernelChoice::Scalar);
 
         assert_eq!(resolve(KernelChoice::Scalar), Kernel::Scalar);
         // forced simd never lands on the oracle
         assert!(resolve(KernelChoice::Simd).is_simd());
-        // auto is native-or-oracle, never the portable emulation
+        // auto is native-or-oracle, never the portable emulation, and
+        // never the opt-in 16-lane / q8 paths
         let auto = resolve(KernelChoice::Auto);
         assert!(auto == Kernel::Scalar || detect_native() == Some(auto));
+        assert!(!auto.is_lane16() && auto != Kernel::Q8);
+        // forced avx512 always runs the 16-lane schedule (hardware when
+        // detected, portable emulation otherwise)
+        let a512 = resolve(KernelChoice::Avx512);
+        assert!(a512.is_lane16() && a512.is_simd());
+        if !detect_avx512() {
+            assert_eq!(a512, Kernel::SimdPortable16);
+        }
+        // q8 resolves to itself; its dense normalization is a real
+        // schedule
+        assert_eq!(resolve(KernelChoice::Q8), Kernel::Q8);
+        assert!(!Kernel::Q8.is_simd());
+        assert_ne!(Kernel::Q8.general(), Kernel::Q8);
+        assert!(Kernel::Q8.general().is_simd());
+        // name round-trip covers the autotune cache encoding
+        for k in available_kernels() {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::from_name("warp-drive"), None);
+    }
+
+    #[test]
+    fn lane16_portable_gemm_matches_lane8_within_tolerance() {
+        // the 16-lane schedule is its own conformance group (different
+        // column-tail split than 8-lane); sanity-pin it against the
+        // 8-lane portable result with the documented FMA-reassociation
+        // tolerance, including shapes exercising both tails
+        let mut rng = Pcg64::new(23);
+        for &(m, k, n) in
+            &[(5usize, 40usize, 33usize), (9, 300, 16), (4, 17, 7), (3, 64, 24)]
+        {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c8 = vec![0.0f32; m * n];
+            let mut c16 = vec![0.0f32; m * n];
+            gemm_rows_lanes::<ScalarLanes>(&a.data, k, 1, &b, 0, m, &mut c8);
+            gemm_rows_lanes16::<ScalarLanes16>(
+                &a.data, k, 1, &b, 0, m, &mut c16,
+            );
+            for i in 0..m * n {
+                assert!(
+                    (c8[i] - c16[i]).abs() <= 1e-5 * (k as f32),
+                    "({m},{k},{n}) elem {i}: {} vs {}",
+                    c8[i],
+                    c16[i]
+                );
+            }
+        }
+    }
+
+    #[cfg(all(target_arch = "x86_64", sara_avx512))]
+    #[test]
+    fn avx512_lane_ops_match_portable16_bitwise() {
+        if !detect_avx512() {
+            eprintln!("no avx512f on this host; skipping");
+            return;
+        }
+        use super::avx512::Avx512;
+        let mut rng = Pcg64::new(24);
+        for _ in 0..50 {
+            let mut a = [0.0f32; 16];
+            let mut b = [0.0f32; 16];
+            let mut c = [0.0f32; 16];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            rng.fill_normal(&mut c, 1.0);
+            let (pa, pb, pc) = (
+                <ScalarLanes16 as Lane16>::from_array(&a),
+                <ScalarLanes16 as Lane16>::from_array(&b),
+                <ScalarLanes16 as Lane16>::from_array(&c),
+            );
+            let (va, vb, vc) = (
+                <Avx512 as Lane16>::from_array(&a),
+                <Avx512 as Lane16>::from_array(&b),
+                <Avx512 as Lane16>::from_array(&c),
+            );
+            assert_eq!(
+                ScalarLanes16::to_array(ScalarLanes16::fma(pc, pa, pb)),
+                Avx512::to_array(Avx512::fma(vc, va, vb)),
+                "fused fma must be bit-identical across lane16 backends"
+            );
+            assert_eq!(
+                ScalarLanes16::to_array(ScalarLanes16::add(pa, pb)),
+                Avx512::to_array(Avx512::add(va, vb)),
+            );
+        }
     }
 }

@@ -53,6 +53,24 @@ impl OptState for Adam {
         }
     }
 
+    fn begin_fused_update(&mut self) -> Option<crate::linalg::FusedAdam<'_>> {
+        // mirror direction_into exactly: advance t, precompute the
+        // bias-correction factors, hand out the moment buffers; the fused
+        // kernel then runs the identical per-element expression per tile
+        self.t += 1;
+        let c1 = 1.0 / (1.0 - self.beta1.powi(self.t as i32));
+        let c2 = 1.0 / (1.0 - self.beta2.powi(self.t as i32));
+        Some(crate::linalg::FusedAdam {
+            m: &mut self.m.data,
+            v: &mut self.v.data,
+            beta1: self.beta1,
+            beta2: self.beta2,
+            eps: self.eps,
+            c1,
+            c2,
+        })
+    }
+
     fn reproject(&mut self, c: &Matrix) {
         // M <- C M ; V kept (elementwise state has no linear transport)
         self.m = c.matmul(&self.m);
@@ -108,6 +126,35 @@ mod tests {
             let vh = v / (1.0 - b2.powi(t as i32));
             let want = mh / (vh.sqrt() + eps);
             assert!((d as f64 - want).abs() < 1e-4, "t={t}: {d} vs {want}");
+        }
+    }
+
+    #[test]
+    fn begin_fused_update_advances_t_like_direction_into() {
+        // the fused handle must be a drop-in for one direction_into step:
+        // same counter advance, same bias corrections, same moment buffers
+        let mut a = Adam::new(2, 3, &cfg());
+        let mut b = Adam::new(2, 3, &cfg());
+        let mut rng = Pcg64::new(3);
+        for t in 1..=4 {
+            let g = Matrix::randn(2, 3, 1.0, &mut rng);
+            let da = a.direction(&g, t);
+            let mut db = Matrix::zeros(2, 3);
+            {
+                let h = b.begin_fused_update().expect("adam is fusable");
+                for i in 0..g.data.len() {
+                    let gi = g.data[i];
+                    let m = h.beta1 * h.m[i] + (1.0 - h.beta1) * gi;
+                    let v = h.beta2 * h.v[i] + (1.0 - h.beta2) * gi * gi;
+                    h.m[i] = m;
+                    h.v[i] = v;
+                    db.data[i] = (m * h.c1) / ((v * h.c2).sqrt() + h.eps);
+                }
+            }
+            assert_eq!(da.data, db.data, "t={t}");
+            assert_eq!(a.m.data, b.m.data, "t={t}");
+            assert_eq!(a.v.data, b.v.data, "t={t}");
+            assert_eq!(a.t, b.t, "t={t}");
         }
     }
 

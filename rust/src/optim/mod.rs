@@ -64,6 +64,19 @@ pub trait OptState: Send {
         out
     }
 
+    /// Begin one fused Algorithm-1 step: advance the step counter exactly
+    /// as [`OptState::direction_into`] would and hand out the raw moment
+    /// buffers + bias-correction factors for
+    /// [`crate::linalg::fused_lowrank_update`] to apply tile-by-tile.
+    ///
+    /// Returns `Some` **only** for states whose per-element update the
+    /// fused kernel reproduces bit-for-bit (plain Adam); every other state
+    /// keeps the default `None` and the caller falls back to the unfused
+    /// three-pass chain.
+    fn begin_fused_update(&mut self) -> Option<crate::linalg::FusedAdam<'_>> {
+        None
+    }
+
     /// Momentum re-projection on subspace change: first-moment state `M`
     /// (in old-subspace coordinates) is mapped into the new subspace by
     /// `M <- C @ M` with `C = P_new^T P_old` (r x r). Second-moment states

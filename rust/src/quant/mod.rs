@@ -58,6 +58,21 @@ impl QuantizedTensor {
         }
     }
 
+    /// Quantize a dense buffer into this tensor, reshaping it if needed —
+    /// the general form of [`requantize`](Self::requantize) (which asserts
+    /// a matching block layout). Shrinking or same-size targets reuse the
+    /// existing buffers without allocating, so steady-state callers that
+    /// size the tensor once (e.g. the per-refresh projector quantization
+    /// in `optim/lowrank.rs`) stay inside the counting-allocator
+    /// invariant; only a *growing* target allocates.
+    pub fn quantize_into(&mut self, data: &[f32]) {
+        self.len = data.len();
+        // Vec::resize never reallocates when shrinking or unchanged
+        self.codes.resize(self.len, 0);
+        self.scales.resize(self.len.div_ceil(BLOCK), 0.0);
+        self.requantize(data);
+    }
+
     /// Dequantize into a fresh buffer.
     pub fn dequantize(&self) -> Vec<f32> {
         let mut out = vec![0f32; self.len];
@@ -268,5 +283,38 @@ mod tests {
         let q = QuantizedTensor::quantize(&data);
         assert_eq!(q.dequantize().len(), data.len());
         assert_eq!(q.scales.len(), 2);
+    }
+
+    #[test]
+    fn quantize_into_matches_fresh_quantize_across_shape_changes() {
+        let mut rng = Pcg64::new(7);
+        let mut q = QuantizedTensor::quantize(&[1.0; 10]);
+        // grow, shrink, and partial-block sizes all funnel through the
+        // same buffers and must be indistinguishable from a fresh quantize
+        for len in [3 * BLOCK, BLOCK + 5, 17, 2 * BLOCK] {
+            let data: Vec<f32> =
+                (0..len).map(|_| rng.next_normal() as f32).collect();
+            q.quantize_into(&data);
+            let fresh = QuantizedTensor::quantize(&data);
+            assert_eq!(q.len, fresh.len);
+            assert_eq!(q.codes, fresh.codes);
+            assert_eq!(q.scales, fresh.scales);
+        }
+    }
+
+    #[test]
+    fn quantize_into_same_or_smaller_shape_is_allocation_free() {
+        use crate::util::alloc_count::thread_alloc_count;
+        let mut rng = Pcg64::new(11);
+        let big: Vec<f32> =
+            (0..2 * BLOCK).map(|_| rng.next_normal() as f32).collect();
+        let small: Vec<f32> =
+            (0..BLOCK / 2).map(|_| rng.next_normal() as f32).collect();
+        let mut q = QuantizedTensor::quantize(&big);
+        let before = thread_alloc_count();
+        q.quantize_into(&big); // same size
+        q.quantize_into(&small); // shrink
+        q.quantize_into(&big); // regrow within retained capacity
+        assert_eq!(thread_alloc_count() - before, 0);
     }
 }

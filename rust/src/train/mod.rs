@@ -182,6 +182,29 @@ impl Trainer {
         // resolve the GEMM kernel once per run (default scalar = the
         // paper-exact oracle; env override wins for CI dual-path runs)
         crate::linalg::set_kernel(cfg.linalg.kernel);
+        // per-shape autotune, opt-in via SARA_TUNE_CACHE=path: the model
+        // spec is static here, so every projection GEMM shape the run will
+        // execute is known — time the kernels once, persist the winners,
+        // and reuse the cache on later runs. The measured majority winner
+        // is installed only when the user asked for `kernel = auto` and no
+        // env override already claimed the choice.
+        if let Ok(path) = std::env::var("SARA_TUNE_CACHE") {
+            if !path.is_empty() {
+                let shapes =
+                    projection_shapes(&engine.manifest, cfg.optim.rank);
+                if !shapes.is_empty() {
+                    let cache =
+                        crate::linalg::TuneCache::load_or_tune(&path, &shapes);
+                    if cfg.linalg.kernel == crate::linalg::KernelChoice::Auto
+                        && crate::linalg::simd::env_override().is_none()
+                    {
+                        if let Some(k) = cache.majority_kernel() {
+                            crate::linalg::force_kernel(k);
+                        }
+                    }
+                }
+            }
+        }
         let params = engine.init_params(cfg.seed);
         let man = &engine.manifest;
         let deltas: Vec<Matrix> = man
@@ -787,6 +810,31 @@ fn matrix_dims(shape: &[usize]) -> (usize, usize) {
     }
 }
 
+/// The GEMM shapes the low-rank hot path will execute for this model, as
+/// `(m, k, n)` triples, deduplicated: per low-rank 2-D parameter the
+/// project `R = P^T G` runs a `rank x short @ short x long` product and
+/// the un-project `U = P N` a `short x rank @ rank x long` one (tall
+/// gradients are transposed first, so `short`/`long` are the sorted dims).
+/// This is the shape set the startup autotuner measures.
+fn projection_shapes(man: &Manifest, rank: usize) -> Vec<(usize, usize, usize)> {
+    let mut shapes = Vec::new();
+    for info in &man.params {
+        let (rows, cols) = matrix_dims(&info.shape);
+        if rows < 2 || cols < 2 {
+            continue; // norms/embedding vectors skip the low-rank path
+        }
+        let short = rows.min(cols);
+        let long = rows.max(cols);
+        let rk = rank.min(short);
+        for shape in [(rk, short, long), (short, rk, long)] {
+            if !shapes.contains(&shape) {
+                shapes.push(shape);
+            }
+        }
+    }
+    shapes
+}
+
 /// Run every parameter's optimizer step on `pool`'s work queue, writing
 /// deltas into the caller's reusable `deltas` workspaces (same matrix dims
 /// as the optimizers were constructed with).
@@ -953,6 +1001,42 @@ pub fn parallel_optimizer_step(
 mod tests {
     use super::*;
     use crate::config::OptimConfig;
+    use crate::runtime::ParamInfo;
+
+    #[test]
+    fn projection_shapes_cover_both_products_and_dedup() {
+        let man = Manifest {
+            name: "t".into(),
+            params: [vec![8usize, 32], vec![32, 8], vec![16], vec![4, 4]]
+                .into_iter()
+                .enumerate()
+                .map(|(i, shape)| ParamInfo {
+                    name: format!("p{i}"),
+                    shape,
+                    init_std: 0.02,
+                    kind: ParamKind::Matrix,
+                })
+                .collect(),
+            tokens_shape: vec![1, 2],
+            vocab: 8,
+            dim: 4,
+            n_blocks: 1,
+            n_params: 0,
+            seq_len: 1,
+            batch: 1,
+        };
+        // 8x32 and 32x8 normalize to the same (short, long); the 1-D param
+        // is skipped; the square 4x4 at rank 4 collapses to one shape
+        assert_eq!(
+            projection_shapes(&man, 4),
+            vec![(4, 8, 32), (8, 4, 32), (4, 4, 4)]
+        );
+        // rank clamps to the short side
+        assert_eq!(
+            projection_shapes(&man, 100),
+            vec![(8, 8, 32), (4, 4, 4)]
+        );
+    }
 
     #[test]
     fn parallel_step_matches_shapes_and_descends() {

@@ -101,6 +101,17 @@ fn run_dist_pipeline(
     bucket_kib: usize,
     check_oracle: bool,
 ) -> Vec<Tensor> {
+    run_dist_pipeline_fused(world, steps, seed, bucket_kib, check_oracle, true)
+}
+
+fn run_dist_pipeline_fused(
+    world: usize,
+    steps: u64,
+    seed: u64,
+    bucket_kib: usize,
+    check_oracle: bool,
+    fused_update: bool,
+) -> Vec<Tensor> {
     let pool = WorkerPool::new(3);
     let mut cfg = OptimConfig::default();
     cfg.wrapper = WrapperKind::GaLore;
@@ -108,6 +119,7 @@ fn run_dist_pipeline(
     cfg.rank = 4;
     cfg.update_period = 3;
     cfg.refresh_lookahead = 1;
+    cfg.fused_update = fused_update;
     let opts = make_opts(&cfg, seed);
     let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
     let mut sharded = ShardedState::new(opts, Topology::new(world, &weights));
@@ -187,6 +199,26 @@ fn dist_two_worker_run_is_deterministic() {
     let c = run_dist_pipeline(2, 12, 7, 64, false);
     for (p, (x, y)) in a.iter().zip(&c).enumerate() {
         assert_eq!(x.data, y.data, "param {p}: bucket size changed results");
+    }
+}
+
+/// Acceptance criterion of the kernel campaign: toggling `[optim]
+/// fused_update` changes the hot-chain *schedule*, never its arithmetic —
+/// so full distributed trajectories (sharded optimizers, pipelined
+/// background refreshes, momentum re-projection) must be **bit-identical**
+/// with the fused chain on or off, at world sizes 1 and 2.
+#[test]
+fn fused_update_trajectories_bit_identical_at_w1_and_w2() {
+    for world in [1usize, 2] {
+        let fused = run_dist_pipeline_fused(world, 10, 21, 1, false, true);
+        let unfused = run_dist_pipeline_fused(world, 10, 21, 1, false, false);
+        for (p, (a, b)) in fused.iter().zip(&unfused).enumerate() {
+            let ab: Vec<[u8; 4]> =
+                a.data.iter().map(|v| v.to_le_bytes()).collect();
+            let bb: Vec<[u8; 4]> =
+                b.data.iter().map(|v| v.to_le_bytes()).collect();
+            assert_eq!(ab, bb, "W={world} param {p}: fused != unfused");
+        }
     }
 }
 

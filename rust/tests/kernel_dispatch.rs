@@ -1,7 +1,7 @@
-//! GEMM kernel dispatch tests: runtime detection, the `auto|simd|scalar`
-//! resolution rules, and the `SARA_GEMM_KERNEL` / `SARA_FORCE_SCALAR`
-//! environment overrides that let CI exercise both the scalar oracle and
-//! the SIMD path on any host.
+//! GEMM kernel dispatch tests: runtime detection, the
+//! `auto|simd|scalar|avx512|q8` resolution rules, and the
+//! `SARA_GEMM_KERNEL` / `SARA_FORCE_SCALAR` environment overrides that let
+//! CI exercise both the scalar oracle and the SIMD paths on any host.
 //!
 //! These live in their own integration-test binary because they mutate
 //! process environment and the process-global active kernel; everything
@@ -13,8 +13,8 @@
 
 use sara::config::{parse_kernel, RunConfig};
 use sara::linalg::{
-    active_kernel, detect_native, force_kernel, matmul_into, matmul_into_with,
-    resolve, set_kernel, Kernel, KernelChoice, Matrix,
+    active_kernel, detect_avx512, detect_native, force_kernel, matmul_into,
+    matmul_into_with, resolve, set_kernel, Kernel, KernelChoice, Matrix,
 };
 use sara::rng::Pcg64;
 
@@ -58,7 +58,40 @@ fn config_choice_parses_and_defaults_to_scalar() {
     assert_eq!(parse_kernel("auto").unwrap(), KernelChoice::Auto);
     assert_eq!(parse_kernel("simd").unwrap(), KernelChoice::Simd);
     assert_eq!(parse_kernel("scalar").unwrap(), KernelChoice::Scalar);
+    assert_eq!(parse_kernel("avx512").unwrap(), KernelChoice::Avx512);
+    assert_eq!(parse_kernel("q8").unwrap(), KernelChoice::Q8);
     assert!(parse_kernel("sse2").is_err());
+}
+
+#[test]
+fn avx512_and_q8_choices_resolve_by_the_documented_rules() {
+    // avx512 is opt-in only: it never leaks into auto/simd resolution
+    // (auto == the 8-lane native backend is pinned above), and on hosts
+    // without the feature it falls back to the portable 16-lane kernel so
+    // the 16-lane schedule is still the one exercised
+    let lane16 = resolve(KernelChoice::Avx512);
+    assert!(lane16.is_lane16());
+    if detect_avx512() {
+        assert_eq!(lane16, Kernel::SimdAvx512);
+    } else {
+        assert_eq!(lane16, Kernel::SimdPortable16);
+    }
+    match detect_native() {
+        Some(native) => assert!(!native.is_lane16(), "auto stays 8-lane"),
+        None => assert_eq!(resolve(KernelChoice::Auto), Kernel::Scalar),
+    }
+    #[cfg(target_arch = "x86_64")]
+    if detect_avx512() {
+        // avx512 detection implies the 8-lane prerequisites (matmul_t and
+        // gram narrow to the 8-lane dot kernels)
+        assert!(detect_native().is_some());
+    }
+
+    // q8 resolves to the q8 marker itself: the optimizer's projection
+    // entry points read the int8 codes, while dense entry points (SVD,
+    // engine math) normalize to a dense kernel
+    assert_eq!(resolve(KernelChoice::Q8), Kernel::Q8);
+    assert!(!Kernel::Q8.is_simd(), "q8 must not take dense SIMD fast paths");
 }
 
 #[test]

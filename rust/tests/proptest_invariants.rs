@@ -7,13 +7,15 @@ use sara::coordinator::allreduce;
 use sara::dist::BucketedAllReduce;
 use sara::util::pool::WorkerPool;
 use sara::linalg::{
-    eigh_symmetric, gram_into_with, left_singular_vectors, matmul_into_with,
+    eigh_symmetric, fused_lowrank_update, gram_into_with,
+    left_singular_vectors, matmul_into_with, matmul_q8_into,
     matmul_t_into_with, orthogonality_defect, qr_thin, resolve,
-    singular_values, t_matmul_into_with, Kernel, KernelChoice, Matrix,
+    singular_values, t_matmul_into_with, t_matmul_q8_into, FusedAdam, Kernel,
+    KernelChoice, Matrix,
 };
 use sara::metrics::overlap;
 use sara::optim::ParamOptimizer;
-use sara::quant::QuantizedTensor;
+use sara::quant::{QuantizedTensor, BLOCK};
 use sara::rng::{sample_weighted_without_replacement, Pcg64};
 use sara::runtime::Tensor;
 use sara::selector::{make_selector, Selector};
@@ -415,6 +417,221 @@ fn prop_simd_scalar_dispatch_reproduces_pre_pr_kernels_bitwise() {
         let mut g = Matrix::zeros(m, m);
         gram_into_with(Kernel::Scalar, &a, &mut g);
         assert_eq!(g.data, prepr::gram(&a).data, "gram case {case}");
+    }
+}
+
+#[test]
+fn prop_simd_lane16_backends_are_bit_identical() {
+    // The 16-lane tier's analog of `prop_simd_backends_are_bit_identical`:
+    // the portable 16-lane backend and AVX-512 (when the host has it) run
+    // the same schedule, so they must agree exactly. `resolve(Avx512)`
+    // falls back to the portable 16-lane kernel on non-AVX-512 hosts, so
+    // the 16-lane schedule itself is exercised everywhere. matmul_t/gram
+    // narrow to the 8-lane dot kernels by design, so only the row-panel
+    // GEMM forms are compared here.
+    let native16 = resolve(KernelChoice::Avx512);
+    assert!(native16.is_lane16(), "resolve(avx512) must stay in the tier");
+    let mut rng = Pcg64::new(7250);
+    for case in 0..CASES {
+        let m = rand_dims(&mut rng, 1, 40);
+        let k = rand_dims(&mut rng, 1, 280);
+        let n = rand_dims(&mut rng, 1, 40); // crosses the n%16 tail split
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+
+        let mut c_p = Matrix::zeros(m, n);
+        matmul_into_with(Kernel::SimdPortable16, &a, &b, &mut c_p);
+        let mut c_n = Matrix::zeros(m, n);
+        matmul_into_with(native16, &a, &b, &mut c_n);
+        assert_eq!(c_p.data, c_n.data, "matmul case {case} ({m},{k},{n})");
+
+        let mut t_p = Matrix::zeros(m, n);
+        t_matmul_into_with(Kernel::SimdPortable16, &a.transpose(), &b, &mut t_p);
+        let mut t_n = Matrix::zeros(m, n);
+        t_matmul_into_with(native16, &a.transpose(), &b, &mut t_n);
+        assert_eq!(t_p.data, t_n.data, "t_matmul case {case}");
+    }
+}
+
+// ----------------------------------------------------- fused update chain
+
+#[test]
+fn prop_fused_chain_matches_three_pass_oracle_bitwise() {
+    // The fused Algorithm-1 kernel re-tiles the schedule but keeps every
+    // per-element f32 operation sequence identical to the scalar
+    // three-pass chain — so R, N, U, and both Adam moment buffers must be
+    // *bitwise* equal, across shapes straddling the NB=128 column tile and
+    // the KC=256 k-panel, and across consecutive steps (moments carried).
+    let (beta1, beta2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let mut rng = Pcg64::new(7400);
+    for case in 0..CASES {
+        let m = rand_dims(&mut rng, 1, 48);
+        let rank = rand_dims(&mut rng, 1, m.min(8));
+        let n = rand_dims(&mut rng, 1, 300);
+        let p = Matrix::randn(m, rank, 1.0, &mut rng);
+        let (mut mf, mut vf) = (Matrix::zeros(rank, n), Matrix::zeros(rank, n));
+        let (mut mo, mut vo) = (Matrix::zeros(rank, n), Matrix::zeros(rank, n));
+        for t in 1..=3i32 {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let c1 = 1.0 / (1.0 - beta1.powi(t));
+            let c2 = 1.0 / (1.0 - beta2.powi(t));
+
+            let mut r = Matrix::zeros(rank, n);
+            let mut nd = Matrix::zeros(rank, n);
+            let mut u = Matrix::zeros(m, n);
+            fused_lowrank_update(
+                &p,
+                &g,
+                FusedAdam {
+                    m: &mut mf.data,
+                    v: &mut vf.data,
+                    beta1,
+                    beta2,
+                    eps,
+                    c1,
+                    c2,
+                },
+                &mut r,
+                &mut nd,
+                &mut u,
+            );
+
+            // unfused oracle: scalar kernels + the verbatim Adam update
+            let mut r_ref = Matrix::zeros(rank, n);
+            t_matmul_into_with(Kernel::Scalar, &p, &g, &mut r_ref);
+            let mut n_ref = Matrix::zeros(rank, n);
+            for i in 0..rank * n {
+                let gi = r_ref.data[i];
+                let mi = beta1 * mo.data[i] + (1.0 - beta1) * gi;
+                let vi = beta2 * vo.data[i] + (1.0 - beta2) * gi * gi;
+                mo.data[i] = mi;
+                vo.data[i] = vi;
+                n_ref.data[i] = (mi * c1) / ((vi * c2).sqrt() + eps);
+            }
+            let mut u_ref = Matrix::zeros(m, n);
+            matmul_into_with(Kernel::Scalar, &p, &n_ref, &mut u_ref);
+
+            assert_eq!(r.data, r_ref.data, "R case {case} t {t} ({m},{rank},{n})");
+            assert_eq!(nd.data, n_ref.data, "N case {case} t {t}");
+            assert_eq!(u.data, u_ref.data, "U case {case} t {t}");
+            assert_eq!(mf.data, mo.data, "m-moment case {case} t {t}");
+            assert_eq!(vf.data, vo.data, "v-moment case {case} t {t}");
+        }
+    }
+}
+
+#[test]
+fn prop_fused_update_chain_is_bit_identical_to_unfused() {
+    // End-to-end form of the acceptance criterion: the full low-rank
+    // pipeline (selector refreshes, momentum re-projection, Fira residual)
+    // produces bit-identical weight deltas with `fused_update` on or off.
+    let mut rng = Pcg64::new(7500);
+    for case in 0..CASES / 2 {
+        let rows = rand_dims(&mut rng, 4, 24);
+        let cols = rand_dims(&mut rng, 4, 24);
+        let wrapper =
+            if case % 2 == 0 { WrapperKind::GaLore } else { WrapperKind::Fira };
+        let mut cfg = OptimConfig {
+            wrapper,
+            selector: SelectorKind::Dominant,
+            inner: InnerOpt::Adam,
+            rank: 4,
+            update_period: 3,
+            ..OptimConfig::default()
+        };
+        cfg.fused_update = true;
+        let mut off_cfg = cfg.clone();
+        off_cfg.fused_update = false;
+        let mut fused = ParamOptimizer::low_rank(
+            rows,
+            cols,
+            &cfg,
+            make_selector(cfg.selector, 7, case as usize),
+        );
+        let mut unfused = ParamOptimizer::low_rank(
+            rows,
+            cols,
+            &off_cfg,
+            make_selector(cfg.selector, 7, case as usize),
+        );
+        for step in 0..8 {
+            let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+            let a = fused.step(&g, 0.05);
+            let b = unfused.step(&g, 0.05);
+            assert_eq!(
+                a.data, b.data,
+                "case {case} ({rows}x{cols}, {wrapper:?}) step {step}"
+            );
+        }
+    }
+}
+
+// -------------------------------------------------------- int8 projections
+
+#[test]
+fn prop_q8_matmul_error_within_documented_bound() {
+    // matmul_q8_into's documented contract: per element,
+    // |C_q8[i,j] - C_f32[i,j]| <= sum_k error_bound(block(i,k)) * |B[k,j]|
+    // (plus f32 accumulation slack) — the bound every q8 consumer relies
+    // on. Checked for both projection orientations.
+    let mut rng = Pcg64::new(7600);
+    for case in 0..CASES {
+        let m = rand_dims(&mut rng, 1, 24);
+        let k = rand_dims(&mut rng, 1, 300); // crosses the BLOCK=256 edge
+        let scale = 10f32.powi(rng.next_bounded(5) as i32 - 2);
+        let a = Matrix::randn(m, k, scale, &mut rng);
+        let n = rand_dims(&mut rng, 1, 24);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let aq = QuantizedTensor::quantize(&a.data);
+
+        let mut c_q8 = Matrix::zeros(m, n);
+        matmul_q8_into(&aq, m, k, &b, &mut c_q8);
+        let mut c_ref = Matrix::zeros(m, n);
+        matmul_into_with(Kernel::Scalar, &a, &b, &mut c_ref);
+        for i in 0..m {
+            for j in 0..n {
+                let mut bound = 0f64;
+                for kk in 0..k {
+                    bound += aq.error_bound((i * k + kk) / BLOCK) as f64
+                        * b.data[kk * n + j].abs() as f64;
+                }
+                let slack = 1e-5 * scale as f64 * (k as f64).sqrt();
+                let diff =
+                    (c_q8.data[i * n + j] - c_ref.data[i * n + j]).abs() as f64;
+                assert!(
+                    diff <= bound + slack,
+                    "matmul case {case} ({m},{k},{n}) [{i},{j}]: \
+                     {diff} > {bound} + {slack}"
+                );
+            }
+        }
+
+        // transposed-projector orientation: C = A^T B with A m x r
+        let r = rand_dims(&mut rng, 1, 8.min(m));
+        let at = Matrix::randn(m, r, scale, &mut rng);
+        let atq = QuantizedTensor::quantize(&at.data);
+        let bt = Matrix::randn(m, n, 1.0, &mut rng);
+        let mut t_q8 = Matrix::zeros(r, n);
+        t_matmul_q8_into(&atq, m, r, &bt, &mut t_q8);
+        let mut t_ref = Matrix::zeros(r, n);
+        t_matmul_into_with(Kernel::Scalar, &at, &bt, &mut t_ref);
+        for i in 0..r {
+            for j in 0..n {
+                let mut bound = 0f64;
+                for kk in 0..m {
+                    bound += atq.error_bound((kk * r + i) / BLOCK) as f64
+                        * bt.data[kk * n + j].abs() as f64;
+                }
+                let slack = 1e-5 * scale as f64 * (m as f64).sqrt();
+                let diff =
+                    (t_q8.data[i * n + j] - t_ref.data[i * n + j]).abs() as f64;
+                assert!(
+                    diff <= bound + slack,
+                    "t_matmul case {case} ({m},{r},{n}) [{i},{j}]: \
+                     {diff} > {bound} + {slack}"
+                );
+            }
+        }
     }
 }
 

@@ -1,8 +1,15 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_*.json perf-trajectory files by median_ns.
+"""Diff BENCH_*.json perf-trajectory files by median_ns.
 
 Usage:
     scripts/bench_diff.py CURRENT.json BASELINE.json [--threshold 0.25] [--strict]
+    scripts/bench_diff.py --all REPO_ROOT [--threshold 0.25] [--strict]
+
+Two-file mode diffs one pair. --all discovers every BENCH_*.json under
+REPO_ROOT (non-recursive, skipping *_baseline* files) and diffs each
+against its committed baseline: BENCH_x.json -> BENCH_x_baseline.json,
+with the legacy exception BENCH_hotpath.json -> BENCH_baseline.json.
+Targets without a committed baseline are reported and skipped.
 
 Cases are matched by result name. A case whose median regressed by more
 than the threshold (fraction, default 0.25 = +25%) is flagged with WARN.
@@ -13,6 +20,7 @@ medians on shared runners are noisy).
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -38,18 +46,10 @@ def fmt_ns(ns):
     return f"{ns / 1e9:.3f} s"
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current")
-    ap.add_argument("baseline")
-    ap.add_argument("--threshold", type=float, default=0.25,
-                    help="warn when median regresses by more than this fraction")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit 1 if any case regressed past the threshold")
-    args = ap.parse_args()
-
-    current = load_results(args.current)
-    baseline = load_results(args.baseline)
+def diff_pair(current_path, baseline_path, threshold):
+    """Print the per-case diff; return the number of WARN regressions."""
+    current = load_results(current_path)
+    baseline = load_results(baseline_path)
 
     shared = [n for n in baseline if n in current]
     missing = [n for n in baseline if n not in current]
@@ -57,15 +57,15 @@ def main():
 
     warns = 0
     width = max((len(n) for n in set(baseline) | set(current)), default=4)
-    print(f"perf diff vs {args.baseline} (warn at >{args.threshold:.0%} median regression)")
+    print(f"perf diff vs {baseline_path} (warn at >{threshold:.0%} median regression)")
     for name in shared:
         base, cur = baseline[name], current[name]
         delta = cur / base - 1.0
         flag = ""
-        if delta > args.threshold:
+        if delta > threshold:
             flag = "  <-- WARN: regression"
             warns += 1
-        elif delta < -args.threshold:
+        elif delta < -threshold:
             flag = "  (improved)"
         print(f"  {name:<{width}}  base {fmt_ns(base):>10}  now {fmt_ns(cur):>10}  "
               f"{delta:+7.1%}{flag}")
@@ -73,6 +73,68 @@ def main():
         print(f"  {name:<{width}}  present in baseline only (case removed/renamed?)")
     for name in new:
         print(f"  {name:<{width}}  new case (no baseline)")
+    return warns
+
+
+def baseline_for(bench_name):
+    """Map a BENCH_x.json filename to its committed baseline filename."""
+    if bench_name == "BENCH_hotpath.json":
+        # the hotpath baseline predates the multi-bench naming scheme
+        return "BENCH_baseline.json"
+    stem = bench_name[: -len(".json")]
+    return f"{stem}_baseline.json"
+
+
+def discover_pairs(root):
+    """All (current, baseline-or-None) pairs for BENCH_*.json under root."""
+    pairs = []
+    for name in sorted(os.listdir(root)):
+        if not (name.startswith("BENCH_") and name.endswith(".json")):
+            continue
+        if "_baseline" in name or name == "BENCH_baseline.json":
+            continue
+        current = os.path.join(root, name)
+        baseline = os.path.join(root, baseline_for(name))
+        pairs.append((current, baseline if os.path.isfile(baseline) else None))
+    return pairs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?",
+                    help="current BENCH_*.json (two-file mode)")
+    ap.add_argument("baseline", nargs="?",
+                    help="baseline json (two-file mode)")
+    ap.add_argument("--all", metavar="REPO_ROOT", dest="all_root",
+                    help="diff every BENCH_*.json in this directory against "
+                         "its committed *_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="warn when median regresses by more than this fraction")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any case regressed past the threshold")
+    args = ap.parse_args()
+
+    if args.all_root is not None:
+        if args.current or args.baseline:
+            ap.error("--all takes no positional files")
+        pairs = discover_pairs(args.all_root)
+        if not pairs:
+            print(f"no BENCH_*.json files found in {args.all_root}")
+            return 0
+        warns = 0
+        for current, baseline in pairs:
+            name = os.path.basename(current)
+            if baseline is None:
+                expected = baseline_for(name)
+                print(f"no {expected} committed yet — record one on a quiet host with:")
+                print(f"  cp {name} {expected} && git add {expected}")
+                continue
+            warns += diff_pair(current, baseline, args.threshold)
+            print()
+    else:
+        if not (args.current and args.baseline):
+            ap.error("need CURRENT and BASELINE files (or --all REPO_ROOT)")
+        warns = diff_pair(args.current, args.baseline, args.threshold)
 
     if warns:
         print(f"{warns} case(s) regressed past the threshold")

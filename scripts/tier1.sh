@@ -9,9 +9,9 @@
 #    surfaces the failure.
 # 2. fast hotpath bench smoke (SARA_BENCH_FAST=1) emitting the
 #    machine-readable perf trajectory to BENCH_hotpath.json at repo root.
-# 3. if a committed BENCH_baseline.json exists, diff medians against it
-#    and warn on >25% regressions (advisory; set TIER1_STRICT_PERF=1 to
-#    make regressions fail the gate).
+# 3. diff every emitted BENCH_*.json against its committed baseline
+#    (bench_diff.py --all) and warn on >25% regressions (advisory; set
+#    TIER1_STRICT_PERF=1 to make regressions fail the gate).
 # 4. crash-recovery smoke (needs PJRT artifacts): kill a run mid-
 #    checkpoint via the fault harness, auto-resume, and require the
 #    resumed `final:` line to match an uninterrupted run bit-for-bit.
@@ -49,6 +49,18 @@ echo "== linalg dual-path: scalar oracle vs forced-SIMD dispatch =="
 (cd rust && SARA_GEMM_KERNEL=simd cargo test -q --lib linalg)
 (cd rust && SARA_GEMM_KERNEL=simd cargo test -q --test proptest_invariants prop_simd)
 (cd rust && cargo test -q --test kernel_dispatch)
+
+echo
+echo "== linalg third pass: 16-lane schedule (avx512 on capable hosts) =="
+# same kernel-sensitive groups under the opt-in 16-lane tier; on hosts
+# without avx512f (or with a pre-1.89 rustc) this resolves to the portable
+# 16-lane backend, so the wider schedule is exercised everywhere. The
+# fused-chain proptests ride along: fused only engages on the scalar
+# kernel, so under a forced SIMD override both sides of the comparison
+# take the identical classic path and the bit-identity pin still holds.
+(cd rust && SARA_GEMM_KERNEL=avx512 cargo test -q --lib linalg)
+(cd rust && SARA_GEMM_KERNEL=avx512 cargo test -q --test proptest_invariants prop_simd)
+(cd rust && SARA_GEMM_KERNEL=avx512 cargo test -q --test proptest_invariants prop_fused)
 
 echo
 echo "== dist smoke: 2-worker bucketed-reduce + sharded-state path =="
@@ -144,27 +156,17 @@ strict_flag=""
 if [ "${TIER1_STRICT_PERF:-0}" = "1" ]; then
   strict_flag="--strict"
 fi
-# current-run json -> committed baseline json; each bench target feeds the
-# same median-diff gate (warn >25%, TIER1_STRICT_PERF=1 to fail)
-diff_against_baseline() {
-  current="$1"; baseline="$2"
-  if [ -f "$baseline" ]; then
-    if ! command -v python3 >/dev/null 2>&1; then
-      echo "perf diff skipped: python3 not available on this host"
-    else
-      echo "== perf trajectory: $(basename "$current") vs $(basename "$baseline") =="
-      python3 "$REPO_ROOT/scripts/bench_diff.py" \
-        "$current" "$baseline" --threshold 0.25 $strict_flag
-    fi
-  else
-    echo "no $(basename "$baseline") committed yet — record one on a quiet host with:"
-    echo "  cp $(basename "$current") $(basename "$baseline") && git add $(basename "$baseline")"
-  fi
-}
-diff_against_baseline "$REPO_ROOT/BENCH_hotpath.json" "$REPO_ROOT/BENCH_baseline.json"
-diff_against_baseline "$REPO_ROOT/BENCH_allreduce.json" "$REPO_ROOT/BENCH_allreduce_baseline.json"
-diff_against_baseline "$REPO_ROOT/BENCH_gemm.json" "$REPO_ROOT/BENCH_gemm_baseline.json"
-diff_against_baseline "$REPO_ROOT/BENCH_engine.json" "$REPO_ROOT/BENCH_engine_baseline.json"
+# every BENCH_*.json at repo root feeds the same median-diff gate against
+# its committed *_baseline.json (warn >25%, TIER1_STRICT_PERF=1 to fail);
+# --all discovers new bench targets without this script needing a new line
+# per target
+if command -v python3 >/dev/null 2>&1; then
+  echo "== perf trajectory: BENCH_*.json vs committed baselines =="
+  python3 "$REPO_ROOT/scripts/bench_diff.py" \
+    --all "$REPO_ROOT" --threshold 0.25 $strict_flag
+else
+  echo "perf diff skipped: python3 not available on this host"
+fi
 
 echo
 echo "tier-1 OK; perf trajectories at $REPO_ROOT/BENCH_hotpath.json and $REPO_ROOT/BENCH_allreduce.json"

@@ -1,0 +1,137 @@
+//! Bench: the serving path — prompt prefill, batched decode (batch 1 vs
+//! batch 8 at a fixed KV position, via `SeqKv::truncate_rows`), and a
+//! load-generator end-to-end run through the continuous-batching
+//! scheduler reporting TTFT and per-token latency percentiles plus
+//! aggregate tokens/sec.
+//!
+//! Emits `BENCH_serve.json` (or `SARA_BENCH_JSON=<path>`), diffed against
+//! `BENCH_serve_baseline.json` by `scripts/tier1.sh`. The shape story the
+//! rows tell: prefill is one tall GEMM chain (m = prompt rows), decode is
+//! a skinny one (m = batch) — exactly the two shape classes
+//! `serve_shapes` feeds the autotuner so `ShapeDispatch` can route them
+//! to different kernels in one process.
+
+use std::time::{Duration, Instant};
+
+use sara::linalg::{set_kernel, KernelChoice};
+use sara::rng::{fold_seed, Pcg64};
+use sara::runtime::ModelSpec;
+use sara::serve::{
+    init_tensors, Scheduler, SeqKv, ServeEngine, ServeModel, ServeOpts,
+    ShapeDispatch, Submit,
+};
+use sara::util::bench::{section, Bencher};
+
+/// Paper-60M-flavored but bench-sized: 4 blocks of dim 128 (4 heads of
+/// 32), so a decode step is real work without dominating CI wall-clock.
+const SPEC: ModelSpec = ModelSpec {
+    vocab: 512,
+    dim: 128,
+    n_blocks: 4,
+    n_heads: 4,
+    head_dim: 32,
+    ffn_dim: 344,
+};
+
+const PROMPT: usize = 64;
+const DECODE_BATCH: usize = 8;
+const MAX_ROWS: usize = 96;
+
+fn build_engine(max_batch: usize) -> ServeEngine {
+    let fallback = set_kernel(KernelChoice::Auto);
+    let params = init_tensors(&SPEC, 0);
+    let model = ServeModel::from_tensors(SPEC, &params).expect("bench spec");
+    ServeEngine::new(model, max_batch, MAX_ROWS, ShapeDispatch::fixed(fallback))
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut engine = build_engine(DECODE_BATCH);
+    let spec = *engine.spec();
+
+    let mut rng = Pcg64::new(7);
+    let prompt: Vec<i32> = (0..PROMPT)
+        .map(|_| rng.next_bounded(spec.vocab as u64) as i32)
+        .collect();
+    let mut logits = vec![0.0f32; spec.vocab];
+
+    section("prefill (tall GEMMs, m = prompt rows)");
+    let mut kv = SeqKv::new(spec.n_blocks, spec.dim);
+    b.run("serve.prefill64", || {
+        kv.reset(MAX_ROWS);
+        engine.prefill(&prompt, &mut kv, &mut logits);
+        logits[0]
+    });
+
+    section("decode (skinny GEMMs, m = batch)");
+    // One prefilled cache per slot; truncate back to the prompt boundary
+    // each iteration so every timed step decodes at the same KV position.
+    let mut kvs: Vec<SeqKv> = (0..DECODE_BATCH)
+        .map(|_| SeqKv::new(spec.n_blocks, spec.dim))
+        .collect();
+    for kv in kvs.iter_mut() {
+        kv.reset(MAX_ROWS);
+        engine.prefill(&prompt, kv, &mut logits);
+    }
+    b.run("serve.decode_b1", || {
+        kvs[0].truncate_rows(PROMPT);
+        let active = [(0usize, 3i32)];
+        engine.decode(&active, &mut kvs[..1])[0]
+    });
+    let active: Vec<(usize, i32)> = (0..DECODE_BATCH).map(|s| (s, 3i32)).collect();
+    b.run("serve.decode_b8", || {
+        for kv in kvs.iter_mut() {
+            kv.truncate_rows(PROMPT);
+        }
+        engine.decode(&active, &mut kvs)[0]
+    });
+
+    section("load generator (continuous batching, end to end)");
+    let opts = ServeOpts {
+        max_batch: DECODE_BATCH,
+        queue_depth: 32,
+        max_seq_len: MAX_ROWS,
+        max_new_tokens: 24,
+        top_k: 0,
+        temperature: 1.0,
+        stop_token: -1,
+        seed: 0,
+    };
+    let n_requests = 16u64;
+    let mut sched = Scheduler::new(build_engine(DECODE_BATCH), opts)
+        .expect("bench opts");
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let mut prng = Pcg64::with_stream(fold_seed(0, 0x10ad + i), 0x90e7);
+        let prompt: Vec<i32> = (0..32)
+            .map(|_| prng.next_bounded(spec.vocab as u64) as i32)
+            .collect();
+        match sched.try_submit(&prompt).expect("valid prompt") {
+            Submit::Queued(_) => {}
+            Submit::Shed => {
+                // Queue is sized for the full load; shedding here would
+                // silently under-report throughput.
+                panic!("bench load generator shed a request");
+            }
+        }
+        // interleave: let the batch make progress while requests arrive,
+        // so admission exercises the continuous-batching path
+        if i % 4 == 3 {
+            sched.step();
+        }
+    }
+    sched.run_to_completion();
+    let report = sched.report(t0.elapsed());
+    assert_eq!(report.completed, n_requests as usize);
+    b.record("serve.e2e", t0.elapsed());
+    b.record("serve.ttft_p50", Duration::from_nanos(report.ttft_p50_ns));
+    b.record("serve.ttft_p99", Duration::from_nanos(report.ttft_p99_ns));
+    b.record("serve.token_p50", Duration::from_nanos(report.token_p50_ns));
+    b.record("serve.token_p99", Duration::from_nanos(report.token_p99_ns));
+    println!(
+        "\nload: {} requests, {} tokens, {:.1} tok/s aggregate",
+        report.completed, report.total_tokens, report.tokens_per_sec
+    );
+
+    b.finish_or("serve", "BENCH_serve.json");
+}

@@ -9,6 +9,7 @@
 pub mod toml;
 
 use crate::linalg::KernelChoice;
+use crate::runtime::ModelSpec;
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 
@@ -254,6 +255,42 @@ impl Default for LinalgConfig {
     }
 }
 
+/// Inference-serving configuration (`[serve]` in TOML). These are the
+/// knobs `serve::ServeOpts` is built from (plus the run seed); semantic
+/// validation — queue/batch bounds, horizon arithmetic — lives in
+/// `ServeOpts::validate`, at the point of use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Running sequences per decode batch.
+    pub max_batch: usize,
+    /// Bounded admission queue depth (overload beyond it is shed).
+    pub queue_depth: usize,
+    /// Prompt + generation cap (KV rows reserved per sequence).
+    pub max_seq_len: usize,
+    /// Per-request generation budget.
+    pub max_new_tokens: usize,
+    /// Top-k sampling width; 0 or 1 = greedy.
+    pub top_k: usize,
+    /// Sampling temperature (top-k only).
+    pub temperature: f32,
+    /// Early-stop token id; negative = disabled.
+    pub stop_token: i32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 4,
+            queue_depth: 8,
+            max_seq_len: 256,
+            max_new_tokens: 32,
+            top_k: 0,
+            temperature: 1.0,
+            stop_token: -1,
+        }
+    }
+}
+
 /// Training-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -291,6 +328,13 @@ pub struct RunConfig {
     pub resilience: ResilienceConfig,
     /// Fault-injection harness (`[fault]` in TOML, `SARA_FAULT=` env).
     pub fault: FaultConfig,
+    /// Inference-serving knobs (`[serve]` in TOML, `--serve-*` on the CLI).
+    pub serve: ServeConfig,
+    /// Explicit model hyperparameters (`[model]` in TOML). The serve path
+    /// needs these to run a forward pass natively; when absent it falls
+    /// back to the artifact manifest's `[model]`-equivalent config block
+    /// (`Manifest::validated_spec`).
+    pub model_spec: Option<ModelSpec>,
 }
 
 impl Default for RunConfig {
@@ -314,6 +358,8 @@ impl Default for RunConfig {
             probe_every: 0,
             resilience: ResilienceConfig::default(),
             fault: FaultConfig::default(),
+            serve: ServeConfig::default(),
+            model_spec: None,
         }
     }
 }
@@ -465,6 +511,22 @@ impl RunConfig {
             self.fault.spec = s.to_string();
         }
         self.fault.seed = args.get_u64("fault-seed", self.fault.seed)?;
+        self.serve.max_batch =
+            args.get_usize("serve-batch", self.serve.max_batch)?;
+        self.serve.queue_depth =
+            args.get_usize("queue-depth", self.serve.queue_depth)?;
+        self.serve.max_seq_len =
+            args.get_usize("max-seq-len", self.serve.max_seq_len)?;
+        self.serve.max_new_tokens =
+            args.get_usize("max-new", self.serve.max_new_tokens)?;
+        self.serve.top_k = args.get_usize("top-k", self.serve.top_k)?;
+        self.serve.temperature =
+            args.get_f64("temperature", self.serve.temperature as f64)? as f32;
+        if let Some(s) = args.get("stop-token") {
+            self.serve.stop_token = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--stop-token wants an integer, got '{s}'"))?;
+        }
         Ok(())
     }
 
@@ -567,7 +629,51 @@ impl RunConfig {
         }
         cfg.fault.seed =
             doc.get_usize("fault", "seed").unwrap_or(cfg.fault.seed as usize) as u64;
+        cfg.serve.max_batch =
+            doc.get_usize("serve", "max_batch").unwrap_or(cfg.serve.max_batch);
+        cfg.serve.queue_depth =
+            doc.get_usize("serve", "queue_depth").unwrap_or(cfg.serve.queue_depth);
+        cfg.serve.max_seq_len =
+            doc.get_usize("serve", "max_seq_len").unwrap_or(cfg.serve.max_seq_len);
+        cfg.serve.max_new_tokens = doc
+            .get_usize("serve", "max_new_tokens")
+            .unwrap_or(cfg.serve.max_new_tokens);
+        cfg.serve.top_k = doc.get_usize("serve", "top_k").unwrap_or(cfg.serve.top_k);
+        cfg.serve.temperature = doc
+            .get_f64("serve", "temperature")
+            .unwrap_or(cfg.serve.temperature as f64) as f32;
+        // i32, not usize: negative means "no stop token"
+        if let Some(toml::TomlValue::Int(v)) = doc.get("serve", "stop_token") {
+            cfg.serve.stop_token = *v as i32;
+        }
+        cfg.model_spec = Self::model_spec_from_toml(&doc)?;
         Ok(cfg)
+    }
+
+    /// Parse the `[model]` block into a [`ModelSpec`]. All six fields are
+    /// required together — a partial block is a config bug worth a clean
+    /// error, not a silent fallback — and the result must pass
+    /// `ModelSpec::validate` (head arithmetic, nonzero dims).
+    fn model_spec_from_toml(doc: &toml::TomlDoc) -> Result<Option<ModelSpec>> {
+        let fields = ["vocab", "dim", "n_blocks", "n_heads", "head_dim", "ffn_dim"];
+        let got: Vec<Option<usize>> =
+            fields.iter().map(|f| doc.get_usize("model", f)).collect();
+        if got.iter().all(|v| v.is_none()) {
+            return Ok(None);
+        }
+        if let Some(i) = got.iter().position(|v| v.is_none()) {
+            bail!("[model] block is missing '{}' (all of {:?} are required)", fields[i], fields);
+        }
+        let spec = ModelSpec {
+            vocab: got[0].unwrap(),
+            dim: got[1].unwrap(),
+            n_blocks: got[2].unwrap(),
+            n_heads: got[3].unwrap(),
+            head_dim: got[4].unwrap(),
+            ffn_dim: got[5].unwrap(),
+        };
+        spec.validate()?;
+        Ok(Some(spec))
     }
 }
 
@@ -855,6 +961,101 @@ seed = 17
         assert_eq!(c.optim.refresh_retries, 1);
         assert_eq!(c.fault.spec, "panic_refresh@1,slow_refresh@2:40");
         assert_eq!(c.fault.seed, 17);
+    }
+
+    #[test]
+    fn serve_knobs_parse_from_cli_and_toml() {
+        let d = RunConfig::default().serve;
+        assert_eq!(d, ServeConfig::default());
+        assert_eq!(d.stop_token, -1, "stop token disabled by default");
+
+        let args = Args::parse(
+            "serve --serve-batch 8 --queue-depth 16 --max-seq-len 128 \
+             --max-new 12 --top-k 4 --temperature 0.7 --stop-token 3"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.queue_depth, 16);
+        assert_eq!(c.serve.max_seq_len, 128);
+        assert_eq!(c.serve.max_new_tokens, 12);
+        assert_eq!(c.serve.top_k, 4);
+        assert!((c.serve.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(c.serve.stop_token, 3);
+
+        let bad = Args::parse(
+            "serve --stop-token eos".split_whitespace().map(|s| s.to_string()),
+        );
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+
+        let dir = std::env::temp_dir().join("sara_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.toml");
+        std::fs::write(
+            &path,
+            "[serve]\nmax_batch = 2\nqueue_depth = 3\nmax_seq_len = 64\n\
+             max_new_tokens = 6\ntop_k = 2\ntemperature = 0.5\nstop_token = 1\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(
+            c.serve,
+            ServeConfig {
+                max_batch: 2,
+                queue_depth: 3,
+                max_seq_len: 64,
+                max_new_tokens: 6,
+                top_k: 2,
+                temperature: 0.5,
+                stop_token: 1,
+            }
+        );
+    }
+
+    #[test]
+    fn model_block_parses_validates_and_rejects_partial() {
+        let dir = std::env::temp_dir().join("sara_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.toml");
+
+        // absent block -> None (manifest fallback)
+        std::fs::write(&path, "[run]\nmodel = \"tiny\"\n").unwrap();
+        let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert!(c.model_spec.is_none());
+
+        let full = "[model]\nvocab = 256\ndim = 64\nn_blocks = 2\n\
+                    n_heads = 4\nhead_dim = 16\nffn_dim = 192\n";
+        std::fs::write(&path, full).unwrap();
+        let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(
+            c.model_spec,
+            Some(ModelSpec {
+                vocab: 256,
+                dim: 64,
+                n_blocks: 2,
+                n_heads: 4,
+                head_dim: 16,
+                ffn_dim: 192,
+            })
+        );
+
+        // partial block: clean error naming the missing field
+        std::fs::write(&path, "[model]\nvocab = 256\ndim = 64\n").unwrap();
+        let err = RunConfig::from_toml_file(path.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("n_blocks"), "{err}");
+
+        // inconsistent head arithmetic: ModelSpec::validate rejects it
+        std::fs::write(
+            &path,
+            "[model]\nvocab = 256\ndim = 64\nn_blocks = 2\n\
+             n_heads = 4\nhead_dim = 8\nffn_dim = 192\n",
+        )
+        .unwrap();
+        assert!(RunConfig::from_toml_file(path.to_str().unwrap()).is_err());
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //!   the paper's experiment sweeps (Tables 1–4, Figures 1–4, App. F).
 //! * [`dist`] is the data-parallel substrate: bucketed pool all-reduce,
 //!   ZeRO-1-style sharded optimizer state, per-rank refresh ownership.
+//! * [`serve`] closes the train→serve loop: a natively-executed forward
+//!   pass (flash attention + RMSNorm on the [`linalg`] kernel layer) under
+//!   a continuous-batching scheduler with bounded-queue backpressure.
 //!
 //! Substrates ([`linalg`], [`rng`], [`quant`], [`data`], [`util`],
 //! [`config`], [`metrics`]) are implemented from scratch — the build is
@@ -34,6 +37,7 @@ pub mod resilience;
 pub mod rng;
 pub mod runtime;
 pub mod selector;
+pub mod serve;
 pub mod train;
 pub mod util;
 

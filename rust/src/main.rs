@@ -1,15 +1,20 @@
 //! `sara` — L3 coordinator CLI for the SARA reproduction.
 //!
 //! Subcommands:
-//!   train   — run one pretraining configuration
-//!   exp     — reproduce a paper table/figure (table1..4, fig1..4, memory)
-//!   eval    — evaluate a checkpoint's validation PPL
-//!   info    — print artifact manifest details
+//!   train    — run one pretraining configuration
+//!   exp      — reproduce a paper table/figure (table1..4, fig1..4, memory)
+//!   eval     — evaluate a checkpoint's validation PPL
+//!   info     — print artifact manifest details
+//!   serve    — run the forward-only inference engine under a seeded load
+//!              generator (continuous batching, bounded-queue backpressure)
+//!   generate — decode one prompt through the serve stack
 //!
 //! Examples:
 //!   sara train --model tiny --selector sara --steps 500 --eval-every 100
 //!   sara exp table1 --models tiny --steps 300
 //!   sara exp fig3 --model tiny --steps 800 --tau 40
+//!   sara serve --config configs/serve-smoke.toml --requests 8
+//!   sara generate --config configs/serve-smoke.toml --prompt 3,17,5
 
 use anyhow::{bail, Context, Result};
 use sara::config::RunConfig;
@@ -27,7 +32,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: sara <train|exp|eval|info> [options]\n\
+    "usage: sara <train|exp|eval|info|serve|generate> [options]\n\
      \n\
      sara train --model <name> [--selector sara|dominant|golore|online-pca]\n\
      \u{20}          [--wrapper galore|fira|full] [--inner adam|adafactor|adam-mini|adam8bit|msgd]\n\
@@ -43,7 +48,15 @@ fn usage() -> &'static str {
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
      \u{20}          [--steps N] [--rank R] [--tau T] [--anchor N] [--per-layer]\n\
      sara eval --model <name> --ckpt ckpt.bin\n\
-     sara info --model <name>"
+     sara info --model <name>\n\
+     sara serve [--config serve.toml] [--model <name>] [--ckpt ckpt.bin]\n\
+     \u{20}          [--requests N] [--prompt-len P] [--serve-batch B] [--queue-depth Q]\n\
+     \u{20}          [--max-seq-len S] [--max-new N] [--top-k K] [--temperature T]\n\
+     \u{20}          [--stop-token ID] [--seed S] [--save-ckpt out.bin] [--bench-json out.json]\n\
+     \u{20}          (model shape from the config's [model] block, or the artifact manifest;\n\
+     \u{20}           weights from --ckpt, or seeded init; SARA_TUNE_CACHE arms per-shape dispatch)\n\
+     sara generate --prompt 1,2,3 [--config serve.toml] [--model <name>] [--ckpt ckpt.bin]\n\
+     \u{20}          [--max-new N] [--top-k K] [--temperature T] [--seed S]"
 }
 
 fn run() -> Result<()> {
@@ -53,6 +66,8 @@ fn run() -> Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("eval") => cmd_eval(&args),
         Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
         _ => {
             println!("{}", usage());
             Ok(())
@@ -183,6 +198,188 @@ fn cmd_eval(args: &Args) -> Result<()> {
     trainer.restore_params(ck.params);
     let vl = trainer.validate()?;
     println!("checkpoint step {step} | val loss {vl:.4} | PPL {:.3}", vl.exp());
+    Ok(())
+}
+
+/// Resolve the serve stack shared by `serve` and `generate`: model spec
+/// (config `[model]` block, else artifact manifest), weights (`--ckpt`,
+/// else seeded init), kernel dispatch (`SARA_TUNE_CACHE` arms per-shape
+/// lookup), and the scheduler built from the `[serve]` knobs.
+fn build_scheduler(args: &Args, cfg: &RunConfig) -> Result<sara::serve::Scheduler> {
+    use sara::serve::{init_tensors, serve_shapes, Scheduler, ServeEngine, ServeModel, ServeOpts, ShapeDispatch};
+
+    let spec = match cfg.model_spec {
+        Some(spec) => spec,
+        None => {
+            let man = sara::runtime::Manifest::load(
+                &std::path::PathBuf::from(exp::ARTIFACTS)
+                    .join(format!("{}.manifest.json", cfg.model)),
+            )
+            .with_context(|| {
+                format!(
+                    "no [model] block in the config and no manifest for '{}' — \
+                     pass --config with a [model] section or run aot.py",
+                    cfg.model
+                )
+            })?;
+            man.validated_spec()?
+        }
+    };
+    let params = match args.get("ckpt") {
+        Some(path) => {
+            let ck = Checkpoint::load(std::path::Path::new(path))?;
+            println!("weights: checkpoint {path} (step {})", ck.step);
+            ck.params
+        }
+        None => {
+            println!("weights: seeded init (seed {})", cfg.seed);
+            init_tensors(&spec, cfg.seed)
+        }
+    };
+    if let Some(path) = args.get("save-ckpt") {
+        let ck = Checkpoint { step: 0, dist_workers: 1, params: params.clone() };
+        ck.save(std::path::Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    // spec-vs-params validation happens here, erroring by tensor name
+    let model = ServeModel::from_tensors(spec, &params)?;
+
+    let fallback = sara::linalg::set_kernel(cfg.linalg.kernel);
+    let dispatch = match std::env::var("SARA_TUNE_CACHE").ok().filter(|p| !p.is_empty()) {
+        Some(path) => {
+            let shapes = serve_shapes(&spec, cfg.serve.max_batch, cfg.serve.max_seq_len);
+            println!("per-shape dispatch armed from tune cache {path}");
+            ShapeDispatch::with_cache(
+                sara::linalg::TuneCache::load_or_tune(&path, &shapes),
+                fallback,
+            )
+        }
+        None => ShapeDispatch::fixed(fallback),
+    };
+    let engine = ServeEngine::new(model, cfg.serve.max_batch, cfg.serve.max_seq_len, dispatch);
+    let opts = ServeOpts {
+        max_batch: cfg.serve.max_batch,
+        queue_depth: cfg.serve.queue_depth,
+        max_seq_len: cfg.serve.max_seq_len,
+        max_new_tokens: cfg.serve.max_new_tokens,
+        top_k: cfg.serve.top_k,
+        temperature: cfg.serve.temperature,
+        stop_token: cfg.serve.stop_token,
+        seed: cfg.seed,
+    };
+    println!(
+        "serve: vocab {} dim {} blocks {} heads {} | batch {} queue {} | gemm {}",
+        spec.vocab, spec.dim, spec.n_blocks, spec.n_heads,
+        opts.max_batch, opts.queue_depth, fallback,
+    );
+    Scheduler::new(engine, opts)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use sara::rng::{fold_seed, Pcg64};
+    use sara::serve::Submit;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)
+            .with_context(|| format!("loading {path}"))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let mut sched = build_scheduler(args, &cfg)?;
+    let spec = *sched.opts();
+    let n_requests = args.get_usize("requests", 8)?;
+    let prompt_len = args
+        .get_usize("prompt-len", 8)?
+        .min(spec.max_seq_len.saturating_sub(spec.max_new_tokens))
+        .max(1);
+
+    // Seeded load generator: request i's prompt is a pure function of
+    // (seed, i), so two runs of this command submit identical work —
+    // the determinism smoke diffs the `request ...` lines across runs.
+    let vocab = sched.vocab() as u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests as u64 {
+        let mut rng = Pcg64::with_stream(fold_seed(cfg.seed, 0x10ad + i), 0x90e7);
+        let prompt: Vec<i32> = (0..prompt_len)
+            .map(|_| rng.next_bounded(vocab) as i32)
+            .collect();
+        match sched.try_submit(&prompt)? {
+            Submit::Queued(_) | Submit::Shed => {}
+        }
+    }
+    sched.run_to_completion();
+    let elapsed = t0.elapsed();
+
+    let mut done: Vec<_> = sched.completions().iter().collect();
+    done.sort_by_key(|c| c.id);
+    for c in &done {
+        println!(
+            "request {}: prompt {} gen {} finish {} tokens {:?}",
+            c.id,
+            c.prompt_len,
+            c.tokens.len(),
+            c.finish,
+            c.tokens
+        );
+    }
+    println!("shed: {}", sched.shed());
+    let r = sched.report(elapsed);
+    println!(
+        "served {} requests, {} tokens in {:.3}s | {:.1} tok/s | \
+         ttft p50/p99 {}/{} | per-token p50/p99 {}/{}",
+        r.completed,
+        r.total_tokens,
+        elapsed.as_secs_f64(),
+        r.tokens_per_sec,
+        sara::util::bench::fmt_dur(std::time::Duration::from_nanos(r.ttft_p50_ns)),
+        sara::util::bench::fmt_dur(std::time::Duration::from_nanos(r.ttft_p99_ns)),
+        sara::util::bench::fmt_dur(std::time::Duration::from_nanos(r.token_p50_ns)),
+        sara::util::bench::fmt_dur(std::time::Duration::from_nanos(r.token_p99_ns)),
+    );
+    if let Some(path) = args.get("bench-json") {
+        use std::time::Duration;
+        let mut b = sara::util::bench::Bencher::quick();
+        b.record("serve.ttft_p50", Duration::from_nanos(r.ttft_p50_ns));
+        b.record("serve.ttft_p99", Duration::from_nanos(r.ttft_p99_ns));
+        b.record("serve.token_p50", Duration::from_nanos(r.token_p50_ns));
+        b.record("serve.token_p99", Duration::from_nanos(r.token_p99_ns));
+        b.record("serve.e2e", elapsed);
+        b.write_json("serve", path)?;
+        println!("serve metrics written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use sara::serve::Submit;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_toml_file(path)
+            .with_context(|| format!("loading {path}"))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let prompt: Vec<i32> = args
+        .get("prompt")
+        .context("--prompt required (comma-separated token ids)")?
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad token id '{t}' in --prompt"))
+        })
+        .collect::<Result<_>>()?;
+    let mut sched = build_scheduler(args, &cfg)?;
+    match sched.try_submit(&prompt)? {
+        Submit::Queued(_) => {}
+        Submit::Shed => bail!("single request shed — queue_depth is 0?"),
+    }
+    sched.run_to_completion();
+    let c = &sched.completions()[0];
+    println!(
+        "generate: prompt {:?} -> {:?} (finish {})",
+        prompt, c.tokens, c.finish
+    );
     Ok(())
 }
 

@@ -23,6 +23,116 @@ pub struct ParamInfo {
     pub kind: ParamKind,
 }
 
+/// Model hyperparameters needed to *run* a forward pass natively (the
+/// `[model]` block). The training engine never needed these in Rust —
+/// heads and head_dim are baked into the compiled HLO — but the serve
+/// path executes the transformer itself, so the manifest's `config`
+/// object (and the TOML `[model]` section) now parse into this struct
+/// and are validated against the parameter shapes up front, instead of
+/// panicking downstream on a mis-shaped GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_blocks: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+}
+
+impl ModelSpec {
+    /// Internal-consistency checks (clean errors, no downstream panics).
+    pub fn validate(&self) -> Result<()> {
+        if self.vocab == 0
+            || self.dim == 0
+            || self.n_blocks == 0
+            || self.n_heads == 0
+            || self.ffn_dim == 0
+        {
+            bail!("model spec has a zero dimension: {self:?}");
+        }
+        if self.n_heads * self.head_dim != self.dim {
+            bail!(
+                "model spec mismatch: n_heads {} * head_dim {} != dim {}",
+                self.n_heads,
+                self.head_dim,
+                self.dim
+            );
+        }
+        if self.head_dim % 2 != 0 {
+            bail!("head_dim {} must be even (rotate-half RoPE)", self.head_dim);
+        }
+        Ok(())
+    }
+
+    /// The canonical flat parameter order for this spec — the Rust mirror
+    /// of `python/compile/model.py::param_specs` (single source of truth
+    /// for name / shape / init_std / kind).
+    pub fn expected_params(&self) -> Vec<ParamInfo> {
+        let (d, f, v) = (self.dim, self.ffn_dim, self.vocab);
+        let std = 0.02f32;
+        // residual-branch output projections: GPT-2 depth-scaled init
+        let out_std = std / (2.0 * self.n_blocks as f32).sqrt();
+        let mut specs = Vec::with_capacity(2 + 9 * self.n_blocks + 2);
+        let mut push = |name: String, shape: Vec<usize>, init_std: f32, kind| {
+            specs.push(ParamInfo { name, shape, init_std, kind });
+        };
+        push("embed".into(), vec![v, d], std, ParamKind::Dense);
+        for b in 0..self.n_blocks {
+            let p = format!("blocks.{b}.");
+            push(format!("{p}attn_norm"), vec![d], 0.0, ParamKind::Norm);
+            push(format!("{p}q_proj"), vec![d, d], std, ParamKind::Matrix);
+            push(format!("{p}k_proj"), vec![d, d], std, ParamKind::Matrix);
+            push(format!("{p}v_proj"), vec![d, d], std, ParamKind::Matrix);
+            push(format!("{p}o_proj"), vec![d, d], out_std, ParamKind::Matrix);
+            push(format!("{p}mlp_norm"), vec![d], 0.0, ParamKind::Norm);
+            push(format!("{p}gate_proj"), vec![d, f], std, ParamKind::Matrix);
+            push(format!("{p}up_proj"), vec![d, f], std, ParamKind::Matrix);
+            push(format!("{p}down_proj"), vec![f, d], out_std, ParamKind::Matrix);
+        }
+        push("final_norm".into(), vec![d], 0.0, ParamKind::Norm);
+        push("lm_head".into(), vec![d, v], std, ParamKind::Dense);
+        specs
+    }
+
+    /// Validate a parameter list (names in order, shapes exact) against
+    /// this spec. Errors name the first offending tensor — the clean
+    /// failure mode the serve path relies on when a checkpoint or
+    /// manifest disagrees with the `[model]` block.
+    pub fn validate_shapes(&self, params: &[ParamInfo]) -> Result<()> {
+        self.validate()?;
+        let expected = self.expected_params();
+        if params.len() != expected.len() {
+            bail!(
+                "parameter count mismatch: spec {:?} expects {} tensors, got {}",
+                self,
+                expected.len(),
+                params.len()
+            );
+        }
+        for (e, p) in expected.iter().zip(params) {
+            if e.name != p.name {
+                bail!(
+                    "parameter order mismatch: expected '{}', found '{}'",
+                    e.name,
+                    p.name
+                );
+            }
+            if e.shape != p.shape {
+                bail!(
+                    "parameter '{}' shape mismatch: spec {:?} expects {:?}, \
+                     manifest/checkpoint has {:?}",
+                    p.name,
+                    self,
+                    e.shape,
+                    p.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Parsed `<model>.manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -32,6 +142,9 @@ pub struct Manifest {
     pub vocab: usize,
     pub dim: usize,
     pub n_blocks: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
     pub n_params: usize,
     pub seq_len: usize,
     pub batch: usize,
@@ -74,10 +187,45 @@ impl Manifest {
             vocab: cfg.field("vocab")?.as_usize()?,
             dim: cfg.field("dim")?.as_usize()?,
             n_blocks: cfg.field("n_blocks")?.as_usize()?,
+            n_heads: cfg
+                .field("n_heads")
+                .context("manifest config lacks n_heads (re-run aot.py)")?
+                .as_usize()?,
+            head_dim: cfg
+                .field("head_dim")
+                .context("manifest config lacks head_dim (re-run aot.py)")?
+                .as_usize()?,
+            ffn_dim: cfg
+                .field("ffn_dim")
+                .context("manifest config lacks ffn_dim (re-run aot.py)")?
+                .as_usize()?,
             n_params: cfg.field("n_params")?.as_usize()?,
             seq_len: cfg.field("seq_len")?.as_usize()?,
             batch: cfg.field("batch")?.as_usize()?,
         })
+    }
+
+    /// The `[model]` hyperparameter block this manifest carries.
+    pub fn model_spec(&self) -> ModelSpec {
+        ModelSpec {
+            vocab: self.vocab,
+            dim: self.dim,
+            n_blocks: self.n_blocks,
+            n_heads: self.n_heads,
+            head_dim: self.head_dim,
+            ffn_dim: self.ffn_dim,
+        }
+    }
+
+    /// [`Manifest::model_spec`] validated against the manifest's own
+    /// parameter list — the entry point for consumers (the serve path)
+    /// that are about to *execute* with these shapes.
+    pub fn validated_spec(&self) -> Result<ModelSpec> {
+        let spec = self.model_spec();
+        spec.validate_shapes(&self.params).with_context(|| {
+            format!("manifest '{}' disagrees with its [model] block", self.name)
+        })?;
+        Ok(spec)
     }
 
     pub fn load(path: &std::path::Path) -> Result<Self> {
@@ -140,6 +288,81 @@ mod tests {
         assert_eq!(m.vocab, 256);
         assert_eq!(m.matrix_param_indices(), vec![2]);
         assert_eq!(m.count_params(), 256 * 64 + 64 + 64 * 64);
+        // the [model] hyperparameter block is now first-class
+        let spec = m.model_spec();
+        assert_eq!(
+            spec,
+            ModelSpec {
+                vocab: 256,
+                dim: 64,
+                n_blocks: 2,
+                n_heads: 4,
+                head_dim: 16,
+                ffn_dim: 192,
+            }
+        );
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn model_spec_expected_params_mirror_python_param_specs() {
+        let spec = ModelSpec {
+            vocab: 256,
+            dim: 64,
+            n_blocks: 2,
+            n_heads: 4,
+            head_dim: 16,
+            ffn_dim: 192,
+        };
+        let ps = spec.expected_params();
+        // 1 embed + 9 per block + final_norm + lm_head
+        assert_eq!(ps.len(), 2 + 9 * 2);
+        assert_eq!(ps[0].name, "embed");
+        assert_eq!(ps[0].shape, vec![256, 64]);
+        assert_eq!(ps[1].name, "blocks.0.attn_norm");
+        assert_eq!(ps[1].kind, ParamKind::Norm);
+        assert_eq!(ps[7].name, "blocks.0.gate_proj");
+        assert_eq!(ps[7].shape, vec![64, 192]);
+        assert_eq!(ps[9].name, "blocks.0.down_proj");
+        assert_eq!(ps[9].shape, vec![192, 64]);
+        assert_eq!(ps.last().unwrap().name, "lm_head");
+        assert_eq!(ps.last().unwrap().shape, vec![64, 256]);
+        // depth-scaled output init on the residual projections
+        let out_std = 0.02f32 / (2.0f32 * 2.0).sqrt();
+        assert!((ps[5].init_std - out_std).abs() < 1e-7); // o_proj
+        assert!((ps[9].init_std - out_std).abs() < 1e-7); // down_proj
+        // the full expected list validates against itself
+        spec.validate_shapes(&ps).unwrap();
+    }
+
+    #[test]
+    fn model_spec_validation_errors_are_clean() {
+        let spec = ModelSpec {
+            vocab: 256,
+            dim: 64,
+            n_blocks: 1,
+            n_heads: 4,
+            head_dim: 16,
+            ffn_dim: 192,
+        };
+        // heads * head_dim must equal dim
+        let bad = ModelSpec { head_dim: 8, ..spec };
+        let msg = format!("{:#}", bad.validate().unwrap_err());
+        assert!(msg.contains("head_dim"), "{msg}");
+        // odd head_dim breaks rotate-half rope
+        let bad = ModelSpec { n_heads: 64, head_dim: 1, ..spec };
+        assert!(bad.validate().is_err());
+        // a mis-shaped tensor is reported by name
+        let mut ps = spec.expected_params();
+        ps[3].shape = vec![64, 63]; // k_proj
+        let msg = format!("{:#}", spec.validate_shapes(&ps).unwrap_err());
+        assert!(msg.contains("k_proj"), "{msg}");
+        // a truncated list is a count error, not a panic
+        let short = &spec.expected_params()[..3];
+        assert!(spec.validate_shapes(short).is_err());
+        // the truncated SAMPLE manifest fails validated_spec cleanly
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.validated_spec().is_err());
     }
 
     #[test]

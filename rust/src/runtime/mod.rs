@@ -52,7 +52,7 @@ pub mod manifest;
 pub mod param_store;
 pub mod tensor;
 
-pub use manifest::{Manifest, ParamInfo, ParamKind};
+pub use manifest::{Manifest, ModelSpec, ParamInfo, ParamKind};
 pub use param_store::{ExeKind, ParamCacheStats, ParamStore};
 pub use tensor::{tokens_to_literal, Tensor};
 

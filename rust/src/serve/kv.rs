@@ -1,0 +1,171 @@
+//! Per-sequence KV cache: grow-only buffers with an explicit row counter.
+//!
+//! One [`SeqKv`] holds a sequence's keys and values for every layer, laid
+//! out row-major: row `p` is the full `dim`-wide (head-major) post-RoPE
+//! key/value at position `p`, so head `h` of row `p` is the slice
+//! `[p*dim + h*hd, p*dim + (h+1)*hd)` — the strided view
+//! [`kernels::flash_attention_head`](super::kernels::flash_attention_head)
+//! streams.
+//!
+//! Allocation discipline (the serve zero-allocation contract):
+//! * [`SeqKv::reset`] — called at **admission**, when a slot is reused for
+//!   a new request — clears the rows and reserves capacity for the
+//!   request's full horizon (`prompt + max_new_tokens`). Buffers only ever
+//!   grow: a smaller request reuses the previous request's capacity.
+//! * [`SeqKv::append_rows`] / [`SeqKv::advance`] — called every forward
+//!   pass — extend within the reserved capacity and bump the row counter.
+//!   Neither allocates, which a counting-allocator test pins.
+//!
+//! The row counter is advanced once per token *after* all layers ran, so
+//! mid-forward the buffers for already-processed layers are one row
+//! longer than `rows()` — exactly the state blocked attention wants
+//! (`kv_len = rows() + new_rows` for the layer being processed).
+
+/// One layer's key/value rows.
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Grow-only per-sequence KV cache (all layers).
+pub struct SeqKv {
+    layers: Vec<LayerKv>,
+    row_w: usize,
+    rows: usize,
+}
+
+impl SeqKv {
+    pub fn new(n_layers: usize, row_w: usize) -> Self {
+        let layers = (0..n_layers)
+            .map(|_| LayerKv { k: Vec::new(), v: Vec::new() })
+            .collect();
+        Self { layers, row_w, rows: 0 }
+    }
+
+    /// Row width (the model dim: n_heads * head_dim).
+    pub fn row_w(&self) -> usize {
+        self.row_w
+    }
+
+    /// Valid (committed) rows — the sequence length attended so far.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Reserved capacity in rows (what [`SeqKv::reset`] guaranteed).
+    pub fn capacity_rows(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.k.capacity() / self.row_w)
+    }
+
+    /// Start a new sequence in this slot: drop all rows and make sure
+    /// `capacity_rows` rows fit without reallocation. Admission-time only;
+    /// the only place the cache may allocate (and only when growing past
+    /// every previous occupant of the slot).
+    pub fn reset(&mut self, capacity_rows: usize) {
+        let want = capacity_rows * self.row_w;
+        for l in &mut self.layers {
+            l.k.clear();
+            l.v.clear();
+            l.k.reserve(want);
+            l.v.reserve(want);
+        }
+        self.rows = 0;
+    }
+
+    /// Append `n` post-RoPE key and value rows for `layer` (contiguous
+    /// `n * row_w` slices). Within reserved capacity this never allocates.
+    pub fn append_rows(&mut self, layer: usize, k_rows: &[f32], v_rows: &[f32]) {
+        debug_assert_eq!(k_rows.len() % self.row_w, 0);
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        let l = &mut self.layers[layer];
+        debug_assert!(
+            l.k.len() + k_rows.len() <= l.k.capacity(),
+            "KV append past reserved capacity (admission should have sized it)"
+        );
+        l.k.extend_from_slice(k_rows);
+        l.v.extend_from_slice(v_rows);
+    }
+
+    /// Commit `n` appended rows (call once per forward pass, after every
+    /// layer has appended).
+    pub fn advance(&mut self, n: usize) {
+        self.rows += n;
+        debug_assert!(self
+            .layers
+            .iter()
+            .all(|l| l.k.len() == self.rows * self.row_w
+                && l.v.len() == self.rows * self.row_w));
+    }
+
+    /// Roll the cache back to `rows` committed rows (bench harness: lets a
+    /// decode step be re-timed at a fixed position without re-prefilling).
+    pub fn truncate_rows(&mut self, rows: usize) {
+        assert!(rows <= self.rows);
+        for l in &mut self.layers {
+            l.k.truncate(rows * self.row_w);
+            l.v.truncate(rows * self.row_w);
+        }
+        self.rows = rows;
+    }
+
+    /// Key rows for `layer` (length `>= rows() * row_w`; during a forward
+    /// pass it also contains the just-appended uncommitted rows).
+    pub fn k(&self, layer: usize) -> &[f32] {
+        &self.layers[layer].k
+    }
+
+    pub fn v(&self, layer: usize) -> &[f32] {
+        &self.layers[layer].v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::alloc_count::thread_alloc_count;
+
+    #[test]
+    fn append_and_advance_track_rows_per_layer() {
+        let mut kv = SeqKv::new(2, 4);
+        kv.reset(8);
+        assert_eq!(kv.rows(), 0);
+        assert!(kv.capacity_rows() >= 8);
+        let k = [1.0f32; 8]; // 2 rows of width 4
+        let v = [2.0f32; 8];
+        kv.append_rows(0, &k, &v);
+        kv.append_rows(1, &k, &v);
+        kv.advance(2);
+        assert_eq!(kv.rows(), 2);
+        assert_eq!(kv.k(0).len(), 8);
+        assert_eq!(kv.v(1), &v);
+        kv.truncate_rows(1);
+        assert_eq!(kv.rows(), 1);
+        assert_eq!(kv.k(1).len(), 4);
+    }
+
+    #[test]
+    fn reset_is_grow_only_and_appends_do_not_allocate() {
+        let mut kv = SeqKv::new(3, 8);
+        kv.reset(16); // allocation happens here (admission)
+        let row = [0.5f32; 8];
+        // steady state: appends + advances + a smaller reset are alloc-free
+        let before = thread_alloc_count();
+        for step in 0..16 {
+            for layer in 0..3 {
+                kv.append_rows(layer, &row, &row);
+            }
+            kv.advance(1);
+            assert_eq!(kv.rows(), step + 1);
+        }
+        kv.reset(8); // smaller request reuses the slot's capacity
+        for layer in 0..3 {
+            kv.append_rows(layer, &row, &row);
+        }
+        kv.advance(1);
+        assert_eq!(
+            thread_alloc_count() - before,
+            0,
+            "grow-only cache allocated in the steady state"
+        );
+    }
+}

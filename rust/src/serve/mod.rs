@@ -1,0 +1,93 @@
+//! `serve/` — forward-only inference with continuous batching.
+//!
+//! The training stack compiles its forward/backward into HLO and runs it
+//! through the (stubbed) PJRT engine; serving takes the other road: the
+//! transformer forward pass executes **natively** on the same `Lane8`
+//! kernel layer the optimizer uses, so the whole checkpoint → generate
+//! loop runs end-to-end in this repo with no accelerator runtime. Layers:
+//!
+//! * [`kernels`] — RMSNorm (scalar/lane bitwise-pinned pair), rotate-half
+//!   RoPE, blocked causal flash attention (port of
+//!   `python/compile/kernels/flash_attention.py` with its O(S²) oracle),
+//!   greedy/top-k sampling.
+//! * [`kv`] — grow-only per-sequence KV cache ([`SeqKv`]).
+//! * [`engine`] — weights + workspaces, batched prefill/decode
+//!   ([`ServeEngine`]), per-call-site GEMM dispatch ([`ShapeDispatch`]).
+//! * [`scheduler`] — bounded-queue continuous batching ([`Scheduler`]).
+//!
+//! # Module contract
+//!
+//! **Scheduler invariants.**
+//! 1. At most `max_batch` sequences run concurrently (slot table), at
+//!    most `queue_depth` wait (bounded queue); nothing else holds
+//!    requests, so memory is bounded by configuration, not by load.
+//! 2. A sequence's KV capacity for its whole horizon
+//!    (`prompt + max_new_tokens` rows, validated `<= max_seq_len`) is
+//!    reserved at admission; from then to completion its decode path
+//!    performs no allocation (grow-only buffers, pinned by a
+//!    counting-allocator test).
+//! 3. Admission is FIFO into the lowest free slot and happens at every
+//!    tick boundary — a request never waits for the running batch to
+//!    drain (continuous batching), and slot/batch assignment is a pure
+//!    function of arrival order.
+//! 4. Every admitted request terminates: generation length is capped by
+//!    `max_new_tokens` even if the stop token never appears.
+//!
+//! **Backpressure semantics.** Overload is answered, never absorbed:
+//! [`Scheduler::try_submit`] on a full queue returns [`Submit::Shed`]
+//! (counted, reported) and drops the request — no panic, no unbounded
+//! queue, no slowdown for admitted work. Invalid prompts (empty, too
+//! long for the horizon, out-of-vocab) are `Err` — caller bugs, not load.
+//!
+//! **Determinism guarantee.** With a fixed model, configuration, and
+//! seed, each request's output tokens are a function of (prompt, request
+//! id) only:
+//! * sampling draws from a per-request stream
+//!   `Pcg64::with_stream(fold_seed(seed, id), 0x5e17)`, never shared;
+//! * per-row GEMM outputs are bit-independent of the other rows in the
+//!   batch, and flash attention runs per sequence — so batch composition
+//!   (who else was running, admission interleaving) cannot perturb a
+//!    sequence's logits;
+//! * the scheduler is single-threaded, so there is no scheduling race to
+//!   reorder sampling draws.
+//!
+//! Wall-clock metrics (TTFT, per-token latency) are measured, not
+//! modeled, and are of course **not** deterministic — the guarantee
+//! covers token streams, finish reasons, and shed counts.
+
+pub mod engine;
+pub mod kernels;
+pub mod kv;
+pub mod scheduler;
+
+pub use engine::{init_tensors, serve_shapes, ServeEngine, ServeModel, ShapeDispatch};
+pub use kv::SeqKv;
+pub use scheduler::{
+    Completion, FinishReason, Scheduler, ServeOpts, ServeReport, Submit,
+};
+
+/// Nearest-rank percentile over an ascending-sorted slice (`p` in
+/// 0..=100). Empty input reports 0 — serving metrics, not statistics.
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::percentile;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50.0), 50);
+        assert_eq!(percentile(&v, 99.0), 99);
+        assert_eq!(percentile(&v, 100.0), 100);
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        assert_eq!(percentile(&[], 99.0), 0);
+    }
+}

@@ -1,0 +1,577 @@
+//! Continuous-batching scheduler: bounded admission queue, slot table,
+//! per-request generation state, and the decode loop.
+//!
+//! See `serve/mod.rs` for the module contract (invariants, backpressure
+//! semantics, determinism guarantee). Mechanics:
+//!
+//! * [`Scheduler::try_submit`] validates a prompt and either queues it or
+//!   **sheds** it when the bounded queue is full (backpressure — the
+//!   caller is told, nothing panics, nothing unbounded grows).
+//! * [`Scheduler::step`] is one scheduler tick: admit queued requests
+//!   into free slots (prefill + first token — so TTFT is measured at
+//!   admission), then run **one decode step for every running sequence
+//!   as a single batched forward**, sample each row with the request's
+//!   own seeded RNG stream, and retire sequences that hit a stop
+//!   condition. New requests therefore join the running batch at decode
+//!   step granularity — continuous batching, not static batching.
+//! * [`Scheduler::run_to_completion`] ticks until queue and slots drain.
+//!
+//! Steady-state ticks (no admission, no completion) allocate nothing:
+//! every per-request buffer (`tokens`, `token_ns`, the KV cache) gets its
+//! full-horizon capacity at admission, and the batch scratch is reused —
+//! pinned by `decode_steady_state_is_allocation_free`.
+
+use super::engine::ServeEngine;
+use super::kernels::sample_topk;
+use super::kv::SeqKv;
+use crate::rng::{fold_seed, Pcg64};
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Stream selector for per-request sampling RNGs (distinct from the
+/// 0x1417 init stream so serving never replays init randomness).
+const SAMPLE_STREAM: u64 = 0x5e17;
+
+/// Scheduler knobs (the `[serve]` config section maps onto this).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Running sequences per decode batch (slot count).
+    pub max_batch: usize,
+    /// Bounded admission queue depth; submits beyond it are shed.
+    pub queue_depth: usize,
+    /// Hard cap on prompt + generated length (KV rows per sequence).
+    pub max_seq_len: usize,
+    /// Generation budget per request.
+    pub max_new_tokens: usize,
+    /// Top-k sampling width; `0` or `1` = greedy argmax.
+    pub top_k: usize,
+    /// Softmax temperature for top-k sampling (ignored by greedy).
+    pub temperature: f32,
+    /// Token id that ends a generation early; negative = disabled.
+    pub stop_token: i32,
+    /// Base seed; request `id` gets stream `fold_seed(seed, id)`.
+    pub seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self {
+            max_batch: 4,
+            queue_depth: 8,
+            max_seq_len: 256,
+            max_new_tokens: 32,
+            top_k: 0,
+            temperature: 1.0,
+            stop_token: -1,
+            seed: 0,
+        }
+    }
+}
+
+impl ServeOpts {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("serve.max_batch must be >= 1");
+        }
+        if self.queue_depth == 0 {
+            bail!("serve.queue_depth must be >= 1 (a zero queue admits nothing)");
+        }
+        if self.max_new_tokens == 0 {
+            bail!("serve.max_new_tokens must be >= 1");
+        }
+        if self.max_new_tokens >= self.max_seq_len {
+            bail!(
+                "serve.max_new_tokens {} leaves no room for a prompt within max_seq_len {}",
+                self.max_new_tokens,
+                self.max_seq_len
+            );
+        }
+        if !(self.temperature > 0.0) {
+            bail!("serve.temperature must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Why a generation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Sampled the configured stop token (not included in the output).
+    Stop,
+    /// Hit `max_new_tokens`.
+    Length,
+}
+
+impl std::fmt::Display for FinishReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+        })
+    }
+}
+
+/// Outcome of [`Scheduler::try_submit`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Submit {
+    /// Queued for admission; the id names the request in its completion.
+    Queued(u64),
+    /// Bounded queue was full — request shed (backpressure).
+    Shed,
+}
+
+/// A finished request with its generation and latency record.
+#[derive(Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated tokens, stop token excluded.
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Submit -> first sampled token (queue wait + prefill included).
+    pub ttft_ns: u64,
+    /// Per-token decode latency (the batched step each token rode in).
+    pub token_ns: Vec<u64>,
+}
+
+/// Aggregate load metrics over the completions (see [`Scheduler::report`]).
+#[derive(Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub shed: usize,
+    pub total_tokens: usize,
+    pub tokens_per_sec: f64,
+    pub ttft_p50_ns: u64,
+    pub ttft_p99_ns: u64,
+    pub token_p50_ns: u64,
+    pub token_p99_ns: u64,
+}
+
+struct Queued {
+    id: u64,
+    prompt: Vec<i32>,
+    t_submit: Instant,
+}
+
+/// One running sequence's generation state.
+struct Slot {
+    id: u64,
+    prompt_len: usize,
+    tokens: Vec<i32>,
+    /// Last sampled token — the next decode step's input.
+    next_tok: i32,
+    rng: Pcg64,
+    ttft_ns: u64,
+    token_ns: Vec<u64>,
+}
+
+/// The continuous-batching scheduler (single-threaded by design — see
+/// the module contract in `serve/mod.rs`).
+pub struct Scheduler {
+    engine: ServeEngine,
+    opts: ServeOpts,
+    vocab: usize,
+    queue: VecDeque<Queued>,
+    slots: Vec<Option<Slot>>,
+    kvs: Vec<SeqKv>,
+    next_id: u64,
+    shed: usize,
+    completions: Vec<Completion>,
+    // reused per-tick scratch (part of the zero-allocation contract)
+    active: Vec<(usize, i32)>,
+    prefill_logits: Vec<f32>,
+    topk_scratch: Vec<(usize, f32)>,
+}
+
+impl Scheduler {
+    pub fn new(engine: ServeEngine, opts: ServeOpts) -> Result<Self> {
+        opts.validate()?;
+        if opts.max_seq_len > engine.max_prefill_rows() {
+            bail!(
+                "serve.max_seq_len {} exceeds the engine's workspace bound {}",
+                opts.max_seq_len,
+                engine.max_prefill_rows()
+            );
+        }
+        let spec = *engine.spec();
+        let kvs = (0..opts.max_batch)
+            .map(|_| SeqKv::new(spec.n_blocks, spec.dim))
+            .collect();
+        Ok(Self {
+            vocab: spec.vocab,
+            queue: VecDeque::with_capacity(opts.queue_depth),
+            slots: (0..opts.max_batch).map(|_| None).collect(),
+            kvs,
+            next_id: 0,
+            shed: 0,
+            completions: Vec::new(),
+            active: Vec::with_capacity(opts.max_batch),
+            prefill_logits: vec![0.0; spec.vocab],
+            topk_scratch: Vec::with_capacity(opts.top_k.max(1)),
+            engine,
+            opts,
+        })
+    }
+
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
+    /// Model vocabulary size (the valid token-id range for prompts).
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Requests shed by backpressure so far.
+    pub fn shed(&self) -> usize {
+        self.shed
+    }
+
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    /// Queued + running request count.
+    pub fn in_flight(&self) -> usize {
+        self.queue.len() + self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Validate and enqueue a prompt. Invalid prompts are an error (the
+    /// caller's bug); a full queue is not — it is load, answered with
+    /// [`Submit::Shed`] so overload degrades by refusing work instead of
+    /// growing without bound or panicking.
+    pub fn try_submit(&mut self, prompt: &[i32]) -> Result<Submit> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() + self.opts.max_new_tokens > self.opts.max_seq_len {
+            bail!(
+                "prompt of {} tokens + max_new_tokens {} exceeds max_seq_len {}",
+                prompt.len(),
+                self.opts.max_new_tokens,
+                self.opts.max_seq_len
+            );
+        }
+        if let Some(&t) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            bail!("prompt token {} outside vocab 0..{}", t, self.vocab);
+        }
+        if self.queue.len() >= self.opts.queue_depth {
+            self.shed += 1;
+            return Ok(Submit::Shed);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Queued { id, prompt: prompt.to_vec(), t_submit: Instant::now() });
+        Ok(Submit::Queued(id))
+    }
+
+    /// One scheduler tick (admission + one batched decode step). Returns
+    /// `true` while there is still work (running or queued).
+    pub fn step(&mut self) -> bool {
+        self.admit();
+        self.active.clear();
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(slot) = s {
+                self.active.push((i, slot.next_tok));
+            }
+        }
+        if self.active.is_empty() {
+            return !self.queue.is_empty();
+        }
+        let t0 = Instant::now();
+        let logits = self.engine.decode(&self.active, &mut self.kvs);
+        let step_ns = t0.elapsed().as_nanos() as u64;
+        for (r, &(idx, _)) in self.active.iter().enumerate() {
+            let row = &logits[r * self.vocab..(r + 1) * self.vocab];
+            let slot = self.slots[idx].as_mut().expect("active slot");
+            let tok = sample_topk(
+                row,
+                self.opts.top_k,
+                self.opts.temperature,
+                &mut slot.rng,
+                &mut self.topk_scratch,
+            ) as i32;
+            slot.token_ns.push(step_ns);
+            if self.opts.stop_token >= 0 && tok == self.opts.stop_token {
+                Self::finish(&mut self.slots[idx], &mut self.completions, FinishReason::Stop);
+            } else {
+                slot.tokens.push(tok);
+                slot.next_tok = tok;
+                if slot.tokens.len() >= self.opts.max_new_tokens {
+                    Self::finish(&mut self.slots[idx], &mut self.completions, FinishReason::Length);
+                }
+            }
+        }
+        !self.queue.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    /// Tick until every queued and running request completes.
+    pub fn run_to_completion(&mut self) {
+        while self.step() {}
+    }
+
+    /// Admit queued requests into free slots: reserve the KV horizon,
+    /// prefill, sample the first token (TTFT stops here). A request whose
+    /// *first* sample is the stop token completes with no output.
+    fn admit(&mut self) {
+        loop {
+            let Some(free) = self.slots.iter().position(|s| s.is_none()) else {
+                return;
+            };
+            let Some(req) = self.queue.pop_front() else {
+                return;
+            };
+            let kv = &mut self.kvs[free];
+            kv.reset(req.prompt.len() + self.opts.max_new_tokens);
+            self.engine.prefill(&req.prompt, kv, &mut self.prefill_logits);
+            let mut rng = Pcg64::with_stream(fold_seed(self.opts.seed, req.id), SAMPLE_STREAM);
+            let tok = sample_topk(
+                &self.prefill_logits,
+                self.opts.top_k,
+                self.opts.temperature,
+                &mut rng,
+                &mut self.topk_scratch,
+            ) as i32;
+            let ttft_ns = req.t_submit.elapsed().as_nanos() as u64;
+            if self.opts.stop_token >= 0 && tok == self.opts.stop_token {
+                self.completions.push(Completion {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: Vec::new(),
+                    finish: FinishReason::Stop,
+                    ttft_ns,
+                    token_ns: Vec::new(),
+                });
+                continue;
+            }
+            let mut tokens = Vec::with_capacity(self.opts.max_new_tokens);
+            tokens.push(tok);
+            let slot = Slot {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens,
+                next_tok: tok,
+                rng,
+                ttft_ns,
+                token_ns: Vec::with_capacity(self.opts.max_new_tokens),
+            };
+            if self.opts.max_new_tokens == 1 {
+                self.slots[free] = Some(slot);
+                Self::finish(&mut self.slots[free], &mut self.completions, FinishReason::Length);
+            } else {
+                self.slots[free] = Some(slot);
+            }
+        }
+    }
+
+    fn finish(slot: &mut Option<Slot>, completions: &mut Vec<Completion>, finish: FinishReason) {
+        let s = slot.take().expect("finishing an empty slot");
+        completions.push(Completion {
+            id: s.id,
+            prompt_len: s.prompt_len,
+            tokens: s.tokens,
+            finish,
+            ttft_ns: s.ttft_ns,
+            token_ns: s.token_ns,
+        });
+    }
+
+    /// Aggregate the completion latencies into a load report. `elapsed`
+    /// is the caller-measured wall time of the whole run (submits
+    /// included), the denominator for tokens/sec.
+    pub fn report(&self, elapsed: std::time::Duration) -> ServeReport {
+        let mut ttfts: Vec<u64> = self.completions.iter().map(|c| c.ttft_ns).collect();
+        let mut toks: Vec<u64> = self
+            .completions
+            .iter()
+            .flat_map(|c| c.token_ns.iter().copied())
+            .collect();
+        ttfts.sort_unstable();
+        toks.sort_unstable();
+        let total_tokens: usize = self.completions.iter().map(|c| c.tokens.len()).sum();
+        let secs = elapsed.as_secs_f64();
+        ServeReport {
+            completed: self.completions.len(),
+            shed: self.shed,
+            total_tokens,
+            tokens_per_sec: if secs > 0.0 { total_tokens as f64 / secs } else { 0.0 },
+            ttft_p50_ns: super::percentile(&ttfts, 50.0),
+            ttft_p99_ns: super::percentile(&ttfts, 99.0),
+            token_p50_ns: super::percentile(&toks, 50.0),
+            token_p99_ns: super::percentile(&toks, 99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Kernel;
+    use crate::serve::engine::{init_tensors, ServeModel, ShapeDispatch};
+    use crate::runtime::ModelSpec;
+    use crate::util::alloc_count::thread_alloc_count;
+
+    fn tiny_sched(opts: ServeOpts) -> Scheduler {
+        let spec = ModelSpec { vocab: 32, dim: 16, n_blocks: 2, n_heads: 2, head_dim: 8, ffn_dim: 24 };
+        let params = init_tensors(&spec, 42);
+        let model = ServeModel::from_tensors(spec, &params).unwrap();
+        let engine = ServeEngine::new(
+            model,
+            opts.max_batch,
+            opts.max_seq_len,
+            ShapeDispatch::fixed(Kernel::Scalar),
+        );
+        Scheduler::new(engine, opts).unwrap()
+    }
+
+    fn opts() -> ServeOpts {
+        ServeOpts { max_seq_len: 64, max_new_tokens: 8, ..ServeOpts::default() }
+    }
+
+    fn run_tokens(opts: ServeOpts, prompts: &[&[i32]]) -> Vec<(u64, Vec<i32>, FinishReason)> {
+        let mut s = tiny_sched(opts);
+        for p in prompts {
+            assert!(matches!(s.try_submit(p).unwrap(), Submit::Queued(_)));
+        }
+        s.run_to_completion();
+        let mut out: Vec<_> = s
+            .completions()
+            .iter()
+            .map(|c| (c.id, c.tokens.clone(), c.finish))
+            .collect();
+        out.sort_by_key(|c| c.0);
+        out
+    }
+
+    #[test]
+    fn two_runs_are_bit_identical() {
+        let prompts: &[&[i32]] = &[&[1, 2, 3], &[30, 4], &[7, 7, 7, 7, 9]];
+        let a = run_tokens(opts(), prompts);
+        let b = run_tokens(opts(), prompts);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|(_, t, f)| t.len() == 8 && *f == FinishReason::Length));
+    }
+
+    #[test]
+    fn seeded_topk_is_deterministic_and_seed_sensitive() {
+        let o = ServeOpts { top_k: 4, temperature: 0.8, ..opts() };
+        let prompts: &[&[i32]] = &[&[5, 6], &[21]];
+        let a = run_tokens(o, prompts);
+        let b = run_tokens(o, prompts);
+        assert_eq!(a, b, "same seed must replay exactly");
+        let c = run_tokens(ServeOpts { seed: 1, ..o }, prompts);
+        assert!(a != c, "different serve seed should perturb sampled tokens");
+    }
+
+    #[test]
+    fn solo_and_batched_runs_generate_identical_tokens() {
+        // Continuous batching must not change any request's output:
+        // request 0 generates the same tokens alone and in a full batch.
+        let solo = run_tokens(opts(), &[&[11, 3, 19]]);
+        let batched = run_tokens(opts(), &[&[11, 3, 19], &[2], &[31, 30, 29, 28]]);
+        assert_eq!(solo[0].1, batched[0].1);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overload_without_panicking() {
+        let o = ServeOpts { max_batch: 1, queue_depth: 2, ..opts() };
+        let mut s = tiny_sched(o);
+        let mut queued = 0;
+        let mut shed = 0;
+        for _ in 0..6 {
+            match s.try_submit(&[3, 1]).unwrap() {
+                Submit::Queued(_) => queued += 1,
+                Submit::Shed => shed += 1,
+            }
+        }
+        // nothing stepped yet, so admission hasn't drained the queue:
+        // exactly queue_depth requests fit, the rest shed
+        assert_eq!((queued, shed), (2, 4));
+        assert_eq!(s.shed(), 4);
+        s.run_to_completion();
+        assert_eq!(s.completions().len(), 2);
+        assert_eq!(s.in_flight(), 0);
+        // capacity freed: the next submit queues again
+        assert!(matches!(s.try_submit(&[3, 1]).unwrap(), Submit::Queued(_)));
+    }
+
+    #[test]
+    fn late_submits_join_the_running_batch() {
+        // continuous admission: a request submitted mid-generation is
+        // admitted at the next tick and still matches its solo output
+        let o = ServeOpts { max_batch: 4, ..opts() };
+        let mut s = tiny_sched(o);
+        assert!(matches!(s.try_submit(&[1, 2, 3]).unwrap(), Submit::Queued(_)));
+        s.step();
+        s.step();
+        assert!(matches!(s.try_submit(&[25, 14]).unwrap(), Submit::Queued(_)));
+        s.run_to_completion();
+        let mut got: Vec<_> = s.completions().iter().map(|c| (c.id, c.tokens.clone())).collect();
+        got.sort_by_key(|c| c.0);
+        let solo = run_tokens(o, &[&[25, 14]]);
+        assert_eq!(got[1].1, solo[0].1, "late-admitted request diverged from solo run");
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early() {
+        // learn what greedy generates, then designate its 3rd token as
+        // the stop token: the rerun must truncate right before it
+        let base = run_tokens(opts(), &[&[9, 27, 2]]);
+        let full = &base[0].1;
+        assert_eq!(full.len(), 8);
+        let stop = full[2];
+        let truncated = run_tokens(ServeOpts { stop_token: stop, ..opts() }, &[&[9, 27, 2]]);
+        let want: Vec<i32> = full.iter().take_while(|&&t| t != stop).copied().collect();
+        assert_eq!(truncated[0].1, want);
+        if want.len() < 8 {
+            assert_eq!(truncated[0].2, FinishReason::Stop);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_prompts() {
+        let mut s = tiny_sched(opts());
+        assert!(s.try_submit(&[]).is_err());
+        assert!(s.try_submit(&[99]).is_err(), "token outside vocab");
+        assert!(s.try_submit(&vec![1; 60]).is_err(), "prompt + budget > max_seq_len");
+        assert_eq!(s.shed(), 0, "invalid prompts are errors, not shed load");
+    }
+
+    #[test]
+    fn decode_steady_state_is_allocation_free() {
+        let o = ServeOpts { max_batch: 2, max_new_tokens: 24, max_seq_len: 64, ..ServeOpts::default() };
+        let mut s = tiny_sched(o);
+        s.try_submit(&[1, 2, 3]).unwrap();
+        s.try_submit(&[4, 5]).unwrap();
+        s.step(); // admission tick: prefills + capacity reservations
+        s.step(); // warm decode tick
+        let before = thread_alloc_count();
+        for _ in 0..4 {
+            assert!(s.step());
+        }
+        assert_eq!(
+            thread_alloc_count() - before,
+            0,
+            "steady-state decode tick allocated"
+        );
+        s.run_to_completion();
+        assert_eq!(s.completions().len(), 2);
+    }
+
+    #[test]
+    fn report_aggregates_latencies() {
+        let mut s = tiny_sched(opts());
+        s.try_submit(&[1, 2]).unwrap();
+        s.try_submit(&[3]).unwrap();
+        let t0 = Instant::now();
+        s.run_to_completion();
+        let r = s.report(t0.elapsed());
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.total_tokens, 16);
+        assert!(r.tokens_per_sec > 0.0);
+        assert!(r.ttft_p99_ns >= r.ttft_p50_ns);
+        assert!(r.token_p99_ns >= r.token_p50_ns && r.token_p50_ns > 0);
+    }
+}

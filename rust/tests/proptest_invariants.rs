@@ -1057,3 +1057,101 @@ fn prop_load_latest_valid_survives_corrupt_newest() {
         assert_eq!(got.skipped, 1, "seed {seed}");
     }
 }
+
+// ----------------------------------------------------------------- serve
+
+/// The blocked online-softmax flash attention must match the naive
+/// O(S²) two-pass oracle over random head dims, cache lengths, strides,
+/// and query windows (prefill-shaped multi-row and decode-shaped
+/// single-row windows alike).
+///
+/// Tolerance: both paths share the fixed-association `dot`, but flash
+/// pre-scales q (one rounding per q element) while the oracle scales the
+/// dot product, and the online softmax rescales its carry by
+/// `exp(m - m_new)` per tile instead of normalizing once — a few ulps
+/// per tile crossing. 2e-5 absolute on O(1)-magnitude outputs covers it
+/// with margin; bitwise equality is pinned separately for RMSNorm where
+/// the schedules are identical.
+#[test]
+fn prop_serve_flash_attention_matches_naive_oracle() {
+    use sara::serve::kernels::{attention_head_ref, flash_attention_head};
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4300 + seed);
+        let hd = 2 * rand_dims(&mut rng, 1, 32); // even, 2..=64
+        let kv_len = rand_dims(&mut rng, 1, 80); // crosses BLOCK_K=32 tiles
+        let q_rows = rand_dims(&mut rng, 1, kv_len);
+        let q_start = kv_len - q_rows;
+        let n_heads = rand_dims(&mut rng, 1, 3);
+        let h = rng.next_bounded(n_heads as u64) as usize;
+        let stride = n_heads * hd;
+        let off = h * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut q = vec![0.0f32; q_rows * stride];
+        let mut k = vec![0.0f32; kv_len * stride];
+        let mut v = vec![0.0f32; kv_len * stride];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+
+        let mut got = vec![0.0f32; q_rows * stride];
+        let mut want = vec![0.0f32; q_rows * stride];
+        let mut scores = Vec::new();
+        flash_attention_head(
+            &q, q_rows, q_start, stride, off, hd, &k, &v, stride, off, kv_len,
+            scale, &mut got,
+        );
+        attention_head_ref(
+            &q, q_rows, q_start, stride, off, hd, &k, &v, stride, off, kv_len,
+            scale, &mut scores, &mut want,
+        );
+        for r in 0..q_rows {
+            for d in 0..hd {
+                let i = r * stride + off + d;
+                assert!(
+                    (got[i] - want[i]).abs() < 2e-5,
+                    "seed {seed}: row {r} dim {d}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+        // the off-head columns of `out` must be untouched (shared buffer)
+        for (i, &x) in got.iter().enumerate() {
+            let col = i % stride;
+            if !(off..off + hd).contains(&col) {
+                assert_eq!(x, 0.0, "seed {seed}: wrote outside head slice at {i}");
+            }
+        }
+    }
+}
+
+/// The serving RMSNorm's lane path and its plain-scalar twin share one
+/// reduction schedule (8 stripes + hsum tree + fused tail) by
+/// construction; pin that claim **bitwise** over random widths, including
+/// non-multiple-of-8 tails.
+#[test]
+fn prop_serve_rmsnorm_scalar_and_lane_paths_bitwise_equal() {
+    use sara::serve::kernels::{rmsnorm_row, rmsnorm_row_scalar};
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4400 + seed);
+        let d = rand_dims(&mut rng, 1, 97);
+        let mut x = vec![0.0f32; d];
+        let mut w = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut w, 0.5);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        rmsnorm_row(&x, &w, &mut a);
+        rmsnorm_row_scalar(&x, &w, &mut b);
+        for i in 0..d {
+            assert_eq!(
+                a[i].to_bits(),
+                b[i].to_bits(),
+                "seed {seed}: dim {i}: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+}

@@ -15,6 +15,11 @@
 # 4. crash-recovery smoke (needs PJRT artifacts): kill a run mid-
 #    checkpoint via the fault harness, auto-resume, and require the
 #    resumed `final:` line to match an uninterrupted run bit-for-bit.
+# 5. serving smoke (artifact-free — the forward pass is native): serve
+#    concurrent seeded requests through the continuous-batching
+#    scheduler, require two runs and a checkpoint round-trip to emit
+#    bit-identical token streams, overload to shed via the bounded
+#    queue, and the serve bench JSON to be non-empty.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -138,7 +143,77 @@ else
 fi
 
 echo
-echo "== perf smoke: hotpath + allreduce benches (fast mode) =="
+echo "== serving smoke: checkpoint -> continuous batching -> determinism =="
+# configs/serve-smoke.toml pins the scalar kernel and a fixed seed; the
+# load generator's prompts are a pure function of (seed, i), so the
+# `request N: ...` lines and the `shed:` count are a complete transcript
+# of the run's visible behavior — diffing them across runs is the
+# determinism gate from the serve/mod.rs module contract
+serve_dir=$(mktemp -d /tmp/sara_serve_smoke.XXXXXX)
+(cd rust && cargo run --release --quiet -- serve \
+   --config "$REPO_ROOT/configs/serve-smoke.toml" --requests 8 \
+   --save-ckpt "$serve_dir/serve.ckpt" --bench-json "$serve_dir/serve_smoke.json" \
+   | tee /tmp/sara_serve_a.log)
+(cd rust && cargo run --release --quiet -- serve \
+   --config "$REPO_ROOT/configs/serve-smoke.toml" --requests 8 \
+   > /tmp/sara_serve_b.log)
+# third leg: the same weights round-tripped through the v3 checkpoint
+(cd rust && cargo run --release --quiet -- serve \
+   --config "$REPO_ROOT/configs/serve-smoke.toml" --requests 8 \
+   --ckpt "$serve_dir/serve.ckpt" \
+   > /tmp/sara_serve_c.log)
+for leg in b c; do
+  if ! diff <(grep -E '^(request|shed:)' /tmp/sara_serve_a.log) \
+            <(grep -E '^(request|shed:)' "/tmp/sara_serve_$leg.log"); then
+    echo "FAIL: serve run '$leg' diverged from run 'a' (determinism break)"
+    exit 1
+  fi
+done
+if ! grep -q '^request 0:' /tmp/sara_serve_a.log; then
+  echo "FAIL: serve smoke produced no completions"
+  exit 1
+fi
+# overload leg: 32 requests into queue 8 + batch 4 must shed, not panic
+(cd rust && cargo run --release --quiet -- serve \
+   --config "$REPO_ROOT/configs/serve-smoke.toml" --requests 32 \
+   > /tmp/sara_serve_overload.log)
+shed_n=$(sed -n 's/^shed: //p' /tmp/sara_serve_overload.log)
+if [ -z "$shed_n" ] || [ "$shed_n" -eq 0 ]; then
+  echo "FAIL: overload run did not shed (expected bounded-queue backpressure)"
+  exit 1
+fi
+if [ ! -s "$serve_dir/serve_smoke.json" ]; then
+  echo "FAIL: serve smoke emitted no bench JSON"
+  exit 1
+fi
+echo "serve determinism + round-trip + backpressure OK (shed $shed_n under overload)"
+rm -rf "$serve_dir"
+
+echo
+echo "== train -> serve: generate from a trained checkpoint =="
+# closes the loop end-to-end when PJRT artifacts exist *and* the baked
+# manifest records the attention geometry (older aot.py runs predate the
+# n_heads/head_dim/ffn_dim manifest fields — re-run aot.py to refresh)
+if [ -f rust/artifacts/test.train.hlo.txt ] \
+   && grep -q '"n_heads"' rust/artifacts/test.manifest.json 2>/dev/null; then
+  ck_serve=$(mktemp -d /tmp/sara_train_serve.XXXXXX)
+  (cd rust && cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke.toml" --ckpt-dir "$ck_serve")
+  newest_ck=$(ls -t "$ck_serve"/*.ckpt | head -1)
+  (cd rust && cargo run --release --quiet -- serve \
+     --model test --requests 4 --ckpt "$newest_ck" \
+     | tee /tmp/sara_train_serve.log)
+  if ! grep -q '^request 0:' /tmp/sara_train_serve.log; then
+    echo "FAIL: serving the trained checkpoint produced no completions"
+    exit 1
+  fi
+  rm -rf "$ck_serve"
+else
+  echo "(no PJRT artifacts with model-geometry manifest; skipped train->serve)"
+fi
+
+echo
+echo "== perf smoke: hotpath + allreduce + serve benches (fast mode) =="
 (
   cd rust
   SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_hotpath.json" \
@@ -149,6 +224,8 @@ echo "== perf smoke: hotpath + allreduce benches (fast mode) =="
     cargo bench --bench gemm
   SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_engine.json" \
     cargo bench --bench engine
+  SARA_BENCH_FAST=1 SARA_BENCH_JSON="$REPO_ROOT/BENCH_serve.json" \
+    cargo bench --bench serve
 )
 
 echo

@@ -544,7 +544,7 @@ impl RunConfig {
         cfg.lr = doc.get_f64("run", "lr").unwrap_or(cfg.lr);
         cfg.total_steps = doc.get_usize("run", "steps").unwrap_or(cfg.total_steps);
         cfg.warmup_steps = doc.get_usize("run", "warmup").unwrap_or(cfg.warmup_steps);
-        cfg.seed = doc.get_usize("run", "seed").unwrap_or(cfg.seed as usize) as u64;
+        cfg.seed = toml_u64(&doc, "run", "seed", cfg.seed)?;
         cfg.workers = doc.get_usize("run", "workers").unwrap_or(cfg.workers);
         cfg.dist.workers =
             doc.get_usize("dist", "workers").unwrap_or(cfg.dist.workers);
@@ -598,10 +598,12 @@ impl RunConfig {
         if let Some(b) = doc.get_bool("optim", "fused_update") {
             cfg.optim.fused_update = b;
         }
-        cfg.optim.refresh_timeout_ms = doc
-            .get_usize("optim", "refresh_timeout_ms")
-            .unwrap_or(cfg.optim.refresh_timeout_ms as usize)
-            as u64;
+        cfg.optim.refresh_timeout_ms = toml_u64(
+            &doc,
+            "optim",
+            "refresh_timeout_ms",
+            cfg.optim.refresh_timeout_ms,
+        )?;
         cfg.optim.refresh_retries = doc
             .get_usize("optim", "refresh_retries")
             .unwrap_or(cfg.optim.refresh_retries);
@@ -627,8 +629,7 @@ impl RunConfig {
         if let Some(v) = doc.get_str("fault", "spec") {
             cfg.fault.spec = v.to_string();
         }
-        cfg.fault.seed =
-            doc.get_usize("fault", "seed").unwrap_or(cfg.fault.seed as usize) as u64;
+        cfg.fault.seed = toml_u64(&doc, "fault", "seed", cfg.fault.seed)?;
         cfg.serve.max_batch =
             doc.get_usize("serve", "max_batch").unwrap_or(cfg.serve.max_batch);
         cfg.serve.queue_depth =
@@ -643,8 +644,21 @@ impl RunConfig {
             .get_f64("serve", "temperature")
             .unwrap_or(cfg.serve.temperature as f64) as f32;
         // i32, not usize: negative means "no stop token"
-        if let Some(toml::TomlValue::Int(v)) = doc.get("serve", "stop_token") {
-            cfg.serve.stop_token = *v as i32;
+        if let Some(v) = doc.get("serve", "stop_token") {
+            let i = match v {
+                toml::TomlValue::Int(i) => *i,
+                other => {
+                    bail!("serve.stop_token must be an integer, got {other:?}")
+                }
+            };
+            cfg.serve.stop_token = i32::try_from(i).map_err(|_| {
+                anyhow::anyhow!(
+                    "serve.stop_token {i} is out of range for i32 \
+                     ({}..={})",
+                    i32::MIN,
+                    i32::MAX
+                )
+            })?;
         }
         cfg.model_spec = Self::model_spec_from_toml(&doc)?;
         Ok(cfg)
@@ -674,6 +688,28 @@ impl RunConfig {
         };
         spec.validate()?;
         Ok(Some(spec))
+    }
+}
+
+/// Non-negative TOML integer as `u64`, defaulting only when the key is
+/// absent. A negative or wrongly-typed value is a clean parse error —
+/// seeds and timeouts must never silently fall back to the default (the
+/// old `get_usize(..).unwrap_or(..) as u64` pattern swallowed `seed = -5`
+/// whole) or wrap through an `as` cast.
+fn toml_u64(
+    doc: &toml::TomlDoc,
+    section: &str,
+    key: &str,
+    default: u64,
+) -> Result<u64> {
+    match doc.get(section, key) {
+        None => Ok(default),
+        Some(toml::TomlValue::Int(i)) => u64::try_from(*i).map_err(|_| {
+            anyhow::anyhow!("{section}.{key} must be >= 0, got {i}")
+        }),
+        Some(other) => {
+            bail!("{section}.{key} must be an integer, got {other:?}")
+        }
     }
 }
 
@@ -813,6 +849,48 @@ mod tests {
                 "{body:?}"
             );
         }
+    }
+
+    #[test]
+    fn toml_integer_knobs_reject_out_of_range_values() {
+        let dir = std::env::temp_dir().join("sara_cfg_int_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ints.toml");
+        let load = |body: &str| {
+            std::fs::write(&path, body).unwrap();
+            RunConfig::from_toml_file(path.to_str().unwrap())
+        };
+
+        // stop_token is i32; in-range values (including the negative
+        // "no stop token" sentinel) parse exactly
+        let c = load("[serve]\nstop_token = -1\n").unwrap();
+        assert_eq!(c.serve.stop_token, -1);
+        let c = load("[serve]\nstop_token = 2147483647\n").unwrap();
+        assert_eq!(c.serve.stop_token, i32::MAX);
+
+        // out-of-i32-range used to wrap through `as i32` (2^31 -> -2^31);
+        // now it is a clean parse error
+        for body in [
+            "[serve]\nstop_token = 2147483648\n",
+            "[serve]\nstop_token = -2147483649\n",
+            "[serve]\nstop_token = \"eos\"\n",
+        ] {
+            let err = load(body).unwrap_err().to_string();
+            assert!(err.contains("stop_token"), "{body:?} -> {err}");
+        }
+
+        // seeds and the refresh timeout error on negatives instead of
+        // silently keeping the default
+        for body in [
+            "[run]\nseed = -5\n",
+            "[fault]\nseed = -1\n",
+            "[optim]\nrefresh_timeout_ms = -100\n",
+        ] {
+            assert!(load(body).is_err(), "{body:?}");
+        }
+        let c = load("[run]\nseed = 12345\n\n[fault]\nseed = 9\n").unwrap();
+        assert_eq!(c.seed, 12345);
+        assert_eq!(c.fault.seed, 9);
     }
 
     #[test]

@@ -120,10 +120,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("{}", result.resilience.row());
     }
     if let Some(path) = args.get("save") {
+        // weight export for eval/serve — no optimizer section (v3 file)
         let ck = Checkpoint {
             step: trainer.current_step(),
             dist_workers: cfg.world() as u32,
             params: trainer.params.clone(),
+            opt_state: None,
         };
         ck.save(std::path::Path::new(path))?;
         println!("checkpoint saved to {path}");
@@ -237,7 +239,12 @@ fn build_scheduler(args: &Args, cfg: &RunConfig) -> Result<sara::serve::Schedule
         }
     };
     if let Some(path) = args.get("save-ckpt") {
-        let ck = Checkpoint { step: 0, dist_workers: 1, params: params.clone() };
+        let ck = Checkpoint {
+            step: 0,
+            dist_workers: 1,
+            params: params.clone(),
+            opt_state: None,
+        };
         ck.save(std::path::Path::new(path))?;
         println!("checkpoint saved to {path}");
     }

@@ -8,6 +8,8 @@
 use super::OptState;
 use crate::config::OptimConfig;
 use crate::linalg::Matrix;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
 
 pub struct Adafactor {
     m: Matrix,
@@ -88,6 +90,36 @@ impl OptState for Adafactor {
 
     fn state_bytes(&self) -> usize {
         (self.m.data.len() + self.vr.len() + self.vc.len()) * 4
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        bytes::put_u64(out, self.t as u64);
+        bytes::put_matrix(out, &self.m);
+        bytes::put_f32s(out, &self.vr);
+        bytes::put_f32s(out, &self.vc);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let t = r.u64()? as usize;
+        let m = bytes::read_matrix(r)?;
+        let vr = r.f32s()?;
+        let vc = r.f32s()?;
+        if (m.rows, m.cols) != (self.m.rows, self.m.cols)
+            || vr.len() != self.vr.len()
+            || vc.len() != self.vc.len()
+        {
+            bail!(
+                "adafactor state shape mismatch: checkpoint {}x{} \
+                 (vr {}, vc {}), constructed {}x{} (vr {}, vc {})",
+                m.rows, m.cols, vr.len(), vc.len(),
+                self.m.rows, self.m.cols, self.vr.len(), self.vc.len()
+            );
+        }
+        self.t = t;
+        self.m = m;
+        self.vr = vr;
+        self.vc = vc;
+        Ok(())
     }
 }
 

@@ -4,6 +4,8 @@
 use super::OptState;
 use crate::config::OptimConfig;
 use crate::linalg::Matrix;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
 
 /// Dense-state Adam: first moment `M` and second moment `V`, bias-corrected.
 pub struct Adam {
@@ -86,6 +88,32 @@ impl OptState for Adam {
 
     fn state_bytes(&self) -> usize {
         (self.m.data.len() + self.v.data.len()) * 4
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        bytes::put_u64(out, self.t as u64);
+        bytes::put_matrix(out, &self.m);
+        bytes::put_matrix(out, &self.v);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let t = r.u64()? as usize;
+        let m = bytes::read_matrix(r)?;
+        let v = bytes::read_matrix(r)?;
+        if (m.rows, m.cols) != (self.m.rows, self.m.cols)
+            || (v.rows, v.cols) != (self.v.rows, self.v.cols)
+        {
+            bail!(
+                "adam state shape mismatch: checkpoint {}x{} / {}x{}, \
+                 constructed {}x{} / {}x{}",
+                m.rows, m.cols, v.rows, v.cols,
+                self.m.rows, self.m.cols, self.v.rows, self.v.cols
+            );
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 }
 

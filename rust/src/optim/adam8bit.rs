@@ -7,6 +7,8 @@ use super::OptState;
 use crate::config::OptimConfig;
 use crate::linalg::Matrix;
 use crate::quant::{LogQuantizedTensor, QuantizedTensor};
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
 
 pub struct Adam8bit {
     m: QuantizedTensor,
@@ -85,6 +87,54 @@ impl OptState for Adam8bit {
 
     fn state_bytes(&self) -> usize {
         self.m.nbytes() + self.v.nbytes()
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // the 8-bit codes + per-block scales ARE the authoritative state
+        // (log-quant requantization is a fixed point, so serializing the
+        // encoded form round-trips bit-exactly); the f32 scratch buffers
+        // are rebuilt by the first dequantize after restore
+        bytes::put_u64(out, self.t as u64);
+        bytes::put_u32(out, self.rows as u32);
+        bytes::put_u32(out, self.cols as u32);
+        bytes::put_i8s(out, &self.m.codes);
+        bytes::put_f32s(out, &self.m.scales);
+        bytes::put_u8s(out, &self.v.codes);
+        bytes::put_f32s(out, &self.v.scales);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let t = r.u64()? as usize;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        if (rows, cols) != (self.rows, self.cols) {
+            bail!(
+                "adam8bit state shape mismatch: checkpoint {rows}x{cols}, \
+                 constructed {}x{}",
+                self.rows, self.cols
+            );
+        }
+        let m_codes = r.i8s()?;
+        let m_scales = r.f32s()?;
+        let v_codes = r.u8s()?;
+        let v_scales = r.f32s()?;
+        let len = rows * cols;
+        let nblocks = len.div_ceil(crate::quant::BLOCK);
+        if m_codes.len() != len
+            || v_codes.len() != len
+            || m_scales.len() != nblocks
+            || v_scales.len() != nblocks
+        {
+            bail!(
+                "adam8bit state blob inconsistent: {len} element(s) / \
+                 {nblocks} block(s) vs codes {}/{} scales {}/{}",
+                m_codes.len(), v_codes.len(), m_scales.len(), v_scales.len()
+            );
+        }
+        self.t = t;
+        self.m = QuantizedTensor { len, codes: m_codes, scales: m_scales };
+        self.v = LogQuantizedTensor { len, codes: v_codes, scales: v_scales };
+        Ok(())
     }
 }
 

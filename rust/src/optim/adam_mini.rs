@@ -7,6 +7,8 @@
 use super::OptState;
 use crate::config::OptimConfig;
 use crate::linalg::Matrix;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
 
 pub struct AdamMini {
     m: Matrix,
@@ -69,6 +71,32 @@ impl OptState for AdamMini {
 
     fn state_bytes(&self) -> usize {
         (self.m.data.len() + self.v.len()) * 4
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        bytes::put_u64(out, self.t as u64);
+        bytes::put_matrix(out, &self.m);
+        bytes::put_f32s(out, &self.v);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let t = r.u64()? as usize;
+        let m = bytes::read_matrix(r)?;
+        let v = r.f32s()?;
+        if (m.rows, m.cols) != (self.m.rows, self.m.cols)
+            || v.len() != self.v.len()
+        {
+            bail!(
+                "adam-mini state shape mismatch: checkpoint {}x{} (v {}), \
+                 constructed {}x{} (v {})",
+                m.rows, m.cols, v.len(),
+                self.m.rows, self.m.cols, self.v.len()
+            );
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 }
 

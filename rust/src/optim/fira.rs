@@ -43,6 +43,20 @@ impl FiraResidual {
         self.ema
     }
 
+    /// The evolving state for checkpoint serialization: `(ema,
+    /// initialized)`. The limiter threshold is config, not state.
+    pub fn snapshot(&self) -> (f32, bool) {
+        (self.ema, self.initialized)
+    }
+
+    /// Reinstall state captured by [`FiraResidual::snapshot`] so the
+    /// limiter continues its running average exactly where the saved run
+    /// left it.
+    pub fn restore(&mut self, ema: f32, initialized: bool) {
+        self.ema = ema;
+        self.initialized = initialized;
+    }
+
     /// Fused, allocation-free residual add for the workspace hot path:
     /// `upd += alpha * phi * (work - pr)` in a single pass, where
     /// `pr = P (P^T G)` is the low-rank reconstruction and `phi` is this

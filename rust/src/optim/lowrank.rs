@@ -89,7 +89,9 @@ use crate::linalg::{
 };
 use crate::quant::QuantizedTensor;
 use crate::selector::{RefreshJob, RefreshOutput, Selector};
+use crate::util::bytes::{self, ByteReader};
 use crate::util::pool::{JobHandle, JoinOutcome};
+use anyhow::{bail, Result};
 use std::time::Duration;
 
 /// Preallocated per-matrix scratch for the steady-state step. All buffers
@@ -512,6 +514,104 @@ impl LowRankState {
         self.step_into(g, lr, &mut out);
         out
     }
+
+    /// Serialize every piece of evolving state so a resumed run continues
+    /// this layer's trajectory bit-identically: step clock, refresh count,
+    /// the installed projector `P` (its column count records the per-layer
+    /// rank — the hook adaptive-rank selectors will grow into), Fira's
+    /// running EMA, the selector's RNG/evolving state, and the inner
+    /// optimizer's moments. The trainer defers checkpoints past steps with
+    /// a scheduled or in-flight refresh, so "no refresh pending" is an
+    /// invariant of the format rather than a field. Derived caches (the
+    /// int8 projector encoding, workspaces, wall-clock telemetry) are
+    /// deliberately excluded and rebuilt after restore.
+    pub fn save_opt_state(&self, out: &mut Vec<u8>) {
+        debug_assert!(
+            self.pending.is_none(),
+            "checkpoint taken with a refresh in flight"
+        );
+        bytes::put_u64(out, self.t as u64);
+        bytes::put_u64(out, self.refresh_count as u64);
+        match &self.p {
+            Some(p) => {
+                bytes::put_u8(out, 1);
+                bytes::put_matrix(out, p);
+            }
+            None => bytes::put_u8(out, 0),
+        }
+        match &self.fira {
+            Some(f) => {
+                let (ema, initialized) = f.snapshot();
+                bytes::put_u8(out, 1);
+                bytes::put_f32(out, ema);
+                bytes::put_u8(out, initialized as u8);
+            }
+            None => bytes::put_u8(out, 0),
+        }
+        let mut sel = Vec::new();
+        self.selector.save_state(&mut sel);
+        bytes::put_u8s(out, &sel);
+        let mut inner = Vec::new();
+        self.state.save_state(&mut inner);
+        bytes::put_u8s(out, &inner);
+    }
+
+    /// Reinstall state captured by [`LowRankState::save_opt_state`] into a
+    /// freshly constructed instance of the same config and shape. On `Err`
+    /// the state may be partially overwritten — discard the whole
+    /// optimizer.
+    pub fn restore_opt_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let t = r.u64()? as usize;
+        let refresh_count = r.u64()? as usize;
+        let p = match r.u8()? {
+            0 => None,
+            _ => {
+                let p = bytes::read_matrix(r)?;
+                let short = self.rows.min(self.cols);
+                if p.rows != short || p.cols == 0 || p.cols > short {
+                    bail!(
+                        "projector shape mismatch: checkpoint {}x{}, layer short side {}",
+                        p.rows,
+                        p.cols,
+                        short
+                    );
+                }
+                Some(p)
+            }
+        };
+        let fira = match r.u8()? {
+            0 => None,
+            _ => Some((r.f32()?, r.u8()? != 0)),
+        };
+        if fira.is_some() != self.fira.is_some() {
+            bail!("fira residual presence differs between checkpoint and config");
+        }
+        let sel_blob = r.u8s()?;
+        let inner_blob = r.u8s()?;
+        {
+            let mut sr = ByteReader::new(&sel_blob);
+            self.selector.restore_state(&mut sr)?;
+            sr.finish()?;
+        }
+        {
+            let mut ir = ByteReader::new(&inner_blob);
+            self.state.restore_state(&mut ir)?;
+            ir.finish()?;
+        }
+        if let (Some(f), Some((ema, initialized))) = (self.fira.as_mut(), fira) {
+            f.restore(ema, initialized);
+        }
+        self.t = t;
+        self.refresh_count = refresh_count;
+        self.p = p;
+        // the int8 encoding is derived; the first q8 step rebuilds it from
+        // the restored projector
+        self.pq = None;
+        // wall-clock telemetry restarts with the process
+        self.refresh_nanos = 0;
+        self.refresh_fallbacks = 0;
+        Ok(())
+    }
 }
 
 /// Copy `work` into the reusable snapshot buffer, (re)sizing it only when
@@ -627,6 +727,55 @@ impl ParamOptimizer {
             ParamOptimizer::Full { .. } => 0,
             ParamOptimizer::LowRank(s) => s.refresh_fallbacks(),
         }
+    }
+
+    /// Serialize this parameter's full optimizer state as one self-framed
+    /// blob (checkpoint v4 payload unit). A leading tag byte records the
+    /// variant (0 = full-rank, 1 = low-rank) so restore can reject a
+    /// checkpoint whose wrapper/eligibility layout differs from the
+    /// running config.
+    pub fn save_opt_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ParamOptimizer::Full { state, t } => {
+                bytes::put_u8(&mut out, 0);
+                bytes::put_u64(&mut out, *t as u64);
+                state.save_state(&mut out);
+            }
+            ParamOptimizer::LowRank(s) => {
+                bytes::put_u8(&mut out, 1);
+                s.save_opt_state(&mut out);
+            }
+        }
+        out
+    }
+
+    /// Reinstall a blob from [`ParamOptimizer::save_opt_state`] into a
+    /// freshly constructed optimizer of the same config and shape.
+    /// Validates the variant tag, every shape, and that the blob is
+    /// consumed exactly; on `Err` discard the whole optimizer (state may
+    /// be partially overwritten).
+    pub fn restore_opt_state(&mut self, blob: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(blob);
+        match self {
+            ParamOptimizer::Full { state, t } => {
+                match r.u8()? {
+                    0 => {}
+                    tag => bail!("optimizer state tag {tag} for a full-rank parameter"),
+                }
+                let saved_t = r.u64()? as usize;
+                state.restore_state(&mut r)?;
+                *t = saved_t;
+            }
+            ParamOptimizer::LowRank(s) => {
+                match r.u8()? {
+                    1 => {}
+                    tag => bail!("optimizer state tag {tag} for a low-rank parameter"),
+                }
+                s.restore_opt_state(&mut r)?;
+            }
+        }
+        r.finish()
     }
 }
 
@@ -1335,5 +1484,154 @@ mod tests {
             opt.step_into(&g, 0.01, &mut out);
         }
         assert_eq!(thread_alloc_count() - before, 0);
+    }
+
+    /// The stateful-resume contract at the optimizer level: a freshly
+    /// constructed optimizer that restores a mid-run blob must continue
+    /// the trajectory bit-identically to the uninterrupted original — for
+    /// every inner optimizer (including 8-bit Adam, whose codes + scales
+    /// are the authoritative state), both gradient orientations, and a
+    /// stateful selector whose RNG stream must resume mid-sequence.
+    #[test]
+    fn save_restore_continues_bit_identically_for_every_inner() {
+        let inners = [
+            InnerOpt::Adam,
+            InnerOpt::Adafactor,
+            InnerOpt::AdamMini,
+            InnerOpt::Adam8bit,
+            InnerOpt::Msgd,
+        ];
+        for inner in inners {
+            for (rows, cols) in [(12, 20), (20, 12)] {
+                let mut cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Sara, 4);
+                cfg.inner = inner;
+                cfg.update_period = 3;
+                let mut live = ParamOptimizer::low_rank(
+                    rows,
+                    cols,
+                    &cfg,
+                    make_selector(cfg.selector, 7, 0),
+                );
+                let mut rng = Pcg64::new(17);
+                let grads: Vec<Matrix> =
+                    (0..14).map(|_| Matrix::randn(rows, cols, 1.0, &mut rng)).collect();
+                // stop between refreshes (tau=3, 7 steps) so the restored
+                // optimizer must also resume the refresh clock mid-cycle
+                for g in &grads[..7] {
+                    live.step(g, 0.05);
+                }
+                let blob = live.save_opt_state();
+                let mut resumed = ParamOptimizer::low_rank(
+                    rows,
+                    cols,
+                    &cfg,
+                    make_selector(cfg.selector, 7, 0),
+                );
+                resumed.restore_opt_state(&blob).unwrap();
+                for (i, g) in grads[7..].iter().enumerate() {
+                    let a = live.step(g, 0.05);
+                    let b = resumed.step(g, 0.05);
+                    assert_eq!(
+                        a.data, b.data,
+                        "{inner:?} {rows}x{cols} diverged {i} steps after resume"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Fira's residual EMA is part of the trajectory: restore must carry
+    /// the limiter's running average, not restart it.
+    #[test]
+    fn fira_residual_ema_survives_save_restore() {
+        let mut cfg = lr_cfg(WrapperKind::Fira, SelectorKind::Sara, 4);
+        cfg.update_period = 3;
+        let mut live =
+            ParamOptimizer::low_rank(12, 20, &cfg, make_selector(cfg.selector, 5, 0));
+        let mut rng = Pcg64::new(23);
+        let grads: Vec<Matrix> =
+            (0..12).map(|_| Matrix::randn(12, 20, 1.0, &mut rng)).collect();
+        for g in &grads[..6] {
+            live.step(g, 0.05);
+        }
+        let blob = live.save_opt_state();
+        let mut resumed =
+            ParamOptimizer::low_rank(12, 20, &cfg, make_selector(cfg.selector, 5, 0));
+        resumed.restore_opt_state(&blob).unwrap();
+        for (i, g) in grads[6..].iter().enumerate() {
+            let a = live.step(g, 0.05);
+            let b = resumed.step(g, 0.05);
+            assert_eq!(a.data, b.data, "fira diverged {i} steps after resume");
+        }
+    }
+
+    /// Full-rank parameters (norms, embeddings, the FullRank baseline)
+    /// carry only the inner state and step clock — same contract.
+    #[test]
+    fn full_rank_optimizer_save_restore_roundtrips() {
+        let cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Sara, 4);
+        let mut live = ParamOptimizer::full(6, 10, &cfg);
+        let mut rng = Pcg64::new(29);
+        let grads: Vec<Matrix> =
+            (0..10).map(|_| Matrix::randn(6, 10, 1.0, &mut rng)).collect();
+        for g in &grads[..5] {
+            live.step(g, 0.05);
+        }
+        let blob = live.save_opt_state();
+        let mut resumed = ParamOptimizer::full(6, 10, &cfg);
+        resumed.restore_opt_state(&blob).unwrap();
+        for (i, g) in grads[5..].iter().enumerate() {
+            let a = live.step(g, 0.05);
+            let b = resumed.step(g, 0.05);
+            assert_eq!(a.data, b.data, "full-rank diverged {i} steps after resume");
+        }
+    }
+
+    /// Corrupt or mismatched blobs must fail cleanly, never install a
+    /// half-restored optimizer silently.
+    #[test]
+    fn restore_rejects_mismatched_variant_truncation_and_trailing_bytes() {
+        let cfg = lr_cfg(WrapperKind::GaLore, SelectorKind::Sara, 4);
+        let mut low =
+            ParamOptimizer::low_rank(12, 20, &cfg, make_selector(cfg.selector, 7, 0));
+        let mut full = ParamOptimizer::full(12, 20, &cfg);
+        let mut rng = Pcg64::new(31);
+        for _ in 0..4 {
+            let g = Matrix::randn(12, 20, 1.0, &mut rng);
+            low.step(&g, 0.05);
+            full.step(&g, 0.05);
+        }
+        let low_blob = low.save_opt_state();
+        let full_blob = full.save_opt_state();
+
+        // variant tag mismatch both ways
+        assert!(low.restore_opt_state(&full_blob).is_err());
+        assert!(full.restore_opt_state(&low_blob).is_err());
+
+        // truncation at every framing boundary-ish offset
+        for cut in [0, 1, 8, low_blob.len() / 2, low_blob.len() - 1] {
+            let mut fresh = ParamOptimizer::low_rank(
+                12,
+                20,
+                &cfg,
+                make_selector(cfg.selector, 7, 0),
+            );
+            assert!(
+                fresh.restore_opt_state(&low_blob[..cut]).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+
+        // trailing garbage is rejected (finish() discipline)
+        let mut padded = low_blob.clone();
+        padded.push(0xAB);
+        let mut fresh =
+            ParamOptimizer::low_rank(12, 20, &cfg, make_selector(cfg.selector, 7, 0));
+        assert!(fresh.restore_opt_state(&padded).is_err());
+
+        // wrong shape: blob from a 12x20 layer into a 20x30 layer
+        let mut wrong =
+            ParamOptimizer::low_rank(20, 30, &cfg, make_selector(cfg.selector, 7, 0));
+        assert!(wrong.restore_opt_state(&low_blob).is_err());
     }
 }

@@ -45,6 +45,8 @@ pub use msgd::Msgd;
 
 use crate::config::{InnerOpt, OptimConfig};
 use crate::linalg::Matrix;
+use crate::util::bytes::ByteReader;
+use anyhow::Result;
 
 /// A stateful inner optimizer over one `rows x cols` gradient stream.
 pub trait OptState: Send {
@@ -86,6 +88,21 @@ pub trait OptState: Send {
 
     /// Bytes of optimizer state held (memory-accounting table).
     fn state_bytes(&self) -> usize;
+
+    /// Serialize the *evolving* state — moments, step counter, 8-bit
+    /// quantization metadata — into `out` (checkpoint v4 inner-state
+    /// blob). Hyperparameters (betas, eps) are deliberately excluded:
+    /// they come from the run config at restore time, so a restored
+    /// state continues the exact trajectory under the same config.
+    fn save_state(&self, out: &mut Vec<u8>);
+
+    /// Restore the evolving state from a blob written by
+    /// [`OptState::save_state`] on an identically-shaped instance.
+    /// Shape mismatches, truncation, and trailing bytes are clean
+    /// errors; on `Err` the state may be partially overwritten and the
+    /// whole optimizer must be discarded (the trainer falls back to a
+    /// cold rebuild).
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()>;
 }
 
 /// Instantiate an inner optimizer state for a `rows x cols` stream.

@@ -7,6 +7,8 @@
 use super::OptState;
 use crate::config::OptimConfig;
 use crate::linalg::Matrix;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::{bail, Result};
 
 pub struct Msgd {
     m: Matrix,
@@ -51,6 +53,23 @@ impl OptState for Msgd {
 
     fn state_bytes(&self) -> usize {
         self.m.data.len() * 4
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        bytes::put_matrix(out, &self.m);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let m = bytes::read_matrix(r)?;
+        if (m.rows, m.cols) != (self.m.rows, self.m.cols) {
+            bail!(
+                "msgd state shape mismatch: checkpoint {}x{}, \
+                 constructed {}x{}",
+                m.rows, m.cols, self.m.rows, self.m.cols
+            );
+        }
+        self.m = m;
+        Ok(())
     }
 }
 

@@ -92,9 +92,17 @@ impl AnomalyGuard {
         StepVerdict::Skip
     }
 
-    /// Current consecutive-skip streak (observability/tests).
+    /// Current consecutive-skip streak (observability/tests, and the
+    /// checkpoint's trainer-state section).
     pub fn consecutive_skips(&self) -> usize {
         self.consecutive
+    }
+
+    /// Reinstall a streak captured by [`AnomalyGuard::consecutive_skips`]
+    /// so a resumed run escalates to rollback at exactly the step the
+    /// uninterrupted run would have.
+    pub fn restore_streak(&mut self, consecutive: usize) {
+        self.consecutive = consecutive;
     }
 }
 

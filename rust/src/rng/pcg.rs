@@ -92,6 +92,21 @@ impl Pcg64 {
             xs.swap(i, j);
         }
     }
+
+    /// The raw `(state, inc)` pair — the generator's complete state, for
+    /// checkpoint serialization. Restoring via [`Pcg64::from_parts`]
+    /// resumes the stream at exactly this position.
+    pub fn state_parts(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a `(state, inc)` pair captured by
+    /// [`Pcg64::state_parts`]. Any pair is a valid generator state (an
+    /// even `inc` only weakens stream independence, and `state_parts`
+    /// never produces one), so this cannot fail.
+    pub fn from_parts(state: u128, inc: u128) -> Self {
+        Self { state, inc }
+    }
 }
 
 #[cfg(test)]

@@ -9,6 +9,8 @@
 use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{qr_thin, Matrix};
 use crate::rng::Pcg64;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::Result;
 
 /// Random-projection selector.
 pub struct GoLore {
@@ -65,6 +67,19 @@ impl Selector for GoLore {
             }
             _ => panic!("install: refresh output from a different selector"),
         }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        let (state, inc) = self.rng.state_parts();
+        bytes::put_u128(out, state);
+        bytes::put_u128(out, inc);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let state = r.u128()?;
+        let inc = r.u128()?;
+        self.rng = Pcg64::from_parts(state, inc);
+        Ok(())
     }
 }
 

@@ -48,6 +48,8 @@ pub use sara::Sara;
 use crate::config::SelectorKind;
 use crate::linalg::Matrix;
 use crate::rng::fold_seed;
+use crate::util::bytes::ByteReader;
+use anyhow::Result;
 use std::time::Instant;
 
 /// A scheduled-but-not-yet-computed projector refresh: self-contained and
@@ -185,6 +187,20 @@ pub trait Selector: Send {
         };
         let out = self.begin_refresh(snap, rank).run();
         self.install(out)
+    }
+
+    /// Serialize the selector's evolving state — RNG stream position plus
+    /// anything refreshes mutate (SARA's last sampled indices, online
+    /// PCA's basis) — into `out` (checkpoint v4 selector blob). Stateless
+    /// strategies keep the default empty blob.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore state written by [`Selector::save_state`] on a selector of
+    /// the same kind and layer, so the next refresh draws exactly the
+    /// randomness the saved run would have drawn. The default (for
+    /// stateless strategies) reads nothing.
+    fn restore_state(&mut self, _r: &mut ByteReader) -> Result<()> {
+        Ok(())
     }
 }
 
@@ -355,6 +371,58 @@ mod tests {
         let p = sel.install(out);
         assert_eq!((p.rows, p.cols), (8, 3));
         assert_orthonormal(&p);
+    }
+
+    /// The checkpoint contract: capturing a selector's state mid-run and
+    /// restoring it into a freshly-constructed selector of the same kind
+    /// must resume the refresh stream exactly — every subsequent projector
+    /// bit-identical to the uninterrupted selector's.
+    #[test]
+    fn save_restore_state_resumes_the_stream_exactly() {
+        for kind in [
+            crate::config::SelectorKind::Dominant,
+            crate::config::SelectorKind::Sara,
+            crate::config::SelectorKind::GoLore,
+            crate::config::SelectorKind::OnlinePca,
+        ] {
+            let mut live = make_selector(kind, 21, 3);
+            for t in 0..3u64 {
+                let g = planted_gradient(
+                    16, 40, &[5.0, 4.0, 3.0, 2.0, 1.0], 0.05, 13 | (t << 32),
+                );
+                live.select(&g, 4);
+            }
+            let mut blob = Vec::new();
+            live.save_state(&mut blob);
+            // fresh selector, same (seed, layer): cold state until restore
+            let mut resumed = make_selector(kind, 21, 3);
+            let mut r = ByteReader::new(&blob);
+            resumed.restore_state(&mut r).unwrap();
+            r.finish().unwrap();
+            for t in 3..7u64 {
+                let g = planted_gradient(
+                    16, 40, &[5.0, 4.0, 3.0, 2.0, 1.0], 0.05, 13 | (t << 32),
+                );
+                let pa = live.select(&g, 4);
+                let pb = resumed.select(&g, 4);
+                assert_eq!(pa.data, pb.data, "{kind:?} refresh {t}");
+            }
+        }
+    }
+
+    /// A truncated selector blob is a clean error, not a panic.
+    #[test]
+    fn truncated_selector_blob_is_a_clean_error() {
+        let mut sara = Sara::new(5);
+        let g = planted_gradient(8, 16, &[2.0, 1.0], 0.1, 1);
+        sara.select(&g, 3);
+        let mut blob = Vec::new();
+        sara.save_state(&mut blob);
+        for cut in [0, 1, blob.len() / 2, blob.len() - 1] {
+            let mut fresh = Sara::new(5);
+            let mut r = ByteReader::new(&blob[..cut]);
+            assert!(fresh.restore_state(&mut r).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

@@ -10,6 +10,8 @@
 use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{qr_thin, Matrix};
 use crate::rng::Pcg64;
+use crate::util::bytes::{self, ByteReader};
+use anyhow::Result;
 
 /// Oja-update online PCA selector (stateful per layer).
 pub struct OnlinePca {
@@ -102,6 +104,34 @@ impl Selector for OnlinePca {
             }
             _ => panic!("install: refresh output from a different selector"),
         }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        let (state, inc) = self.rng.state_parts();
+        bytes::put_u128(out, state);
+        bytes::put_u128(out, inc);
+        bytes::put_f32(out, self.eta);
+        match &self.basis {
+            Some(b) => {
+                bytes::put_u8(out, 1);
+                bytes::put_matrix(out, b);
+            }
+            None => bytes::put_u8(out, 0),
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let state = r.u128()?;
+        let inc = r.u128()?;
+        let eta = r.f32()?;
+        let basis = match r.u8()? {
+            0 => None,
+            _ => Some(bytes::read_matrix(r)?),
+        };
+        self.rng = Pcg64::from_parts(state, inc);
+        self.eta = eta;
+        self.basis = basis;
+        Ok(())
     }
 }
 

@@ -17,6 +17,8 @@
 use super::{JobKind, RefreshJob, RefreshOutput, Selector, UpdateKind};
 use crate::linalg::{left_singular_vectors, Matrix};
 use crate::rng::{sample_weighted_without_replacement, Pcg64};
+use crate::util::bytes::{self, ByteReader};
+use anyhow::Result;
 
 /// Importance-sampling selector with its own RNG stream.
 pub struct Sara {
@@ -105,6 +107,22 @@ impl Selector for Sara {
             }
             _ => panic!("install: refresh output from a different selector"),
         }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        let (state, inc) = self.rng.state_parts();
+        bytes::put_u128(out, state);
+        bytes::put_u128(out, inc);
+        bytes::put_usizes(out, &self.last_indices);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let state = r.u128()?;
+        let inc = r.u128()?;
+        let indices = r.usizes()?;
+        self.rng = Pcg64::from_parts(state, inc);
+        self.last_indices = indices;
+        Ok(())
     }
 }
 

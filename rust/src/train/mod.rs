@@ -57,14 +57,22 @@
 //! [`AnomalyGuard`] (non-finite ⇒ the update is discarded but step/LR/
 //! stream bookkeeping advances; `K` consecutive skips ⇒ automatic rollback
 //! to the newest valid snapshot, at most `max_rollbacks` per run);
-//! periodic checkpoints are crash-consistent v3 snapshots managed by a
-//! [`CheckpointManager`] (`[resilience] ckpt_dir` / `ckpt_every`), with
-//! `--resume` auto-restoring from [`Checkpoint::load_latest_valid`] and
-//! fast-forwarding the data streams so a resumed trajectory is
-//! bit-identical to an uninterrupted one (weights + step + streams are
-//! restored exactly; optimizer/projector state restarts cold — subspace
-//! refreshes are restartable by construction); and background refresh
-//! joins are watchdog-supervised inside [`crate::optim::LowRankState`].
+//! periodic checkpoints are crash-consistent v4 snapshots managed by a
+//! [`CheckpointManager`] (`[resilience] ckpt_dir` / `ckpt_every`): besides
+//! the weights they carry the full optimizer state — inner-optimizer
+//! moments for every inner (Adam, Adam8bit, AdaFactor, AdamMini, MSGD),
+//! the installed projector with its per-layer rank and refresh clock, the
+//! selector's RNG and evolving state, the anomaly guard's skip streak,
+//! and the data-stream cursors. `--resume` auto-restores from
+//! [`Checkpoint::load_latest_valid`] and reinstalls all of it, so a
+//! resumed trajectory is bit-identical to an uninterrupted one for every
+//! inner/selector configuration, not just stateless ones. Legacy v1–v3
+//! snapshots (no optimizer section) still load with the documented *cold
+//! restore*: weights + step + streams exact, moments/projector/selector
+//! RNG re-bootstrapping from the next gradient. Background refresh
+//! joins are watchdog-supervised inside [`crate::optim::LowRankState`];
+//! a due snapshot is deferred past any in-flight refresh, so saved
+//! checkpoints never contain a half-installed projector.
 //! The deterministic fault-injection harness
 //! ([`crate::resilience::inject`], default off) drives every one of these
 //! paths in tests and the tier-1 crash smoke.
@@ -73,7 +81,9 @@ pub mod checkpoint;
 pub mod probe;
 pub mod schedule;
 
-pub use checkpoint::{Checkpoint, CheckpointManager, LatestValid, SaveFault};
+pub use checkpoint::{
+    Checkpoint, CheckpointManager, LatestValid, OptSection, SaveFault,
+};
 pub use probe::{DeltaSpectrumProbe, SubspaceProbe};
 pub use schedule::CosineSchedule;
 
@@ -86,8 +96,9 @@ use crate::resilience::inject::{FaultPlan, RefreshFault};
 use crate::resilience::{AnomalyGuard, ResilienceReport, StepVerdict};
 use crate::runtime::{Engine, Manifest, ParamKind, Tensor};
 use crate::selector::make_selector;
+use crate::util::bytes::{self, ByteReader};
 use crate::util::pool::{SendPtr, WorkerPool};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::OnceLock;
 
 /// Final result of a training run.
@@ -524,26 +535,77 @@ impl Trainer {
         self.restore_snapshot(latest.checkpoint)
     }
 
-    /// Install a snapshot: exact weights + step; the sharded optimizer
-    /// bank is rebuilt cold (projectors re-bootstrap from the next
-    /// gradient — subspace refreshes are restartable by construction) and
-    /// the data streams are recreated and fast-forwarded so the replayed
-    /// trajectory consumes exactly the batches an uninterrupted run would.
+    /// Install a snapshot: exact weights + step, then — for a v4 snapshot
+    /// — the full optimizer state (moments, projector + refresh clock,
+    /// selector RNG), the anomaly guard's skip streak, and the recorded
+    /// data-stream cursors, making the resumed trajectory bit-identical
+    /// to an uninterrupted run for every inner. A legacy (v1–v3) snapshot
+    /// has no optimizer section and takes the documented *cold restore*
+    /// path instead: the sharded optimizer bank is rebuilt cold
+    /// (projectors re-bootstrap from the next gradient — subspace
+    /// refreshes are restartable by construction) and the streams are
+    /// fast-forwarded from the step count alone.
     fn restore_snapshot(&mut self, ck: Checkpoint) -> Result<()> {
         ck.ensure_world(self.cfg.world())?;
         let step = ck.step;
         self.restore_params(ck.params);
+        // cold construction gives the right shapes/selectors/topology; a
+        // v4 snapshot then reinstalls every moment/projector/RNG on top
         self.sharded = build_sharded(&self.engine.manifest, &self.cfg);
-        self.reset_streams(step);
+        match ck.opt_state {
+            Some(opt) => {
+                self.sharded
+                    .restore_opt_state(&opt.per_param)
+                    .context("reinstalling checkpointed optimizer state")?;
+                let mut r = ByteReader::new(&opt.trainer);
+                let streak = r.u64()? as usize;
+                let train_cursor = r.u64()?;
+                let val_cursor = r.u64()?;
+                r.finish().context("trainer-state section")?;
+                self.guard.restore_streak(streak);
+                self.reset_streams_to(train_cursor, val_cursor);
+            }
+            None => {
+                crate::info!(
+                    "train",
+                    "legacy snapshot (no optimizer section): cold restore \
+                     at step {step}"
+                );
+                self.guard.restore_streak(0);
+                self.reset_streams(step);
+            }
+        }
         self.step = step;
         Ok(())
     }
 
-    /// Recreate the train/val loaders exactly as [`Trainer::new`] does and
-    /// fast-forward them to `step`: each train stream skips the `step`
-    /// batches already consumed, the val stream skips one eval's worth of
-    /// batches per completed eval point.
+    /// Per-stream batch cursors implied by `step` under the loop's
+    /// bookkeeping contract: every step — applied *or* skipped — draws
+    /// exactly one batch from each train stream, and every completed
+    /// eval point draws `eval_batches` from the val stream. These are
+    /// what the checkpoint's trainer-state section records, so restore
+    /// fast-forwards to the saved cursors rather than re-deriving them.
+    fn stream_cursors(&self, step: usize) -> (u64, u64) {
+        let evals = match self.cfg.eval_every {
+            0 => 0,
+            every => step / every,
+        };
+        (step as u64, (evals * self.cfg.eval_batches.max(1)) as u64)
+    }
+
+    /// Legacy (cold-restore) stream reset: derive the cursors from the
+    /// step count and fast-forward. v4 restores go through
+    /// [`Trainer::reset_streams_to`] with the recorded cursors instead.
     fn reset_streams(&mut self, step: usize) {
+        let (train, val) = self.stream_cursors(step);
+        self.reset_streams_to(train, val);
+    }
+
+    /// Recreate the train/val loaders exactly as [`Trainer::new`] does
+    /// and fast-forward each train stream by `train_batches` and the val
+    /// stream by `val_batches`, so the replayed trajectory consumes
+    /// exactly the batches an uninterrupted run would.
+    fn reset_streams_to(&mut self, train_batches: u64, val_batches: u64) {
         let man = &self.engine.manifest;
         let profile = CorpusProfile::from_name(&self.cfg.dataset);
         let (batch, seqp1) = (man.tokens_shape[0], man.tokens_shape[1]);
@@ -560,17 +622,27 @@ impl Trainer {
             profile, vocab, seed, 1_000_000, batch, seqp1, 2,
         );
         for loader in &self.loaders {
-            for _ in 0..step {
+            for _ in 0..train_batches {
                 let _ = loader.next_batch();
             }
         }
-        let evals = match self.cfg.eval_every {
-            0 => 0,
-            every => step / every,
-        };
-        for _ in 0..evals * self.cfg.eval_batches.max(1) {
+        for _ in 0..val_batches {
             let _ = self.val_loader.next_batch();
         }
+    }
+
+    /// Trainer-side state for the checkpoint's optimizer section: the
+    /// anomaly guard's consecutive-skip streak and the two data-stream
+    /// cursors (train batches drawn per stream, val batches drawn), so
+    /// rollback replay and `--resume` escalate and draw batches exactly
+    /// as the uninterrupted run would.
+    fn trainer_state_blob(&self) -> Vec<u8> {
+        let (train, val) = self.stream_cursors(self.step);
+        let mut out = Vec::new();
+        bytes::put_u64(&mut out, self.guard.consecutive_skips() as u64);
+        bytes::put_u64(&mut out, train);
+        bytes::put_u64(&mut out, val);
+        out
     }
 
     /// Periodic crash-consistent snapshot. A due save is deferred while
@@ -593,6 +665,10 @@ impl Trainer {
             step: self.step,
             dist_workers: self.cfg.world() as u32,
             params: self.params.clone(),
+            opt_state: Some(OptSection {
+                per_param: self.sharded.save_opt_state(),
+                trainer: self.trainer_state_blob(),
+            }),
         };
         let fault = self
             .fault
@@ -779,8 +855,10 @@ pub fn clip_gradients(clip: f64, grads: &mut [Tensor]) -> f64 {
 
 /// Build the sharded per-parameter optimizer bank for `cfg` — fresh, cold
 /// state. Used at construction and by [`Trainer::restore_snapshot`] when a
-/// rollback/resume reinstalls a snapshot (optimizer state restarts cold;
-/// projectors re-bootstrap from the next gradient).
+/// rollback/resume reinstalls a snapshot: a v4 snapshot reinstalls the
+/// saved moments/projector/selector state on top of this cold bank, a
+/// legacy (v1–v3) snapshot leaves it cold (projectors re-bootstrap from
+/// the next gradient).
 fn build_sharded(man: &Manifest, cfg: &RunConfig) -> ShardedState {
     let mut opts = Vec::with_capacity(man.params.len());
     for (i, info) in man.params.iter().enumerate() {

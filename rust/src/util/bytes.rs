@@ -1,0 +1,263 @@
+//! Little-endian byte codec for checkpoint state blobs.
+//!
+//! The checkpoint v4 optimizer section carries one opaque byte blob per
+//! parameter (plus one for trainer bookkeeping); each layer of the
+//! optimizer stack appends its own state with the `put_*` writers and
+//! parses it back through a bounds-checked [`ByteReader`]. The reader
+//! treats its input as untrusted: every length is validated against the
+//! bytes actually present *before* any allocation happens, so a crafted
+//! or corrupted blob yields a clean `Err`, never an OOM or a panic.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed (u64 count) f32 slice.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Length-prefixed (u64 count) i8 slice.
+pub fn put_i8s(out: &mut Vec<u8>, xs: &[i8]) {
+    put_u64(out, xs.len() as u64);
+    out.extend(xs.iter().map(|&x| x as u8));
+}
+
+/// Length-prefixed (u64 count) u8 slice.
+pub fn put_u8s(out: &mut Vec<u8>, xs: &[u8]) {
+    put_u64(out, xs.len() as u64);
+    out.extend_from_slice(xs);
+}
+
+/// Length-prefixed (u64 count) usize slice (each as u64).
+pub fn put_usizes(out: &mut Vec<u8>, xs: &[usize]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_u64(out, x as u64);
+    }
+}
+
+/// `rows (u32) ‖ cols (u32) ‖ length-prefixed f32 data` — the matrix
+/// framing shared by every optimizer/selector state blob.
+pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    put_f32s(out, &m.data);
+}
+
+/// Parse a matrix written by [`put_matrix`], validating that the data
+/// length matches the claimed dimensions.
+pub fn read_matrix(r: &mut ByteReader) -> Result<Matrix> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let data = r.f32s()?;
+    match rows.checked_mul(cols) {
+        Some(n) if n == data.len() => Ok(Matrix::from_vec(rows, cols, data)),
+        _ => bail!(
+            "matrix blob dims {rows}x{cols} disagree with {} data element(s)",
+            data.len()
+        ),
+    }
+}
+
+/// Cursor over an untrusted byte slice. Every read is bounds-checked;
+/// vector reads validate the encoded length against the remaining bytes
+/// before allocating.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless every byte has been consumed — catches truncated
+    /// writers and trailing garbage alike.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("state blob has {} trailing byte(s)", self.remaining());
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "state blob truncated: want {n} byte(s), have {}",
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A length the blob claims for a following vector, validated so
+    /// `len * elem_bytes` fits in the bytes actually remaining.
+    fn checked_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let need = (n as usize).checked_mul(elem_bytes);
+        match need {
+            Some(need) if need <= self.remaining() => Ok(n as usize),
+            _ => bail!(
+                "state blob claims {n} element(s) of {elem_bytes} byte(s) \
+                 but only {} byte(s) remain",
+                self.remaining()
+            ),
+        }
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.checked_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn i8s(&mut self) -> Result<Vec<i8>> {
+        let n = self.checked_len(1)?;
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.checked_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.checked_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()? as usize);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 3);
+        put_u32(&mut buf, 0xdead_beef);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_u128(&mut buf, (1u128 << 100) | 17);
+        put_f32(&mut buf, -0.25);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 3);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.u128().unwrap(), (1u128 << 100) | 17);
+        assert_eq!(r.f32().unwrap(), -0.25);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn vec_roundtrip_bit_exact() {
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &[1.5, f32::MIN_POSITIVE, -0.0, 3.25e-20]);
+        put_i8s(&mut buf, &[-128, 0, 127]);
+        put_u8s(&mut buf, &[0, 255, 7]);
+        put_usizes(&mut buf, &[0, 42, usize::MAX >> 1]);
+        let mut r = ByteReader::new(&buf);
+        let f = r.f32s().unwrap();
+        assert_eq!(f.len(), 4);
+        assert!(f[2].is_sign_negative() && f[2] == 0.0, "-0.0 preserved");
+        assert_eq!(f[1], f32::MIN_POSITIVE);
+        assert_eq!(r.i8s().unwrap(), vec![-128, 0, 127]);
+        assert_eq!(r.u8s().unwrap(), vec![0, 255, 7]);
+        assert_eq!(r.usizes().unwrap(), vec![0, 42, usize::MAX >> 1]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn matrix_roundtrip_and_dim_mismatch() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, -2.5, 0.0, 4.0, 5.5, -6.0]);
+        let mut buf = Vec::new();
+        put_matrix(&mut buf, &m);
+        let mut r = ByteReader::new(&buf);
+        let back = read_matrix(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!((back.rows, back.cols), (2, 3));
+        assert_eq!(back.data, m.data);
+        // claimed dims that disagree with the data length are an error
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 3);
+        put_u32(&mut buf, 3);
+        put_f32s(&mut buf, &[0.0; 6]);
+        assert!(read_matrix(&mut ByteReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn truncation_and_oversized_lengths_are_clean_errors() {
+        // truncated scalar
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert!(r.u32().is_err());
+        // a length claiming far more elements than bytes present must
+        // error before allocating
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX / 8);
+        let mut r = ByteReader::new(&buf);
+        assert!(r.f32s().is_err());
+        // trailing garbage is caught by finish()
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 1);
+        put_u8(&mut buf, 2);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 1);
+        assert!(r.finish().is_err());
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod alloc_count;
 pub mod bench;
+pub mod bytes;
 pub mod cli;
 pub mod crc32;
 pub mod json;

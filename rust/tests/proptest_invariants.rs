@@ -1021,6 +1021,65 @@ fn prop_corrupted_v3_checkpoint_always_errs_cleanly() {
 }
 
 #[test]
+fn prop_corrupted_v4_checkpoint_always_errs_cleanly() {
+    // same contract as v3, now with an optimizer-state section attached:
+    // the pristine file round-trips the section byte-exactly (legacy v3
+    // files keep loading with `opt_state = None` — covered above), and
+    // any truncation or bit flip anywhere — params, blob framing, blob
+    // payload, trailer — is a clean Err
+    use sara::train::{Checkpoint, OptSection};
+    let dir = proptest_dir("corrupt_v4");
+    let path = dir.join("victim.ckpt");
+    // blob lengths straddle the 64 KiB chunking boundary and include the
+    // empty blob (a stateless MSGD parameter saves a few bytes only)
+    let lens = [0usize, 3, 16 * 1024, 64 * 1024, 64 * 1024 + 1];
+    for seed in 0..CASES / 2 {
+        let mut rng = Pcg64::new(4400 + seed);
+        let (mut ck, _) = random_ckpt_bytes(&mut rng, &path);
+        let per_param: Vec<Vec<u8>> = ck
+            .params
+            .iter()
+            .map(|_| {
+                let len = lens[rng.next_bounded(lens.len() as u64) as usize];
+                (0..len).map(|_| rng.next_bounded(256) as u8).collect()
+            })
+            .collect();
+        let trainer: Vec<u8> =
+            (0..24).map(|_| rng.next_bounded(256) as u8).collect();
+        ck.opt_state = Some(OptSection { per_param, trainer });
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let back = Checkpoint::load(&path).unwrap_or_else(|e| {
+            panic!("seed {seed}: pristine v4 file failed to load: {e:#}")
+        });
+        assert_eq!(back.params, ck.params, "seed {seed}");
+        assert_eq!(back.opt_state, ck.opt_state, "seed {seed}");
+
+        for case in 0..2u64 {
+            let mutated = match case {
+                0 => bytes[..rng.next_bounded(bytes.len() as u64) as usize]
+                    .to_vec(),
+                _ => {
+                    let mut b = bytes.clone();
+                    let i = rng.next_bounded(b.len() as u64) as usize;
+                    b[i] ^= 1 << rng.next_bounded(8);
+                    b
+                }
+            };
+            if mutated == bytes {
+                continue;
+            }
+            std::fs::write(&path, &mutated).unwrap();
+            assert!(
+                Checkpoint::load(&path).is_err(),
+                "seed {seed} case {case}: corrupt v4 file loaded successfully"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_load_latest_valid_survives_corrupt_newest() {
     // corrupt the newest snapshot arbitrarily: load_latest_valid must fall
     // back to the previous good one (and count the skip), never error out

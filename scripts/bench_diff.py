@@ -16,11 +16,19 @@ than the threshold (fraction, default 0.25 = +25%) is flagged with WARN.
 Exit status is 0 unless --strict is given, in which case any WARN makes
 the script exit 1 (opt-in CI gate; the default is advisory because bench
 medians on shared runners are noisy).
+
+--record (with --all) snapshots every discovered BENCH_*.json as its
+*_baseline.json, overwriting any previous baseline — run it once on a
+quiet host (tier1.sh: TIER1_RECORD=1) and commit the results. Without
+--record, targets missing a baseline are counted and summarized so the
+caller can surface an "unrecorded baselines" warning instead of silently
+passing.
 """
 
 import argparse
 import json
 import os
+import shutil
 import sys
 
 
@@ -112,7 +120,14 @@ def main():
                     help="warn when median regresses by more than this fraction")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 if any case regressed past the threshold")
+    ap.add_argument("--record", action="store_true",
+                    help="--all mode: snapshot every discovered BENCH_*.json "
+                         "as its *_baseline.json (overwriting) instead of "
+                         "diffing")
     args = ap.parse_args()
+
+    if args.record and args.all_root is None:
+        ap.error("--record requires --all REPO_ROOT")
 
     if args.all_root is not None:
         if args.current or args.baseline:
@@ -121,16 +136,28 @@ def main():
         if not pairs:
             print(f"no BENCH_*.json files found in {args.all_root}")
             return 0
+        if args.record:
+            for current, _ in pairs:
+                name = os.path.basename(current)
+                baseline = os.path.join(args.all_root, baseline_for(name))
+                shutil.copyfile(current, baseline)
+                print(f"recorded {os.path.basename(baseline)} from {name}")
+            print(f"{len(pairs)} baseline(s) recorded — review and commit them")
+            return 0
         warns = 0
+        unrecorded = 0
         for current, baseline in pairs:
             name = os.path.basename(current)
             if baseline is None:
                 expected = baseline_for(name)
                 print(f"no {expected} committed yet — record one on a quiet host with:")
-                print(f"  cp {name} {expected} && git add {expected}")
+                print(f"  scripts/bench_diff.py --all . --record   # or TIER1_RECORD=1")
+                unrecorded += 1
                 continue
             warns += diff_pair(current, baseline, args.threshold)
             print()
+        if unrecorded:
+            print(f"{unrecorded} bench target(s) have no committed baseline")
     else:
         if not (args.current and args.baseline):
             ap.error("need CURRENT and BASELINE files (or --all REPO_ROOT)")

@@ -95,6 +95,7 @@ fn main() {
         top_k: 0,
         temperature: 1.0,
         stop_token: -1,
+        request_timeout_ms: 0,
         seed: 0,
     };
     let n_requests = 16u64;
@@ -123,6 +124,7 @@ fn main() {
     sched.run_to_completion();
     let report = sched.report(t0.elapsed());
     assert_eq!(report.completed, n_requests as usize);
+    assert_eq!(report.timed_out, 0, "bench runs with the deadline off");
     b.record("serve.e2e", t0.elapsed());
     b.record("serve.ttft_p50", Duration::from_nanos(report.ttft_p50_ns));
     b.record("serve.ttft_p99", Duration::from_nanos(report.ttft_p99_ns));

@@ -140,6 +140,12 @@ pub struct ResilienceConfig {
     /// Resume from the newest valid snapshot in `ckpt_dir` at startup
     /// (torn/corrupt files are skipped, not fatal).
     pub resume: bool,
+    /// Preemption-safe drain trigger: a path checked once per step. When
+    /// the file appears, the trainer finishes the in-flight step, joins
+    /// any pipelined refresh, writes a final snapshot, and exits cleanly.
+    /// `SARA_STOP=<path>` in the environment takes precedence; empty
+    /// (default) disables the check entirely.
+    pub stop_file: String,
 }
 
 impl Default for ResilienceConfig {
@@ -151,6 +157,7 @@ impl Default for ResilienceConfig {
             ckpt_every: 0,
             keep_last: 3,
             resume: false,
+            stop_file: String::new(),
         }
     }
 }
@@ -174,7 +181,7 @@ impl ResilienceConfig {
 /// `SARA_FAULT=` in the environment taking precedence). Default **off**:
 /// an empty spec means no fault code runs anywhere near the hot path.
 /// Spec grammar: comma-separated `kind@arg[:ms]`, e.g.
-/// `"nan_grad@7,panic_refresh@2,slow_refresh@1:50,torn_ckpt@1,crash_ckpt@2"`
+/// `"nan_grad@7,panic_refresh@2,slow_refresh@1:50,torn_ckpt@1,crash_ckpt@2,corrupt_ckpt@3"`
 /// — see `resilience::inject` for the kinds.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct FaultConfig {
@@ -275,6 +282,11 @@ pub struct ServeConfig {
     pub temperature: f32,
     /// Early-stop token id; negative = disabled.
     pub stop_token: i32,
+    /// Per-request deadline in milliseconds, measured from submission.
+    /// A request (queued or in flight) past its deadline finishes with
+    /// `TimedOut` status and frees its slot/KV rows. `0` (default)
+    /// disables the deadline.
+    pub request_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -287,6 +299,7 @@ impl Default for ServeConfig {
             top_k: 0,
             temperature: 1.0,
             stop_token: -1,
+            request_timeout_ms: 0,
         }
     }
 }
@@ -506,6 +519,9 @@ impl RunConfig {
             .get_usize("max-skips", self.resilience.max_consecutive_skips)?;
         self.resilience.max_rollbacks =
             args.get_usize("max-rollbacks", self.resilience.max_rollbacks)?;
+        if let Some(p) = args.get("stop-file") {
+            self.resilience.stop_file = p.to_string();
+        }
         self.resilience.validate()?;
         if let Some(s) = args.get("fault") {
             self.fault.spec = s.to_string();
@@ -527,6 +543,8 @@ impl RunConfig {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--stop-token wants an integer, got '{s}'"))?;
         }
+        self.serve.request_timeout_ms = args
+            .get_u64("request-timeout-ms", self.serve.request_timeout_ms)?;
         Ok(())
     }
 
@@ -625,6 +643,9 @@ impl RunConfig {
         cfg.resilience.max_rollbacks = doc
             .get_usize("resilience", "max_rollbacks")
             .unwrap_or(cfg.resilience.max_rollbacks);
+        if let Some(v) = doc.get_str("resilience", "stop_file") {
+            cfg.resilience.stop_file = v.to_string();
+        }
         cfg.resilience.validate()?;
         if let Some(v) = doc.get_str("fault", "spec") {
             cfg.fault.spec = v.to_string();
@@ -660,6 +681,12 @@ impl RunConfig {
                 )
             })?;
         }
+        cfg.serve.request_timeout_ms = toml_u64(
+            &doc,
+            "serve",
+            "request_timeout_ms",
+            cfg.serve.request_timeout_ms,
+        )?;
         cfg.model_spec = Self::model_spec_from_toml(&doc)?;
         Ok(cfg)
     }
@@ -963,6 +990,7 @@ mod tests {
         assert_eq!(c.resilience.max_consecutive_skips, 3);
         assert_eq!(c.resilience.ckpt_every, 0);
         assert!(!c.resilience.resume);
+        assert!(c.resilience.stop_file.is_empty(), "drain check off by default");
         assert!(c.fault.spec.is_empty());
         assert_eq!(c.optim.refresh_retries, 2);
         assert_eq!(c.optim.refresh_timeout_ms, 0);
@@ -970,7 +998,8 @@ mod tests {
         let args = Args::parse(
             "train --ckpt-dir /tmp/ck --ckpt-every 25 --keep-last 2 --resume \
              --max-skips 5 --max-rollbacks 1 --refresh-timeout-ms 500 \
-             --refresh-retries 4 --fault nan_grad@3 --fault-seed 9"
+             --refresh-retries 4 --fault nan_grad@3 --fault-seed 9 \
+             --stop-file /tmp/ck/STOP"
                 .split_whitespace()
                 .map(|s| s.to_string()),
         );
@@ -982,6 +1011,7 @@ mod tests {
         assert!(c.resilience.resume);
         assert_eq!(c.resilience.max_consecutive_skips, 5);
         assert_eq!(c.resilience.max_rollbacks, 1);
+        assert_eq!(c.resilience.stop_file, "/tmp/ck/STOP");
         assert_eq!(c.optim.refresh_timeout_ms, 500);
         assert_eq!(c.optim.refresh_retries, 4);
         assert_eq!(c.fault.spec, "nan_grad@3");
@@ -1017,6 +1047,7 @@ keep_last = 4
 resume = true
 max_consecutive_skips = 2
 max_rollbacks = 3
+stop_file = "/tmp/sara-ck/STOP"
 
 [optim]
 refresh_timeout_ms = 250
@@ -1035,6 +1066,7 @@ seed = 17
         assert!(c.resilience.resume);
         assert_eq!(c.resilience.max_consecutive_skips, 2);
         assert_eq!(c.resilience.max_rollbacks, 3);
+        assert_eq!(c.resilience.stop_file, "/tmp/sara-ck/STOP");
         assert_eq!(c.optim.refresh_timeout_ms, 250);
         assert_eq!(c.optim.refresh_retries, 1);
         assert_eq!(c.fault.spec, "panic_refresh@1,slow_refresh@2:40");
@@ -1049,7 +1081,8 @@ seed = 17
 
         let args = Args::parse(
             "serve --serve-batch 8 --queue-depth 16 --max-seq-len 128 \
-             --max-new 12 --top-k 4 --temperature 0.7 --stop-token 3"
+             --max-new 12 --top-k 4 --temperature 0.7 --stop-token 3 \
+             --request-timeout-ms 250"
                 .split_whitespace()
                 .map(|s| s.to_string()),
         );
@@ -1062,6 +1095,7 @@ seed = 17
         assert_eq!(c.serve.top_k, 4);
         assert!((c.serve.temperature - 0.7).abs() < 1e-6);
         assert_eq!(c.serve.stop_token, 3);
+        assert_eq!(c.serve.request_timeout_ms, 250);
 
         let bad = Args::parse(
             "serve --stop-token eos".split_whitespace().map(|s| s.to_string()),
@@ -1074,7 +1108,8 @@ seed = 17
         std::fs::write(
             &path,
             "[serve]\nmax_batch = 2\nqueue_depth = 3\nmax_seq_len = 64\n\
-             max_new_tokens = 6\ntop_k = 2\ntemperature = 0.5\nstop_token = 1\n",
+             max_new_tokens = 6\ntop_k = 2\ntemperature = 0.5\nstop_token = 1\n\
+             request_timeout_ms = 900\n",
         )
         .unwrap();
         let c = RunConfig::from_toml_file(path.to_str().unwrap()).unwrap();
@@ -1088,6 +1123,7 @@ seed = 17
                 top_k: 2,
                 temperature: 0.5,
                 stop_token: 1,
+                request_timeout_ms: 900,
             }
         );
     }

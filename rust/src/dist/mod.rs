@@ -35,7 +35,7 @@ pub mod topology;
 
 pub use allreduce::BucketedAllReduce;
 pub use sharded_state::ShardedState;
-pub use topology::{Bucket, BucketPlan, Segment, Topology};
+pub use topology::{Bucket, BucketPlan, RemapPlan, Route, Segment, Topology};
 
 /// Per-run observability for the dist substrate: surfaced as the trainer's
 /// `dist` report row and carried on `TrainResult`.

@@ -191,9 +191,9 @@ impl ShardedState {
     /// The topology itself is *not* serialized: ownership is re-derived
     /// deterministically at restore from the cold-constructed state sizes
     /// (`Topology::new` is a pure function of world size and weights).
-    /// Restoring into a different world size therefore works for the
-    /// state itself; W→W′ *resharding* of a mid-flight run remains a
-    /// named follow-up in ROADMAP.md.
+    /// Because the blobs are filed by parameter index, not by rank, a
+    /// W→W′ resharded restore is just [`ShardedState::import_opt_state`]
+    /// routing each blob to its new LPT owner — no format change.
     pub fn save_opt_state(&self) -> Vec<Vec<u8>> {
         let mut blobs: Vec<Vec<u8>> = vec![Vec::new(); self.opts.len()];
         for rank in 0..self.topo.world() {
@@ -222,6 +222,66 @@ impl ShardedState {
                 self.opts[p]
                     .restore_opt_state(&blobs[p])
                     .with_context(|| format!("parameter {p} (owned by rank {rank})"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Elastic W→W′ restore: reinstall per-parameter blobs that were saved
+    /// by a run at world `from_world` into this state, which was built for
+    /// a (possibly different) world `self.topology().world()`.
+    ///
+    /// The v4 optimizer section is per-param and topology-free, so the
+    /// remap is restore-side routing, not a format conversion: a
+    /// [`RemapPlan`](super::topology::RemapPlan) between the two LPT
+    /// assignments of the same weights decides which old owner each new
+    /// owner pulls from, and every blob is reinstalled **bytewise** —
+    /// inner-optimizer moments, the projector's columns at their actual
+    /// per-layer rank, refresh clocks, and the selector's RNG stream all
+    /// survive the move untouched. Selector streams are keyed by parameter
+    /// index (schedule order), so re-partitioning the shards re-partitions
+    /// the streams with them; nothing is re-seeded.
+    ///
+    /// The walk is destination-shard-major: under the *new* topology each
+    /// rank restores exactly its shard, pulling each blob from the rank
+    /// that owned it at save time — the transfer schedule a multi-process
+    /// port would execute. `from_world == world` degenerates to
+    /// [`ShardedState::restore_opt_state`] exactly. On `Err` the state is
+    /// partial — discard the whole `ShardedState` and rebuild.
+    pub fn import_opt_state(
+        &mut self,
+        blobs: &[Vec<u8>],
+        from_world: usize,
+    ) -> anyhow::Result<()> {
+        if from_world.max(1) == self.topo.world() {
+            return self.restore_opt_state(blobs);
+        }
+        if blobs.len() != self.opts.len() {
+            anyhow::bail!(
+                "optimizer state for {} parameters, model has {}",
+                blobs.len(),
+                self.opts.len()
+            );
+        }
+        let weights: Vec<usize> =
+            self.opts.iter().map(|o| o.state_bytes()).collect();
+        let plan = super::topology::RemapPlan::new(
+            &Topology::new(from_world, &weights),
+            &self.topo,
+        );
+        for rank in 0..self.topo.world() {
+            for &p in self.topo.shard(rank) {
+                let route = plan.route(p);
+                debug_assert_eq!(route.to_rank, rank);
+                self.opts[p].restore_opt_state(&blobs[p]).with_context(|| {
+                    format!(
+                        "parameter {p} (remapped from rank {}/{} to rank {}/{})",
+                        route.from_rank,
+                        plan.from_world(),
+                        rank,
+                        self.topo.world(),
+                    )
+                })?;
             }
         }
         Ok(())
@@ -398,6 +458,58 @@ mod tests {
         // count mismatch is a clean error
         let mut wrong = build();
         assert!(wrong.restore_opt_state(&blobs[..n - 1]).is_err());
+    }
+
+    /// Elastic restore: blobs saved at world W, imported into a state
+    /// built for world W′, land bytewise-identical on their new owners and
+    /// continue the trajectory deterministically.
+    #[test]
+    fn import_opt_state_reshards_bytewise_across_worlds() {
+        use crate::rng::Pcg64;
+        let cfg = lowrank_cfg();
+        let pool = WorkerPool::new(2);
+        let n = 6;
+        let build = |world: usize| {
+            let opts = make_opts(&cfg, n);
+            let weights: Vec<usize> =
+                opts.iter().map(|o| o.state_bytes()).collect();
+            ShardedState::new(opts, Topology::new(world, &weights))
+        };
+        // evolve some real state at W=3
+        let mut live = build(3);
+        let mut rng = Pcg64::new(21);
+        let mut deltas: Vec<Matrix> =
+            (0..n).map(|_| Matrix::zeros(12, 16)).collect();
+        for _ in 0..5 {
+            let mut g: Vec<Tensor> = (0..n)
+                .map(|_| {
+                    let data: Vec<f32> = (0..12 * 16)
+                        .map(|_| rng.next_normal() as f32)
+                        .collect();
+                    Tensor::from_vec(&[12, 16], data)
+                })
+                .collect();
+            live.step_into(&pool, &mut g, 0.05, &mut deltas);
+        }
+        let blobs = live.save_opt_state();
+
+        for to_world in [1usize, 2, 3, 5] {
+            let mut imported = build(to_world);
+            imported.import_opt_state(&blobs, 3).unwrap();
+            // bytewise: re-serializing under the new topology reproduces
+            // every per-param blob exactly
+            let round = imported.save_opt_state();
+            for p in 0..n {
+                assert_eq!(
+                    round[p], blobs[p],
+                    "param {p} not bytewise-preserved at W=3 -> W'={to_world}"
+                );
+            }
+        }
+
+        // count mismatch stays a clean error on the elastic path too
+        let mut wrong = build(2);
+        assert!(wrong.import_opt_state(&blobs[..n - 1], 3).is_err());
     }
 
     /// The ISSUE's acceptance criterion on upload scaling: per-rank upload

@@ -70,6 +70,109 @@ impl Topology {
     }
 }
 
+/// One parameter's routing entry in a [`RemapPlan`]: where its optimizer
+/// state lives under the source assignment and where it must land under
+/// the destination assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    /// Parameter index (the key the v4 checkpoint section is filed by).
+    pub param: usize,
+    /// Owning rank under the source topology.
+    pub from_rank: usize,
+    /// Owning rank under the destination topology.
+    pub to_rank: usize,
+}
+
+/// Deterministic routing of per-parameter optimizer state between two LPT
+/// assignments of the *same* parameter set — the elastic W→W′ restore
+/// plan. Because [`Topology::new`] is a pure function of `(world,
+/// weights)`, both endpoints of a resharded resume derive the identical
+/// plan independently; no rank negotiation, no serialized topology.
+///
+/// The plan is a bijection on parameter indices (each param has exactly
+/// one source owner and one destination owner), so composing
+/// `remap(W→W′)` with `remap(W′→W)` is the identity on the routed bytes —
+/// the invariant `proptest_invariants.rs` pins.
+#[derive(Clone, Debug)]
+pub struct RemapPlan {
+    from_world: usize,
+    to_world: usize,
+    routes: Vec<Route>,
+}
+
+impl RemapPlan {
+    /// Plan between two already-built topologies over the same parameters.
+    pub fn new(from: &Topology, to: &Topology) -> Self {
+        assert_eq!(
+            from.params(),
+            to.params(),
+            "remap between different parameter sets"
+        );
+        let routes = (0..from.params())
+            .map(|p| Route {
+                param: p,
+                from_rank: from.owner_of(p),
+                to_rank: to.owner_of(p),
+            })
+            .collect();
+        Self { from_world: from.world(), to_world: to.world(), routes }
+    }
+
+    /// Plan between the LPT assignments at `from_world` and `to_world`
+    /// over the same per-parameter weights (optimizer-state bytes).
+    pub fn between(from_world: usize, to_world: usize, weights: &[usize]) -> Self {
+        Self::new(
+            &Topology::new(from_world, weights),
+            &Topology::new(to_world, weights),
+        )
+    }
+
+    pub fn from_world(&self) -> usize {
+        self.from_world
+    }
+
+    pub fn to_world(&self) -> usize {
+        self.to_world
+    }
+
+    pub fn params(&self) -> usize {
+        self.routes.len()
+    }
+
+    /// Routing entry for parameter `p`.
+    pub fn route(&self, p: usize) -> Route {
+        self.routes[p]
+    }
+
+    /// All routes, in parameter order.
+    pub fn routes(&self) -> &[Route] {
+        &self.routes
+    }
+
+    /// Routes whose owner actually changes — the blobs a multi-process
+    /// port would put on the wire. Stationary parameters never move.
+    pub fn moves(&self) -> impl Iterator<Item = &Route> {
+        self.routes.iter().filter(|r| r.from_rank != r.to_rank)
+    }
+
+    /// Route a param-indexed blob vector from the source assignment to the
+    /// destination assignment. The walk is destination-shard-major (each
+    /// receiving rank files its shard's blobs in ascending parameter
+    /// order — the deterministic schedule both endpoints derive alone) and
+    /// bytewise-preserving: the output is filed under the same parameter
+    /// index, so applying the reverse plan restores the input exactly.
+    pub fn apply(&self, blobs: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        assert_eq!(blobs.len(), self.routes.len(), "blob/param count mismatch");
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); blobs.len()];
+        for to_rank in 0..self.to_world {
+            for r in self.routes.iter().filter(|r| r.to_rank == to_rank) {
+                out[r.param] = blobs[r.param].clone();
+            }
+        }
+        out
+    }
+}
+
 /// One contiguous slice of one parameter inside a bucket.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Segment {
@@ -185,6 +288,56 @@ mod tests {
         let t = Topology::new(1, &[5, 10, 15]);
         assert_eq!(t.world(), 1);
         assert_eq!(t.shard(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn remap_plan_routes_every_param_to_its_new_lpt_owner() {
+        let weights = [100usize, 1, 900, 50, 50, 300, 2, 2];
+        let from = Topology::new(4, &weights);
+        let to = Topology::new(2, &weights);
+        let plan = RemapPlan::new(&from, &to);
+        assert_eq!(plan.from_world(), 4);
+        assert_eq!(plan.to_world(), 2);
+        assert_eq!(plan.params(), weights.len());
+        for p in 0..weights.len() {
+            let r = plan.route(p);
+            assert_eq!(r.param, p);
+            assert_eq!(r.from_rank, from.owner_of(p));
+            assert_eq!(r.to_rank, to.owner_of(p));
+        }
+        // moves() is exactly the owner-changed subset
+        let moved: Vec<usize> = plan.moves().map(|r| r.param).collect();
+        for p in 0..weights.len() {
+            assert_eq!(
+                moved.contains(&p),
+                from.owner_of(p) != to.owner_of(p),
+                "param {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn remap_plan_same_world_is_stationary() {
+        let weights = [7usize, 7, 7, 9];
+        let plan = RemapPlan::between(3, 3, &weights);
+        assert_eq!(plan.moves().count(), 0);
+        for p in 0..weights.len() {
+            let r = plan.route(p);
+            assert_eq!(r.from_rank, r.to_rank, "param {p}");
+        }
+    }
+
+    #[test]
+    fn remap_apply_round_trips_bytes_exactly() {
+        let weights = [64usize, 8, 512, 64, 1, 128];
+        let blobs: Vec<Vec<u8>> = (0..weights.len())
+            .map(|p| (0..weights[p]).map(|i| (p * 37 + i) as u8).collect())
+            .collect();
+        let fwd = RemapPlan::between(4, 2, &weights);
+        let back = RemapPlan::between(2, 4, &weights);
+        let routed = fwd.apply(&blobs);
+        assert_eq!(routed, blobs, "routing is bytewise-preserving");
+        assert_eq!(back.apply(&routed), blobs, "remap ∘ reverse-remap == id");
     }
 
     #[test]

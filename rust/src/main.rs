@@ -42,7 +42,7 @@ fn usage() -> &'static str {
      \u{20}          [--dataset c4|slimpajama] [--eval-every N] [--config run.toml]\n\
      \u{20}          [--save ckpt.bin]\n\
      \u{20}          [--ckpt-dir DIR] [--ckpt-every N] [--keep-last N] [--resume]\n\
-     \u{20}          [--max-skips K] [--max-rollbacks N]\n\
+     \u{20}          [--max-skips K] [--max-rollbacks N] [--stop-file PATH]\n\
      \u{20}          [--refresh-timeout-ms MS] [--refresh-retries N]\n\
      \u{20}          [--fault SPEC] [--fault-seed S]   (e.g. nan_grad@7,crash_ckpt@1)\n\
      sara exp <table1|table2|table3|table4|fig1|fig2|fig3|fig4|memory|ablation> [--models a,b]\n\
@@ -52,7 +52,8 @@ fn usage() -> &'static str {
      sara serve [--config serve.toml] [--model <name>] [--ckpt ckpt.bin]\n\
      \u{20}          [--requests N] [--prompt-len P] [--serve-batch B] [--queue-depth Q]\n\
      \u{20}          [--max-seq-len S] [--max-new N] [--top-k K] [--temperature T]\n\
-     \u{20}          [--stop-token ID] [--seed S] [--save-ckpt out.bin] [--bench-json out.json]\n\
+     \u{20}          [--stop-token ID] [--request-timeout-ms MS] [--seed S]\n\
+     \u{20}          [--save-ckpt out.bin] [--bench-json out.json]\n\
      \u{20}          (model shape from the config's [model] block, or the artifact manifest;\n\
      \u{20}           weights from --ckpt, or seeded init; SARA_TUNE_CACHE arms per-shape dispatch)\n\
      sara generate --prompt 1,2,3 [--config serve.toml] [--model <name>] [--ckpt ckpt.bin]\n\
@@ -188,9 +189,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     if ck.dist_workers != 1 {
         println!("checkpoint from a {}-worker run", ck.dist_workers);
     }
-    if args.get("dist-workers").is_some() {
+    if args.get("dist-workers").is_some() && ck.opt_state.is_none() {
         // compare against the explicitly pinned value, not world(), which
-        // also maxes in the legacy --workers knob
+        // also maxes in the legacy --workers knob. v4 files (opt_state
+        // present) restore elastically on any world, so a pinned world
+        // only gates the pre-v4 cold-restore path.
         ck.ensure_world(cfg.dist.workers)?;
     }
     let mut trainer = Trainer::new(engine, cfg)?;
@@ -272,6 +275,7 @@ fn build_scheduler(args: &Args, cfg: &RunConfig) -> Result<sara::serve::Schedule
         top_k: cfg.serve.top_k,
         temperature: cfg.serve.temperature,
         stop_token: cfg.serve.stop_token,
+        request_timeout_ms: cfg.serve.request_timeout_ms,
         seed: cfg.seed,
     };
     println!(
@@ -330,6 +334,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("shed: {}", sched.shed());
+    println!("timed-out: {}", sched.timed_out());
     let r = sched.report(elapsed);
     println!(
         "served {} requests, {} tokens in {:.3}s | {:.1} tok/s | \
@@ -351,6 +356,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         b.record("serve.token_p50", Duration::from_nanos(r.token_p50_ns));
         b.record("serve.token_p99", Duration::from_nanos(r.token_p99_ns));
         b.record("serve.e2e", elapsed);
+        // counters ride along as nanosecond-valued entries so the shed/
+        // timeout story lands in the same machine-readable trajectory
+        b.record("serve.shed", Duration::from_nanos(r.shed as u64));
+        b.record("serve.timed_out", Duration::from_nanos(r.timed_out as u64));
         b.write_json("serve", path)?;
         println!("serve metrics written to {path}");
     }

@@ -13,6 +13,7 @@
 //! | wedged job      | `slow_refresh@N:MS`| same, sleeps `MS` ms before running  |
 //! | torn snapshot   | `torn_ckpt@N`     | the `N`-th periodic checkpoint save   |
 //! | crash mid-write | `crash_ckpt@N`    | same, aborts the process mid-temp-file|
+//! | bit rot         | `corrupt_ckpt@N`  | same, flips one seeded byte *after* a successful write |
 //!
 //! Everything is deterministic: indices are fixed at parse time, each
 //! fault fires exactly once (one-shot arming), and the `nan_grad` element
@@ -44,6 +45,10 @@ enum Fault {
     /// Abort the process midway through the `save`-th periodic
     /// checkpoint's temp-file write (deterministic `kill -9` stand-in).
     CrashCkpt { save: usize },
+    /// Flip one seeded byte of the `save`-th periodic checkpoint *after*
+    /// its atomic write completed — post-rename bit rot the CRC layer
+    /// must catch at the next load (`load_latest_valid` fallback path).
+    CorruptCkpt { save: usize },
 }
 
 /// What the refresh launch path should do to a job (see
@@ -98,9 +103,11 @@ impl FaultPlan {
                 }
                 ("torn_ckpt", None) => Fault::TornCkpt { save: idx },
                 ("crash_ckpt", None) => Fault::CrashCkpt { save: idx },
+                ("corrupt_ckpt", None) => Fault::CorruptCkpt { save: idx },
                 _ => bail!(
                     "unknown fault '{part}' (nan_grad@K | panic_refresh@N | \
-                     slow_refresh@N:MS | torn_ckpt@N | crash_ckpt@N)"
+                     slow_refresh@N:MS | torn_ckpt@N | crash_ckpt@N | \
+                     corrupt_ckpt@N)"
                 ),
             };
             faults.push(fault);
@@ -169,9 +176,13 @@ impl FaultPlan {
         match self.take(|f| {
             matches!(f, Fault::TornCkpt { save: s } if *s == save)
                 || matches!(f, Fault::CrashCkpt { save: s } if *s == save)
+                || matches!(f, Fault::CorruptCkpt { save: s } if *s == save)
         })? {
             Fault::TornCkpt { .. } => Some(SaveFault::TornFinal),
             Fault::CrashCkpt { .. } => Some(SaveFault::CrashMidWrite),
+            Fault::CorruptCkpt { save } => Some(SaveFault::CorruptFinal {
+                seed: fold_seed(self.seed, save as u64),
+            }),
             _ => unreachable!(),
         }
     }
@@ -204,11 +215,12 @@ mod tests {
     #[test]
     fn parses_the_full_grammar() {
         let plan = FaultPlan::parse(
-            "nan_grad@7, panic_refresh@2,slow_refresh@1:50,torn_ckpt@1,crash_ckpt@2",
+            "nan_grad@7, panic_refresh@2,slow_refresh@1:50,torn_ckpt@1,\
+             crash_ckpt@2,corrupt_ckpt@3",
             5,
         )
         .unwrap();
-        assert_eq!(plan.remaining(), 5);
+        assert_eq!(plan.remaining(), 6);
         assert!(FaultPlan::parse("", 0).unwrap().is_empty());
     }
 
@@ -261,8 +273,9 @@ mod tests {
     #[test]
     fn refresh_and_ckpt_faults_match_their_indices_once() {
         let mut p = FaultPlan::parse(
-            "panic_refresh@1,slow_refresh@3:25,torn_ckpt@0,crash_ckpt@2",
-            0,
+            "panic_refresh@1,slow_refresh@3:25,torn_ckpt@0,crash_ckpt@2,\
+             corrupt_ckpt@4",
+            9,
         )
         .unwrap();
         assert_eq!(p.take_refresh_fault(0), None);
@@ -275,6 +288,12 @@ mod tests {
         assert_eq!(p.take_ckpt_fault(0), Some(SaveFault::TornFinal));
         assert_eq!(p.take_ckpt_fault(1), None);
         assert_eq!(p.take_ckpt_fault(2), Some(SaveFault::CrashMidWrite));
+        // corrupt_ckpt carries a per-save deterministic byte-flip seed
+        assert_eq!(
+            p.take_ckpt_fault(4),
+            Some(SaveFault::CorruptFinal { seed: fold_seed(9, 4) })
+        );
+        assert_eq!(p.take_ckpt_fault(4), None, "one-shot");
         assert_eq!(p.remaining(), 0);
     }
 

@@ -121,6 +121,11 @@ pub struct ResilienceReport {
     pub checkpoints_saved: u64,
     /// Torn/corrupt snapshots skipped while resuming or rolling back.
     pub checkpoints_skipped: u64,
+    /// The run exited early through the preemption-safe drain (stop file
+    /// observed; in-flight step finished, refreshes joined, final snapshot
+    /// written). A drained run is still *clean* — it can resume elastically
+    /// on any world size.
+    pub drained: bool,
 }
 
 impl ResilienceReport {
@@ -136,12 +141,13 @@ impl ResilienceReport {
     pub fn row(&self) -> String {
         format!(
             "resilience: skipped {}  rollbacks {}  refresh fallbacks {}  \
-             ckpts saved {}  ckpts skipped {}",
+             ckpts saved {}  ckpts skipped {}{}",
             self.skipped_steps,
             self.rollbacks,
             self.refresh_fallbacks,
             self.checkpoints_saved,
-            self.checkpoints_skipped
+            self.checkpoints_skipped,
+            if self.drained { "  drained" } else { "" }
         )
     }
 }
@@ -196,5 +202,9 @@ mod tests {
         // saved checkpoints alone don't make a run unhealthy
         let r = ResilienceReport { checkpoints_saved: 5, ..Default::default() };
         assert!(r.is_clean());
+        // a drained run is clean too, and the row says so
+        let r = ResilienceReport { drained: true, ..Default::default() };
+        assert!(r.is_clean());
+        assert!(r.row().ends_with("drained"), "{}", r.row());
     }
 }

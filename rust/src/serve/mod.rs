@@ -38,6 +38,10 @@
 //! (counted, reported) and drops the request — no panic, no unbounded
 //! queue, no slowdown for admitted work. Invalid prompts (empty, too
 //! long for the horizon, out-of-vocab) are `Err` — caller bugs, not load.
+//! With `request_timeout_ms > 0`, a request (queued or running) past its
+//! per-request deadline finishes with [`FinishReason::TimedOut`] at the
+//! next tick and frees its slot/KV rows — stragglers cannot pin capacity
+//! forever. Timeouts are counted alongside shed in the report.
 //!
 //! **Determinism guarantee.** With a fixed model, configuration, and
 //! seed, each request's output tokens are a function of (prompt, request
@@ -53,7 +57,10 @@
 //!
 //! Wall-clock metrics (TTFT, per-token latency) are measured, not
 //! modeled, and are of course **not** deterministic — the guarantee
-//! covers token streams, finish reasons, and shed counts.
+//! covers token streams, finish reasons, and shed counts. A nonzero
+//! `request_timeout_ms` makes *which* requests finish wall-clock-
+//! dependent too; the default (`0`, disabled) keeps every determinism
+//! pin intact.
 
 pub mod engine;
 pub mod kernels;

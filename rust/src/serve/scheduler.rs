@@ -50,6 +50,13 @@ pub struct ServeOpts {
     pub temperature: f32,
     /// Token id that ends a generation early; negative = disabled.
     pub stop_token: i32,
+    /// Per-request deadline in milliseconds, measured from submission.
+    /// Queued or running requests past it finish with
+    /// [`FinishReason::TimedOut`] and free their slot/KV rows at the next
+    /// tick. `0` (default) disables the deadline; note that a nonzero
+    /// deadline makes *which* requests finish wall-clock-dependent (token
+    /// streams themselves stay seeded and deterministic).
+    pub request_timeout_ms: u64,
     /// Base seed; request `id` gets stream `fold_seed(seed, id)`.
     pub seed: u64,
 }
@@ -64,6 +71,7 @@ impl Default for ServeOpts {
             top_k: 0,
             temperature: 1.0,
             stop_token: -1,
+            request_timeout_ms: 0,
             seed: 0,
         }
     }
@@ -101,6 +109,9 @@ pub enum FinishReason {
     Stop,
     /// Hit `max_new_tokens`.
     Length,
+    /// Exceeded `request_timeout_ms` (queued or mid-generation); any
+    /// tokens sampled before the deadline are kept in the completion.
+    TimedOut,
 }
 
 impl std::fmt::Display for FinishReason {
@@ -108,6 +119,7 @@ impl std::fmt::Display for FinishReason {
         f.write_str(match self {
             FinishReason::Stop => "stop",
             FinishReason::Length => "length",
+            FinishReason::TimedOut => "timeout",
         })
     }
 }
@@ -138,8 +150,11 @@ pub struct Completion {
 /// Aggregate load metrics over the completions (see [`Scheduler::report`]).
 #[derive(Debug)]
 pub struct ServeReport {
+    /// All completions, timed-out ones included.
     pub completed: usize,
     pub shed: usize,
+    /// Completions that ended with [`FinishReason::TimedOut`].
+    pub timed_out: usize,
     pub total_tokens: usize,
     pub tokens_per_sec: f64,
     pub ttft_p50_ns: u64,
@@ -164,6 +179,8 @@ struct Slot {
     rng: Pcg64,
     ttft_ns: u64,
     token_ns: Vec<u64>,
+    /// Submission time — the deadline anchor (queue wait counts).
+    t_submit: Instant,
 }
 
 /// The continuous-batching scheduler (single-threaded by design — see
@@ -177,6 +194,7 @@ pub struct Scheduler {
     kvs: Vec<SeqKv>,
     next_id: u64,
     shed: usize,
+    timed_out: usize,
     completions: Vec<Completion>,
     // reused per-tick scratch (part of the zero-allocation contract)
     active: Vec<(usize, i32)>,
@@ -205,6 +223,7 @@ impl Scheduler {
             kvs,
             next_id: 0,
             shed: 0,
+            timed_out: 0,
             completions: Vec::new(),
             active: Vec::with_capacity(opts.max_batch),
             prefill_logits: vec![0.0; spec.vocab],
@@ -226,6 +245,11 @@ impl Scheduler {
     /// Requests shed by backpressure so far.
     pub fn shed(&self) -> usize {
         self.shed
+    }
+
+    /// Requests that finished by exceeding `request_timeout_ms` so far.
+    pub fn timed_out(&self) -> usize {
+        self.timed_out
     }
 
     pub fn completions(&self) -> &[Completion] {
@@ -266,9 +290,48 @@ impl Scheduler {
         Ok(Submit::Queued(id))
     }
 
-    /// One scheduler tick (admission + one batched decode step). Returns
-    /// `true` while there is still work (running or queued).
+    /// Expire queued and running requests past the per-request deadline:
+    /// each finishes with [`FinishReason::TimedOut`] and frees its queue
+    /// entry or slot (the KV rows are reclaimed by the next admission's
+    /// `reset`). No-op (and allocation-free) when the deadline is off, so
+    /// the steady-state zero-allocation contract is unchanged.
+    fn expire(&mut self) {
+        if self.opts.request_timeout_ms == 0 {
+            return;
+        }
+        let deadline = std::time::Duration::from_millis(self.opts.request_timeout_ms);
+        let completions = &mut self.completions;
+        let timed_out = &mut self.timed_out;
+        self.queue.retain(|req| {
+            let waited = req.t_submit.elapsed();
+            if waited < deadline {
+                return true;
+            }
+            *timed_out += 1;
+            completions.push(Completion {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::TimedOut,
+                // never prefilled: the wait itself is the latency record
+                ttft_ns: waited.as_nanos() as u64,
+                token_ns: Vec::new(),
+            });
+            false
+        });
+        for slot in &mut self.slots {
+            if slot.as_ref().is_some_and(|s| s.t_submit.elapsed() >= deadline) {
+                self.timed_out += 1;
+                Self::finish(slot, &mut self.completions, FinishReason::TimedOut);
+            }
+        }
+    }
+
+    /// One scheduler tick (deadline expiry + admission + one batched
+    /// decode step). Returns `true` while there is still work (running or
+    /// queued).
     pub fn step(&mut self) -> bool {
+        self.expire();
         self.admit();
         self.active.clear();
         for (i, s) in self.slots.iter().enumerate() {
@@ -355,6 +418,7 @@ impl Scheduler {
                 rng,
                 ttft_ns,
                 token_ns: Vec::with_capacity(self.opts.max_new_tokens),
+                t_submit: req.t_submit,
             };
             if self.opts.max_new_tokens == 1 {
                 self.slots[free] = Some(slot);
@@ -394,6 +458,7 @@ impl Scheduler {
         ServeReport {
             completed: self.completions.len(),
             shed: self.shed,
+            timed_out: self.timed_out,
             total_tokens,
             tokens_per_sec: if secs > 0.0 { total_tokens as f64 / secs } else { 0.0 },
             ttft_p50_ns: super::percentile(&ttfts, 50.0),
@@ -558,6 +623,54 @@ mod tests {
         );
         s.run_to_completion();
         assert_eq!(s.completions().len(), 2);
+    }
+
+    #[test]
+    fn request_timeout_reaps_queued_and_running_requests() {
+        // one slot, so the second submit waits in the queue; an expired
+        // deadline must reap both — the runner with its partial tokens,
+        // the queued one with none — and free the slot for new work
+        let o = ServeOpts {
+            max_batch: 1,
+            // generous: long enough that the post-reap request below
+            // finishes comfortably, short enough that one sleep expires it
+            request_timeout_ms: 200,
+            max_new_tokens: 32,
+            max_seq_len: 64,
+            ..ServeOpts::default()
+        };
+        let mut s = tiny_sched(o);
+        assert!(matches!(s.try_submit(&[1, 2, 3]).unwrap(), Submit::Queued(_)));
+        assert!(matches!(s.try_submit(&[4, 5]).unwrap(), Submit::Queued(_)));
+        s.step(); // admits request 0, request 1 stays queued
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        s.step(); // both are past the deadline now
+        assert_eq!(s.timed_out(), 2);
+        assert_eq!(s.in_flight(), 0, "slot and queue entry must be freed");
+        let mut got: Vec<_> =
+            s.completions().iter().map(|c| (c.id, c.tokens.len(), c.finish)).collect();
+        got.sort_by_key(|c| c.0);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].2, FinishReason::TimedOut);
+        assert_eq!(got[1].2, FinishReason::TimedOut);
+        assert!(got[0].1 >= 1, "running request keeps its partial tokens");
+        assert_eq!(got[1].1, 0, "queued request never generated");
+        // the freed slot admits and completes fresh work normally
+        assert!(matches!(s.try_submit(&[7]).unwrap(), Submit::Queued(_)));
+        s.run_to_completion();
+        assert_eq!(s.completions().len(), 3);
+        let r = s.report(std::time::Duration::from_millis(1));
+        assert_eq!((r.completed, r.timed_out, r.shed), (3, 2, 0));
+    }
+
+    #[test]
+    fn zero_timeout_never_times_out() {
+        let mut s = tiny_sched(opts());
+        s.try_submit(&[1, 2]).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        s.run_to_completion();
+        assert_eq!(s.timed_out(), 0);
+        assert!(s.completions().iter().all(|c| c.finish == FinishReason::Length));
     }
 
     #[test]

@@ -68,6 +68,30 @@
 //! restore* — weights and step resume, the optimizer bank/selector RNG
 //! rebuild from scratch — which reproduces pre-v4 behavior.
 //!
+//! ## Elastic restore (W→W′)
+//!
+//! A v4 snapshot restores onto **any** world size, not just the producing
+//! one, because the optimizer section is per-param and topology-free:
+//!
+//! * **Preserved bytewise** across a W→W′ restore: model weights and
+//!   step, every parameter's inner-optimizer moments, the installed
+//!   projector `P` at its actual per-layer rank, refresh clocks, the
+//!   selector's RNG + evolving state (streams are keyed by parameter
+//!   index, so resharding re-partitions them in schedule order without
+//!   re-seeding), the anomaly-guard streak, and the val-stream cursor.
+//! * **Re-derived, not restored**: the ZeRO-1 ownership topology and the
+//!   bucket plan (pure functions of `(W′, state sizes)` — see
+//!   `dist::topology::RemapPlan` for the routing), worker-pool scratch,
+//!   and derived caches. The W train-stream cursors re-partition onto the
+//!   W′ streams (`dist_workers` in the header records the producing W),
+//!   so a W→W′ resume is *deterministic* but follows a different gradient
+//!   trajectory than the W run; only W→W resumes are bit-identical to the
+//!   uninterrupted oracle.
+//! * **v1–v3 files** carry no optimizer section, so there is nothing to
+//!   remap: [`Checkpoint::ensure_world`] keeps refusing a world mismatch
+//!   for them, and the escape hatch remains the cold restore at the
+//!   producing world.
+//!
 //! Headers are treated as untrusted on *every* version: shape products use
 //! checked arithmetic, the total payload is capped, blob lengths are
 //! validated before allocation, and per-tensor preallocation is bounded,
@@ -121,6 +145,13 @@ pub enum SaveFault {
     /// torn write on a filesystem without atomic-rename semantics. The
     /// call reports success; detection is the loader's job.
     TornFinal,
+    /// Complete the atomic write *successfully*, then flip one
+    /// seed-selected byte of the final file in place — post-rename bit
+    /// rot. The call reports success; every byte of a v3/v4 file is
+    /// covered by the magic check, a CRC, or the trailer compare, so the
+    /// loader rejects the file and `load_latest_valid` falls back to the
+    /// previous good snapshot.
+    CorruptFinal { seed: u64 },
 }
 
 /// The v4 optimizer-state section: opaque per-parameter blobs (from
@@ -161,12 +192,20 @@ impl Checkpoint {
     }
 
     /// Fail unless this checkpoint was produced by a run with the given
-    /// dist world size — sharded runs must restore onto the same topology.
+    /// dist world size. Only pre-v4 files need this: a v4 snapshot's
+    /// optimizer section is per-param and topology-free, so the trainer
+    /// reshards it elastically onto any world (see the module doc's
+    /// elastic-restore contract) and never calls this. v1–v3 files carry
+    /// no optimizer state to remap, so they must cold-restore onto the
+    /// producing topology.
     pub fn ensure_world(&self, world: usize) -> Result<()> {
         if self.dist_workers as usize != world.max(1) {
             bail!(
                 "checkpoint was written by a {}-worker run; this run has \
-                 dist world {} (pass --dist-workers {} to match)",
+                 dist world {} (pre-v4 snapshots have no optimizer state \
+                 to reshard — pass --dist-workers {} to cold-restore on \
+                 the producing world, or re-snapshot with format v4, \
+                 which resumes elastically on any world)",
                 self.dist_workers,
                 world.max(1),
                 self.dist_workers
@@ -261,7 +300,7 @@ impl Checkpoint {
                 let _ = f.sync_all();
                 std::process::abort();
             }
-            None => {}
+            Some(SaveFault::CorruptFinal { .. }) | None => {}
         }
         let tmp = tmp_path(path);
         {
@@ -280,6 +319,17 @@ impl Checkpoint {
                     let _ = d.sync_all();
                 }
             }
+        }
+        if let Some(SaveFault::CorruptFinal { seed }) = fault {
+            // the write above succeeded end-to-end; now rot exactly one
+            // seed-selected bit of the durable file
+            let mut rotted = std::fs::read(path)?;
+            let idx = (seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 17)
+                as usize
+                % rotted.len();
+            rotted[idx] ^= 1 << (seed % 8);
+            std::fs::write(path, &rotted)
+                .with_context(|| format!("corrupt {path:?}"))?;
         }
         Ok(())
     }
@@ -760,6 +810,10 @@ mod tests {
         let err = ck.ensure_world(2).unwrap_err().to_string();
         assert!(err.contains("4-worker"), "{err}");
         assert!(err.contains("--dist-workers 4"), "{err}");
+        // the refusal must point at both escape hatches: the v4 elastic
+        // path and the cold restore at the producing world
+        assert!(err.contains("elastically"), "{err}");
+        assert!(err.contains("cold-restore"), "{err}");
         // restoring a sharded checkpoint into a default run errors too
         assert!(ck.ensure_world(1).is_err());
     }
@@ -838,6 +892,37 @@ mod tests {
         ck.save_with_fault(&p, Some(SaveFault::TornFinal)).unwrap();
         assert!(p.exists());
         assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn corrupt_final_fault_is_detected_and_falls_back() {
+        // the write itself succeeds (no .tmp left, file exists), but the
+        // seeded bit flip makes the loader reject it — for any seed
+        let ck = Checkpoint::new(12, big_params());
+        for seed in [0u64, 1, 7, 12345, u64::MAX] {
+            let p = tmp(&format!("corrupt_{seed}.ckpt"));
+            ck.save_with_fault(&p, Some(SaveFault::CorruptFinal { seed }))
+                .unwrap();
+            assert!(p.exists());
+            assert!(!tmp_path(&p).exists());
+            assert!(
+                Checkpoint::load(&p).is_err(),
+                "seed {seed}: corrupted snapshot loaded cleanly"
+            );
+        }
+        // and load_latest_valid walks past the rotted newest snapshot
+        let dir = tmp_dir("corrupt_fallback");
+        let mgr = CheckpointManager::new(&dir, 10);
+        let small = vec![Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0])];
+        mgr.save(&Checkpoint::new(10, small.clone()), None).unwrap();
+        mgr.save(
+            &Checkpoint::new(20, small),
+            Some(SaveFault::CorruptFinal { seed: 3 }),
+        )
+        .unwrap();
+        let got = Checkpoint::load_latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(got.checkpoint.step, 10);
+        assert_eq!(got.skipped, 1);
     }
 
     #[test]

@@ -76,6 +76,35 @@
 //! The deterministic fault-injection harness
 //! ([`crate::resilience::inject`], default off) drives every one of these
 //! paths in tests and the tier-1 crash smoke.
+//!
+//! ## Elastic recovery (W→W′) and preemption-safe drain
+//!
+//! Recovery is *elastic*: a v4 snapshot produced at world W restores onto
+//! any world W′ — `--resume`, the `load_latest_valid` fallback, and
+//! mid-run rollback all route the per-param optimizer blobs to their new
+//! LPT owners via [`crate::dist::ShardedState::import_opt_state`] (a
+//! [`crate::dist::RemapPlan`] both endpoints derive independently).
+//! Preserved **bytewise** across the reshard: inner-optimizer moments,
+//! the installed projector at its actual per-layer rank, refresh clocks,
+//! and the selector RNG streams (keyed by parameter index, so they
+//! re-partition in schedule order without re-seeding). Re-derived: the
+//! ownership topology, bucket plan, and the W′ data streams — each
+//! fast-forwarded by the recorded cursor — so a W→W′ resume is
+//! deterministic (byte-reproducible across repeated resumes) but follows
+//! a different gradient trajectory than the W run; only W→W resumes are
+//! bit-identical to the uninterrupted oracle. v1–v3 snapshots have no
+//! optimizer section to remap and keep the world-mismatch refusal plus
+//! the cold-restore escape hatch.
+//!
+//! The drain makes elastic resume reachable under preemption: when the
+//! stop file (`SARA_STOP=` env, or `[resilience] stop_file` /
+//! `--stop-file`) exists — checked once per completed step — the loop
+//! finishes the in-flight step, joins any pipelined refresh (taking the
+//! few extra steps an install needs, so the snapshot invariant "no
+//! refresh pending" holds even on the way out), writes a final v4
+//! snapshot, and returns cleanly with `drained` set in the
+//! [`ResilienceReport`] — the process exits 0 and the next allocation
+//! resumes on whatever world it has.
 
 pub mod checkpoint;
 pub mod probe;
@@ -184,6 +213,13 @@ pub struct Trainer {
     /// A periodic snapshot is due but was deferred past an in-flight
     /// background refresh; caught up on the next step.
     ckpt_due: bool,
+    /// Step of the most recent successful snapshot save (drain uses it to
+    /// avoid writing the same step's snapshot twice).
+    last_ckpt_step: Option<usize>,
+    /// The stop file was observed: finish cleanly and exit (preemption-
+    /// safe drain). Latched so a stop file deleted mid-drain cannot
+    /// un-drain the run.
+    draining: bool,
     /// Rollbacks performed this run (bounded by `max_rollbacks`).
     rollbacks_done: usize,
 }
@@ -300,6 +336,8 @@ impl Trainer {
             refresh_launches: 0,
             ckpt_saves: 0,
             ckpt_due: false,
+            last_ckpt_step: None,
+            draining: false,
             rollbacks_done: 0,
         })
     }
@@ -539,23 +577,48 @@ impl Trainer {
     /// — the full optimizer state (moments, projector + refresh clock,
     /// selector RNG), the anomaly guard's skip streak, and the recorded
     /// data-stream cursors, making the resumed trajectory bit-identical
-    /// to an uninterrupted run for every inner. A legacy (v1–v3) snapshot
-    /// has no optimizer section and takes the documented *cold restore*
-    /// path instead: the sharded optimizer bank is rebuilt cold
-    /// (projectors re-bootstrap from the next gradient — subspace
-    /// refreshes are restartable by construction) and the streams are
-    /// fast-forwarded from the step count alone.
+    /// to an uninterrupted run for every inner.
+    ///
+    /// **Elastic restore**: a v4 snapshot restores onto *any* world size.
+    /// When the producing world W differs from this run's W′, the
+    /// per-param blobs are routed to their new LPT owners through
+    /// [`ShardedState::import_opt_state`] — bytewise-preserving, so the
+    /// remapped logical state is bit-identical to the producing state.
+    /// The recorded train-stream cursor fast-forwards each of the W′
+    /// fresh streams, so the W→W′ continuation is deterministic (byte-
+    /// reproducible across repeated resumes) but follows a different
+    /// gradient trajectory than the W run; only W→W resumes reproduce the
+    /// uninterrupted oracle bit-for-bit.
+    ///
+    /// A legacy (v1–v3) snapshot has no optimizer section to remap: the
+    /// world refusal stays ([`Checkpoint::ensure_world`]) and the
+    /// documented *cold restore* path runs instead — the sharded
+    /// optimizer bank is rebuilt cold (projectors re-bootstrap from the
+    /// next gradient; subspace refreshes are restartable by construction)
+    /// and the streams are fast-forwarded from the step count alone.
     fn restore_snapshot(&mut self, ck: Checkpoint) -> Result<()> {
-        ck.ensure_world(self.cfg.world())?;
+        if ck.opt_state.is_none() {
+            ck.ensure_world(self.cfg.world())?;
+        }
         let step = ck.step;
+        let from_world = (ck.dist_workers as usize).max(1);
         self.restore_params(ck.params);
         // cold construction gives the right shapes/selectors/topology; a
         // v4 snapshot then reinstalls every moment/projector/RNG on top
         self.sharded = build_sharded(&self.engine.manifest, &self.cfg);
         match ck.opt_state {
             Some(opt) => {
+                if from_world != self.cfg.world() {
+                    crate::info!(
+                        "train",
+                        "elastic restore: resharding optimizer state from \
+                         world {} onto world {} at step {step}",
+                        from_world,
+                        self.cfg.world()
+                    );
+                }
                 self.sharded
-                    .restore_opt_state(&opt.per_param)
+                    .import_opt_state(&opt.per_param, from_world)
                     .context("reinstalling checkpointed optimizer state")?;
                 let mut r = ByteReader::new(&opt.trainer);
                 let streak = r.u64()? as usize;
@@ -678,8 +741,65 @@ impl Trainer {
         let mgr = self.ckpt_mgr.as_ref().expect("checked above");
         let path = mgr.save(&ck, fault)?;
         self.report.checkpoints_saved += 1;
+        self.last_ckpt_step = Some(self.step);
         crate::info!("train", "checkpoint: step {} -> {:?}", self.step, path);
         Ok(())
+    }
+
+    /// Effective stop-file path: the `SARA_STOP` environment variable wins
+    /// over `[resilience] stop_file`; empty on both means the drain is
+    /// disabled (the default — zero per-step overhead beyond one env read).
+    fn stop_file_path(&self) -> Option<std::path::PathBuf> {
+        match std::env::var("SARA_STOP") {
+            Ok(p) if !p.trim().is_empty() => Some(p.into()),
+            _ => {
+                let f = &self.cfg.resilience.stop_file;
+                (!f.trim().is_empty()).then(|| f.into())
+            }
+        }
+    }
+
+    /// Preemption check, once per completed step: latch `draining` the
+    /// first time the stop file exists. Latched so deleting the file
+    /// mid-drain cannot un-drain the run.
+    fn observe_stop_file(&mut self) {
+        if self.draining {
+            return;
+        }
+        if let Some(path) = self.stop_file_path() {
+            if path.exists() {
+                crate::info!(
+                    "train",
+                    "stop file {path:?} observed at step {} — draining \
+                     (finish step, join refreshes, final snapshot)",
+                    self.step
+                );
+                self.draining = true;
+            }
+        }
+    }
+
+    /// Try to complete the drain after the in-flight step finished:
+    /// write a final snapshot (unless this step already has one) and
+    /// report done. A scheduled or in-flight pipelined refresh defers the
+    /// final snapshot exactly like a periodic one — the caller takes one
+    /// more step, which joins/installs the refresh, and retries; a v4
+    /// snapshot therefore never captures a half-installed projector, even
+    /// on the way out. With no checkpointing configured there is nothing
+    /// to persist and the drain completes immediately.
+    fn try_drain(&mut self) -> Result<bool> {
+        if self.ckpt_mgr.is_none() {
+            return Ok(true);
+        }
+        if self.last_ckpt_step == Some(self.step) {
+            return Ok(true); // the periodic save already covered this step
+        }
+        if self.sharded.opts().iter().any(|o| o.has_pending_refresh()) {
+            return Ok(false); // join the refresh first: one more step
+        }
+        self.ckpt_due = true;
+        self.maybe_checkpoint()?;
+        Ok(self.last_ckpt_step == Some(self.step))
     }
 
     /// `--resume`: before the first step, restore the newest valid
@@ -812,6 +932,24 @@ impl Trainer {
             }
 
             self.maybe_checkpoint()?;
+
+            // preemption-safe drain: checked once per completed step. The
+            // in-flight step above already finished; if a pipelined
+            // refresh is still pending, the loop takes exactly as many
+            // more steps as the install needs, then writes the final
+            // snapshot and exits cleanly (exit code 0) — the snapshot
+            // resumes elastically on whatever world the next allocation
+            // provides.
+            self.observe_stop_file();
+            if self.draining && self.try_drain()? {
+                self.report.drained = true;
+                crate::info!(
+                    "train",
+                    "drain complete at step {} — exiting cleanly",
+                    self.step
+                );
+                break;
+            }
         }
 
         let final_val = self.validate()?;

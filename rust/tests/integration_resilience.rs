@@ -18,7 +18,14 @@
 //!   uninterrupted run for every inner × SARA/GoLore × world 1/2, and a
 //!   mid-run rollback replay lands on the fault-free run's exact weights;
 //! * legacy (v1–v3) snapshots still resume with the documented cold
-//!   restore.
+//!   restore;
+//! * **elastic restore**: a v4 optimizer section written at world W
+//!   reshards bytewise onto any world W′ (the full (W, W′) ∈ {1,2,4}²
+//!   matrix), W→W′ resumed trajectories are byte-reproducible, the
+//!   preemption-safe drain exits cleanly with a final snapshot that
+//!   resumes bit-identically, and a seeded chaos soak replays mixed
+//!   fault schedules (with world-size changes across restarts) against
+//!   fault-free references.
 
 use sara::config::{InnerOpt, RunConfig, SelectorKind, WrapperKind};
 use sara::runtime::Engine;
@@ -383,4 +390,339 @@ fn legacy_v3_snapshot_resumes_with_cold_restore() {
     let res = t2.train(&mut Probes::default()).unwrap();
     assert_eq!(res.losses.len(), 10, "must resume at step 10");
     assert!(res.losses.iter().all(|l| l.is_finite()), "{:?}", res.losses);
+}
+
+fn assert_params_eq(a: &[sara::runtime::Tensor], b: &[sara::runtime::Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: param {i} diverged");
+    }
+}
+
+/// Elastic remap matrix, artifact-free: a v4 optimizer section written at
+/// world W reshards onto world W′ **bytewise** for every (W, W′) ∈
+/// {1,2,4}², and the imported state is the same *logical* state — one
+/// more step produces bit-identical deltas to a same-world restore.
+#[test]
+fn elastic_remap_matrix_is_bytewise_exact_for_all_world_pairs() {
+    use sara::config::OptimConfig;
+    use sara::dist::{ShardedState, Topology};
+    use sara::linalg::Matrix;
+    use sara::optim::ParamOptimizer;
+    use sara::rng::Pcg64;
+    use sara::runtime::Tensor;
+    use sara::selector::make_selector;
+    use sara::util::pool::WorkerPool;
+
+    let cfg = OptimConfig {
+        wrapper: WrapperKind::GaLore,
+        selector: SelectorKind::Sara,
+        rank: 4,
+        update_period: 3,
+        ..OptimConfig::default()
+    };
+    // uneven row counts -> uneven state sizes, so the LPT assignments at
+    // W = 1, 2, 4 genuinely differ and the remap moves blobs
+    let n = 9usize;
+    let rows = |i: usize| 8 + 4 * (i % 3);
+    let make_opts = || -> Vec<ParamOptimizer> {
+        (0..n)
+            .map(|i| {
+                ParamOptimizer::low_rank(
+                    rows(i),
+                    16,
+                    &cfg,
+                    make_selector(cfg.selector, 9, i),
+                )
+            })
+            .collect()
+    };
+    let pool = WorkerPool::new(2);
+    let mut rng = Pcg64::new(77);
+    let grads_at: Vec<Vec<Tensor>> = (0..8)
+        .map(|_| {
+            (0..n)
+                .map(|i| {
+                    let data: Vec<f32> = (0..rows(i) * 16)
+                        .map(|_| rng.next_normal() as f32)
+                        .collect();
+                    Tensor::from_vec(&[rows(i), 16], data)
+                })
+                .collect()
+        })
+        .collect();
+
+    for from_w in [1usize, 2, 4] {
+        // evolve real state at the producing world for 7 steps
+        let opts = make_opts();
+        let weights: Vec<usize> = opts.iter().map(|o| o.state_bytes()).collect();
+        let mut src = ShardedState::new(opts, Topology::new(from_w, &weights));
+        let mut grads = grads_at[..7].concat();
+        let mut deltas: Vec<Matrix> =
+            (0..n).map(|i| Matrix::zeros(rows(i), 16)).collect();
+        for step in 0..7 {
+            let batch = &mut grads[step * n..(step + 1) * n];
+            src.step_into(&pool, batch, 0.05, &mut deltas);
+        }
+        let blobs = src.save_opt_state();
+
+        for to_w in [1usize, 2, 4] {
+            let cold_opts = make_opts();
+            let cold_weights: Vec<usize> =
+                cold_opts.iter().map(|o| o.state_bytes()).collect();
+            let mut dst = ShardedState::new(
+                cold_opts,
+                Topology::new(to_w, &cold_weights),
+            );
+            dst.import_opt_state(&blobs, from_w)
+                .unwrap_or_else(|e| panic!("{from_w}->{to_w}: {e:#}"));
+            // bytewise: re-serializing the imported state reproduces the
+            // producing world's blobs exactly, parameter by parameter
+            let round = dst.save_opt_state();
+            for (p, (a, b)) in blobs.iter().zip(&round).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "{from_w}->{to_w}: param {p} blob changed across remap"
+                );
+            }
+            // logical: one more step on the imported state matches one
+            // more step on the producing state bit-for-bit
+            let mut src_next = grads_at[7].clone();
+            let mut dst_next = grads_at[7].clone();
+            let mut src_deltas: Vec<Matrix> =
+                (0..n).map(|i| Matrix::zeros(rows(i), 16)).collect();
+            let mut dst_deltas: Vec<Matrix> =
+                (0..n).map(|i| Matrix::zeros(rows(i), 16)).collect();
+            let mut src_replay = ShardedState::new(
+                make_opts(),
+                Topology::new(from_w, &weights),
+            );
+            src_replay.restore_opt_state(&blobs).unwrap();
+            src_replay.step_into(&pool, &mut src_next, 0.05, &mut src_deltas);
+            dst.step_into(&pool, &mut dst_next, 0.05, &mut dst_deltas);
+            for (p, (a, b)) in src_deltas.iter().zip(&dst_deltas).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "{from_w}->{to_w}: param {p} post-import step diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Trainer-level elastic resume: a v4 snapshot produced at W = 2 resumes
+/// on W′ ∈ {1, 4} — each W→W′ trajectory is byte-reproducible across
+/// repeated resumes — and the W′ = 2 resume stays bit-identical to the
+/// uninterrupted oracle (the existing W→W pin, unchanged by elasticity).
+#[test]
+fn elastic_resume_across_worlds_is_byte_reproducible() {
+    require_artifacts!();
+    let make = |steps: usize, world: usize| {
+        let mut cfg = resilient_cfg(steps);
+        cfg.workers = world;
+        cfg
+    };
+    // uninterrupted W=2 oracle
+    let engine = Engine::load("artifacts", "test").unwrap();
+    let mut oracle = Trainer::new(engine, make(20, 2)).unwrap();
+    oracle.train(&mut Probes::default()).unwrap();
+    let oracle_params = oracle.params.clone();
+
+    // v4 snapshot at step 10, world 2
+    let dir = fresh_dir("elastic_w2");
+    let mut first = make(10, 2);
+    first.resilience.ckpt_dir = dir.to_string_lossy().into_owned();
+    first.resilience.ckpt_every = 5;
+    let mut t1 = Trainer::new(oracle.into_engine(), first).unwrap();
+    t1.train(&mut Probes::default()).unwrap();
+    let mut engine = t1.into_engine();
+
+    let resume_on = |engine: Engine, world: usize| -> (Vec<f32>, Vec<sara::runtime::Tensor>, Engine) {
+        let mut cfg = make(20, world);
+        cfg.resilience.ckpt_dir = dir.to_string_lossy().into_owned();
+        // no periodic saves on the resumed legs: every resume in this test
+        // must restart from the same step-10 snapshot, not from a snapshot
+        // a previous leg wrote
+        cfg.resilience.ckpt_every = 0;
+        cfg.resilience.resume = true;
+        let mut t = Trainer::new(engine, cfg).unwrap();
+        let res = t.train(&mut Probes::default()).unwrap();
+        let params = t.params.clone();
+        (res.losses, params, t.into_engine())
+    };
+
+    for world in [1usize, 4] {
+        let (losses_a, params_a, e) = resume_on(engine, world);
+        let (losses_b, params_b, e2) = resume_on(e, world);
+        engine = e2;
+        assert_eq!(losses_a.len(), 10, "2->{world}: resume must start at step 10");
+        assert_eq!(
+            losses_a, losses_b,
+            "2->{world}: repeated elastic resumes took different trajectories"
+        );
+        assert_params_eq(&params_a, &params_b, &format!("2->{world} replay"));
+        // a different gradient-stream partition is a *different* (yet
+        // deterministic) trajectory — it must not silently equal the W=2 run
+        assert!(
+            params_a.iter().zip(&oracle_params).any(|(a, b)| a.data != b.data),
+            "2->{world}: cross-world resume unexpectedly reproduced the W=2 oracle"
+        );
+    }
+
+    // same-world resume: the original bit-identity pin still holds
+    let (losses, params, _) = resume_on(engine, 2);
+    assert_eq!(losses.len(), 10);
+    assert_params_eq(&params, &oracle_params, "2->2 resume vs oracle");
+}
+
+/// Preemption-safe drain: with a stop file present the run finishes its
+/// in-flight step, writes a final v4 snapshot, and returns cleanly with
+/// `drained` set; removing the stop file and resuming continues to the
+/// exact weights of an uninterrupted run.
+#[test]
+fn drain_on_stop_file_then_resume_is_bit_identical_to_uninterrupted() {
+    require_artifacts!();
+    let engine = Engine::load("artifacts", "test").unwrap();
+    let mut oracle = Trainer::new(engine, resilient_cfg(20)).unwrap();
+    oracle.train(&mut Probes::default()).unwrap();
+    let oracle_params = oracle.params.clone();
+
+    let dir = fresh_dir("drain");
+    let stop = dir.join("STOP");
+    std::fs::write(&stop, b"preempted\n").unwrap();
+    let mut cfg = resilient_cfg(20);
+    cfg.resilience.ckpt_dir = dir.to_string_lossy().into_owned();
+    cfg.resilience.ckpt_every = 5;
+    cfg.resilience.stop_file = stop.to_string_lossy().into_owned();
+    let mut t1 = Trainer::new(oracle.into_engine(), cfg).unwrap();
+    let res = t1.train(&mut Probes::default()).unwrap();
+    assert!(res.resilience.drained, "{:?}", res.resilience);
+    assert!(res.resilience.is_clean(), "a drained run is still clean");
+    let drained_at = res.losses.len();
+    assert!(
+        drained_at >= 1 && drained_at < 20,
+        "drain must stop early after >= 1 completed step, got {drained_at}"
+    );
+    let latest = Checkpoint::load_latest_valid(&dir).unwrap().unwrap();
+    assert_eq!(
+        latest.checkpoint.step, drained_at,
+        "the drain's final snapshot must cover the last completed step"
+    );
+    assert!(
+        latest.checkpoint.opt_state.is_some(),
+        "the drain snapshot must carry the v4 optimizer section"
+    );
+
+    // clear the stop file and resume to completion
+    std::fs::remove_file(&stop).unwrap();
+    let mut cfg = resilient_cfg(20);
+    cfg.resilience.ckpt_dir = dir.to_string_lossy().into_owned();
+    cfg.resilience.ckpt_every = 5;
+    cfg.resilience.resume = true;
+    let mut t2 = Trainer::new(t1.into_engine(), cfg).unwrap();
+    let res = t2.train(&mut Probes::default()).unwrap();
+    assert_eq!(res.losses.len(), 20 - drained_at);
+    assert!(!res.resilience.drained);
+    assert_params_eq(&t2.params, &oracle_params, "drain + resume vs oracle");
+}
+
+/// Chaos soak: for each seed, derive a fault schedule — a masked
+/// `panic_refresh`, a `nan_grad`, a torn or corrupted snapshot, an
+/// interruption shortly after the bad save, and a resume world — and
+/// replay it twice end to end. Claims pinned per seed:
+/// * both replays land on byte-identical final weights (the whole
+///   crash/fallback/resume chain, W→W′ included, is deterministic);
+/// * `load_latest_valid` skipped the torn/corrupt file (counted) and
+///   resumed from the previous good snapshot;
+/// * when the resume world equals the producing world, the chain lands on
+///   the *fault-free-checkpointing* reference run's exact weights — the
+///   masked refresh fault is bit-transparent and the one-shot `nan_grad`
+///   replays identically after the rollback to the snapshot.
+///
+/// The abort-based `crash_ckpt` fault kills the host process by design,
+/// so its end-to-end coverage lives in the tier-1 crash smoke
+/// (`scripts/tier1.sh`), which also exercises the elastic W=2 → W=1 CLI
+/// resume; this in-process soak covers the remaining fault families.
+/// Three seeds, at least one of which changes world size across the
+/// restart (the last seed always resumes on the other world).
+#[test]
+fn chaos_soak_replays_seeded_fault_schedules_deterministically() {
+    require_artifacts!();
+    use sara::rng::Pcg64;
+
+    let seeds = [3u64, 17, 88];
+    for (i, &seed) in seeds.iter().enumerate() {
+        let mut rng = Pcg64::new(seed);
+        let w0 = 1 + rng.next_bounded(2) as usize; // producing world: 1|2
+        let w1 = if i == 2 { 3 - w0 } else { w0 }; // last seed: W -> W'
+        let c = 1 + rng.next_bounded(2) as usize; // bad save index: 1|2
+        let bad = if rng.next_bounded(2) == 0 { "torn_ckpt" } else { "corrupt_ckpt" };
+        let p = rng.next_bounded(2); // panicking refresh launch
+        let k = 1 + rng.next_bounded(22) as usize; // poisoned step < 24
+        // interrupt after the bad save (step 5(c+1)) and before the next
+        let t_stop = 5 * (c + 1) + 1 + rng.next_bounded(3) as usize;
+        let s_resume = 5 * c; // newest good snapshot after the bad one is skipped
+        let name = format!(
+            "seed {seed}: w{w0}->w{w1} {bad}@{c} nan@{k} panic@{p} stop@{t_stop}"
+        );
+
+        let base = |steps: usize, world: usize| {
+            let mut cfg = resilient_cfg(steps);
+            cfg.workers = world;
+            cfg
+        };
+        // fault-free-checkpointing reference: same masked + nan faults,
+        // no snapshots, straight through 24 steps at the producing world
+        let mut ref_cfg = base(24, w0);
+        ref_cfg.fault.spec = format!("nan_grad@{k},panic_refresh@{p}");
+        let engine = Engine::load("artifacts", "test").unwrap();
+        let mut reference = Trainer::new(engine, ref_cfg).unwrap();
+        let ref_res = reference.train(&mut Probes::default()).unwrap();
+        assert_eq!(ref_res.resilience.skipped_steps, 1, "{name}: {:?}", ref_res.resilience);
+        let ref_params = reference.params.clone();
+
+        let chain = |engine: Engine, run: usize| -> (Vec<sara::runtime::Tensor>, Engine) {
+            let dir = fresh_dir(&format!("chaos_{seed}_{run}"));
+            let mut leg1 = base(t_stop, w0);
+            leg1.resilience.ckpt_dir = dir.to_string_lossy().into_owned();
+            leg1.resilience.ckpt_every = 5;
+            leg1.fault.spec =
+                format!("nan_grad@{k},panic_refresh@{p},{bad}@{c}");
+            let mut t1 = Trainer::new(engine, leg1).unwrap();
+            t1.train(&mut Probes::default())
+                .unwrap_or_else(|e| panic!("{name} leg1: {e:#}"));
+
+            let mut leg2 = base(24, w1);
+            leg2.resilience.ckpt_dir = dir.to_string_lossy().into_owned();
+            leg2.resilience.ckpt_every = 5;
+            leg2.resilience.resume = true;
+            leg2.fault.spec = format!("nan_grad@{k},panic_refresh@{p}");
+            let mut t2 = Trainer::new(t1.into_engine(), leg2).unwrap();
+            let res = t2
+                .train(&mut Probes::default())
+                .unwrap_or_else(|e| panic!("{name} leg2: {e:#}"));
+            assert_eq!(
+                res.losses.len(),
+                24 - s_resume,
+                "{name}: resume must restart from the last good snapshot"
+            );
+            assert!(
+                res.resilience.checkpoints_skipped >= 1,
+                "{name}: the {bad} file was never skipped ({:?})",
+                res.resilience
+            );
+            (t2.params.clone(), t2.into_engine())
+        };
+
+        let (params_a, e) = chain(reference.into_engine(), 0);
+        let (params_b, _) = chain(e, 1);
+        assert_params_eq(&params_a, &params_b, &format!("{name}: replay"));
+        if w1 == w0 {
+            assert_params_eq(
+                &params_a,
+                &ref_params,
+                &format!("{name}: chain vs fault-free-checkpointing reference"),
+            );
+        }
+    }
 }

@@ -881,6 +881,63 @@ fn prop_bucketed_allreduce_matches_average_oracle() {
     }
 }
 
+// ------------------------------------------------------------ elastic remap
+
+#[test]
+fn prop_remap_plan_is_a_bijection_onto_new_lpt_owners_and_inverts() {
+    // The elastic-restore contract, structurally: for random per-parameter
+    // state sizes and any W, W' in 1..=5, the remap plan (a) routes every
+    // parameter exactly once, keyed by index; (b) lands each blob on the
+    // rank the destination LPT assignment owns it under; (c) composed with
+    // the reverse plan is the identity on the serialized bytes.
+    use sara::dist::{RemapPlan, Topology};
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4500 + seed);
+        let n = rand_dims(&mut rng, 1, 24);
+        // zero-weight parameters allowed: a stateless param still routes
+        let weights: Vec<usize> =
+            (0..n).map(|_| rng.next_bounded(2048) as usize).collect();
+        let w_from = 1 + rng.next_bounded(5) as usize;
+        let w_to = 1 + rng.next_bounded(5) as usize;
+        let from = Topology::new(w_from, &weights);
+        let to = Topology::new(w_to, &weights);
+        let plan = RemapPlan::new(&from, &to);
+
+        assert_eq!(plan.params(), n, "seed {seed}");
+        for p in 0..n {
+            let r = plan.route(p);
+            assert_eq!(r.param, p, "seed {seed}: route keyed off-index");
+            assert_eq!(r.from_rank, from.owner_of(p), "seed {seed} param {p}");
+            assert_eq!(r.to_rank, to.owner_of(p), "seed {seed} param {p}");
+            assert!(r.to_rank < w_to, "seed {seed} param {p}: rank overflow");
+        }
+        // moves() is exactly the owner-changed subset (what a multi-process
+        // port would put on the wire)
+        let moved: Vec<usize> = plan.moves().map(|r| r.param).collect();
+        for p in 0..n {
+            assert_eq!(
+                moved.contains(&p),
+                from.owner_of(p) != to.owner_of(p),
+                "seed {seed} param {p}"
+            );
+        }
+
+        // remap(W->W') then remap(W'->W) is the identity on bytes
+        let blobs: Vec<Vec<u8>> = weights
+            .iter()
+            .map(|&w| {
+                (0..w.min(64) + 1)
+                    .map(|_| rng.next_bounded(256) as u8)
+                    .collect()
+            })
+            .collect();
+        let routed = plan.apply(&blobs);
+        assert_eq!(routed, blobs, "seed {seed}: routing must preserve bytes");
+        let back = RemapPlan::between(w_to, w_from, &weights).apply(&routed);
+        assert_eq!(back, blobs, "seed {seed}: remap . reverse-remap != id");
+    }
+}
+
 // ------------------------------------------------------------------ util
 
 #[test]

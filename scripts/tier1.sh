@@ -18,6 +18,11 @@
 #    resumed `final:` line to match an uninterrupted run bit-for-bit —
 #    for the stateful GaLore+Adam+SARA stack at world 1 and 2 (v4
 #    optimizer-state resume), plus the legacy stateless MSGD config.
+#    Two extra legs cover elastic recovery: a W=2 crash resumed twice at
+#    --dist-workers 1 (the resharded W→W′ trajectory must be
+#    byte-reproducible), and a corrupt_ckpt run whose bit-rotted final
+#    snapshot is CRC-detected at resume, falling back to the previous
+#    good one and replaying to the identical `final:` line.
 # 5. serving smoke (artifact-free — the forward pass is native): serve
 #    concurrent seeded requests through the continuous-batching
 #    scheduler, require two runs and a checkpoint round-trip to emit
@@ -162,6 +167,68 @@ if [ -f rust/artifacts/test.train.hlo.txt ]; then
   # cold restore) pinned by the unit/integration suites above
   crash_smoke_leg "legacy full-rank MSGD" \
     "$REPO_ROOT/configs/crash-smoke.toml"
+
+  echo
+  echo "== elastic crash smoke: crash at W=2, resume at W'=1 =="
+  # A W→W′ restore repartitions the gradient streams, so there is no W=2
+  # oracle to match bit-for-bit; the pin is byte-reproducibility — two
+  # independent W′=1 resumes from identical copies of the crashed
+  # snapshot dir must print the same `final:` line.
+  ck_elastic=$(mktemp -d /tmp/sara_crash_elastic.XXXXXX)
+  set +e
+  (cd rust && SARA_FAULT=crash_ckpt@1 cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke-stateful.toml" \
+     --dist-workers 2 --ckpt-dir "$ck_elastic" \
+     > /tmp/sara_elastic_interrupted.log 2>&1)
+  rc=$?
+  set -e
+  if [ "$rc" -eq 0 ]; then
+    echo "FAIL: crash_ckpt fault did not kill the elastic-leg W=2 run"
+    exit 1
+  fi
+  for leg in a b; do
+    rm -rf "$ck_elastic.$leg"
+    cp -a "$ck_elastic" "$ck_elastic.$leg"
+    (cd rust && cargo run --release --quiet -- train \
+       --config "$REPO_ROOT/configs/crash-smoke-stateful.toml" \
+       --dist-workers 1 --ckpt-dir "$ck_elastic.$leg" --resume \
+       | tee "/tmp/sara_elastic_resume_$leg.log")
+  done
+  a_final=$(grep '^final:' /tmp/sara_elastic_resume_a.log || true)
+  b_final=$(grep '^final:' /tmp/sara_elastic_resume_b.log || true)
+  if [ -z "$a_final" ] || [ "$a_final" != "$b_final" ]; then
+    echo "FAIL: W=2 -> W'=1 elastic resumes are not byte-reproducible"
+    echo "  a: $a_final"
+    echo "  b: $b_final"
+    exit 1
+  fi
+  echo "elastic resume reproducibility OK (W=2 -> W'=1): $a_final"
+  rm -rf "$ck_elastic" "$ck_elastic.a" "$ck_elastic.b"
+
+  echo
+  echo "== corrupt-snapshot smoke: bit-rot detected, fallback replay =="
+  # corrupt_ckpt@3 flips one seeded bit in the final (step-40) snapshot
+  # *after* its atomic write reports success — invisible to the writer,
+  # CRC-detected at load. The run completes normally; the resume must
+  # skip the rotten file, fall back to step 30, replay the last 10
+  # steps, and land on the same `final:` line (W→W, so bit-for-bit).
+  ck_rot=$(mktemp -d /tmp/sara_crash_rot.XXXXXX)
+  (cd rust && SARA_FAULT=corrupt_ckpt@3 cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke-stateful.toml" \
+     --ckpt-dir "$ck_rot" | tee /tmp/sara_rot_full.log)
+  (cd rust && cargo run --release --quiet -- train \
+     --config "$REPO_ROOT/configs/crash-smoke-stateful.toml" \
+     --ckpt-dir "$ck_rot" --resume | tee /tmp/sara_rot_resumed.log)
+  rot_final=$(grep '^final:' /tmp/sara_rot_full.log || true)
+  rot_resumed=$(grep '^final:' /tmp/sara_rot_resumed.log || true)
+  if [ -z "$rot_final" ] || [ "$rot_final" != "$rot_resumed" ]; then
+    echo "FAIL: corrupt-snapshot fallback replay diverged"
+    echo "  full:    $rot_final"
+    echo "  resumed: $rot_resumed"
+    exit 1
+  fi
+  echo "corrupt-snapshot fallback OK: $rot_resumed"
+  rm -rf "$ck_rot"
 else
   echo "(no PJRT artifacts; skipped the crash-recovery smoke)"
 fi
@@ -187,8 +254,8 @@ serve_dir=$(mktemp -d /tmp/sara_serve_smoke.XXXXXX)
    --ckpt "$serve_dir/serve.ckpt" \
    > /tmp/sara_serve_c.log)
 for leg in b c; do
-  if ! diff <(grep -E '^(request|shed:)' /tmp/sara_serve_a.log) \
-            <(grep -E '^(request|shed:)' "/tmp/sara_serve_$leg.log"); then
+  if ! diff <(grep -E '^(request|shed:|timed-out:)' /tmp/sara_serve_a.log) \
+            <(grep -E '^(request|shed:|timed-out:)' "/tmp/sara_serve_$leg.log"); then
     echo "FAIL: serve run '$leg' diverged from run 'a' (determinism break)"
     exit 1
   fi
